@@ -1,0 +1,74 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs jnp oracle vs numpy.
+
+interpret-mode timings do NOT reflect TPU performance (the kernel body
+runs in Python); the benchmark validates plumbing + records the work
+shapes that the BlockSpecs tile for v5e."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    try:
+        out.block_until_ready()
+    except AttributeError:
+        pass
+    return (time.perf_counter() - t0) / reps
+
+
+def run(csv=True):
+    rng = np.random.default_rng(0)
+    rows = []
+    for n in (4_096, 65_536):
+        a = rng.integers(0, 1_000_000, size=n).astype(np.int32)
+        b = np.sort(rng.integers(0, 1_000_000, size=n).astype(np.int32))
+        t_kernel = _time(lambda: np.asarray(ops.member(a, b)))
+        t_ref = _time(lambda: np.asarray(ref.sorted_member_ref(a, b)))
+        t_np = _time(lambda: np.isin(a, b))
+        rows.append({
+            "kernel": "sorted_member", "n": n,
+            "pallas_interpret_ms": round(1e3 * t_kernel, 2),
+            "jnp_ref_ms": round(1e3 * t_ref, 2),
+            "numpy_ms": round(1e3 * t_np, 2),
+        })
+
+        vals = rng.integers(0, 1000, size=n // 16).astype(np.int32)
+        cnts = rng.integers(1, 32, size=n // 16).astype(np.int32)
+        total = int(cnts.sum())
+        t_kernel = _time(lambda: np.asarray(ops.expand_rle(vals, cnts, total)))
+        t_np = _time(lambda: np.repeat(vals, cnts))
+        rows.append({
+            "kernel": "rle_expand", "n": total,
+            "pallas_interpret_ms": round(1e3 * t_kernel, 2),
+            "jnp_ref_ms": float("nan"),
+            "numpy_ms": round(1e3 * t_np, 2),
+        })
+
+        l = rng.integers(0, 1_000_000, size=n).astype(np.int32)
+        t_kernel = _time(lambda: np.asarray(ops.group_spans(l, b)[0]))
+        t_ref = _time(lambda: np.asarray(ref.join_bounds_ref(l, b)[0]))
+        rows.append({
+            "kernel": "join_bounds", "n": n,
+            "pallas_interpret_ms": round(1e3 * t_kernel, 2),
+            "jnp_ref_ms": round(1e3 * t_ref, 2),
+            "numpy_ms": float("nan"),
+        })
+    if csv:
+        cols = list(rows[0].keys())
+        print(",".join(cols))
+        for r in rows:
+            print(",".join(str(r[c]) for c in cols))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

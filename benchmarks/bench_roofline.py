@@ -1,0 +1,26 @@
+"""Roofline table: three terms per (arch x shape) from the dry-run
+artifacts (run ``python -m repro.launch.dryrun`` first)."""
+
+from __future__ import annotations
+
+import os
+
+from repro.roofline.analysis import format_table, full_table
+
+
+def run(csv=True, directory="experiments/dryrun"):
+    if not os.path.isdir(directory):
+        print(f"(no dry-run artifacts in {directory}; run "
+              f"`python -m repro.launch.dryrun` first)")
+        return []
+    rows = full_table(directory, mesh="single")
+    if not rows:
+        print("(no OK single-mesh records yet)")
+        return []
+    if csv:
+        print(format_table(rows))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

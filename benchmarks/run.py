@@ -1,0 +1,52 @@
+"""Benchmark harness: one module per paper table + system benchmarks.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Prints one CSV block per benchmark.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from . import (
+        bench_dedup,
+        bench_kernels,
+        bench_representation,
+        bench_roofline,
+        bench_runtime,
+    )
+
+    benches = {
+        "representation": bench_representation.run,  # paper Table 1/3
+        "runtime": bench_runtime.run,                # paper Table 2/4
+        "dedup": bench_dedup.run,                    # beyond-paper ablation
+        "kernels": bench_kernels.run,                # Pallas microbench
+        "roofline": bench_roofline.run,              # deliverable (g)
+    }
+    failures = 0
+    for name, fn in benches.items():
+        if args.only and name != args.only:
+            continue
+        print(f"\n=== bench:{name} ===", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+            print(f"=== bench:{name} done in {time.time()-t0:.1f}s ===")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"=== bench:{name} FAILED: {type(e).__name__}: {e} ===")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

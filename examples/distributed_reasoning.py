@@ -1,0 +1,46 @@
+"""Distributed datalog materialisation under shard_map.
+
+    PYTHONPATH=src python examples/distributed_reasoning.py
+
+Runs the hash-partitioned semi-naive engine on the local device mesh and
+checks the result against the flat oracle.  On a pod the identical code
+runs over the (data=16) axis of the production mesh — the dry-run lowers
+exactly this round function at 256/512 devices.
+"""
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+from repro.core import flat_seminaive
+from repro.core.distributed import DistributedEngine
+from repro.core.generators import lubm_like
+
+
+def main():
+    program, dataset, _ = lubm_like(n_dept=8, n_students=120, n_courses=16)
+    # the distributed engine handles <=2-atom bodies; restrict the program
+    rules = [r for r in program if len(r.body) <= 2]
+    program = type(program)(rules)
+
+    n_dev = len(jax.devices())
+    mesh = Mesh(np.asarray(jax.devices()).reshape(n_dev), ("data",))
+    print(f"mesh: {n_dev} device(s) on axis 'data'")
+
+    eng = DistributedEngine(program, mesh, capacity=1 << 13)
+    result = eng.materialise(dataset)
+    print(f"fixpoint after {eng.rounds} rounds")
+
+    expected = flat_seminaive(program, dataset)
+    for pred, rows in sorted(expected.items()):
+        got = result.get(pred, np.zeros((0, rows.shape[1])))
+        ok = {tuple(r) for r in got} == {tuple(r) for r in rows}
+        print(f"    {pred:<20} {got.shape[0]:6d} facts  "
+              f"{'OK' if ok else 'MISMATCH'}")
+        assert ok
+    print("distributed result == flat oracle")
+
+
+if __name__ == "__main__":
+    main()

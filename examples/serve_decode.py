@@ -1,0 +1,33 @@
+"""Serve a small model with batched requests (prefill + greedy decode).
+
+    PYTHONPATH=src python examples/serve_decode.py [--arch zamba2-1.2b]
+
+Exercises the KV-cache / SSM-state decode path — the same ``serve_step``
+the decode_32k / long_500k dry-run cells lower on the production mesh.
+"""
+
+import argparse
+
+from repro.launch import serve as serve_driver
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+    raise SystemExit(
+        serve_driver.main(
+            [
+                "--arch", args.arch,
+                "--smoke",
+                "--batch", str(args.batch),
+                "--prompt-len", "16",
+                "--gen-len", "16",
+            ]
+        )
+    )
+
+
+if __name__ == "__main__":
+    main()

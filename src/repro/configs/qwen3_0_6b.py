@@ -1,0 +1,21 @@
+"""qwen3-0.6b [dense]: 28L d_model=1024 16H (GQA kv=8) d_ff=3072
+vocab=151936 — qk_norm, GQA.  [hf:Qwen/Qwen3-8B; hf]"""
+
+from .base import ModelConfig, register, smoke_of
+
+CONFIG = ModelConfig(
+    name="qwen3-0.6b",
+    family="dense",
+    n_layers=28,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=3072,
+    vocab_size=151_936,
+    d_head=128,  # qwen3 uses 128-wide heads
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+)
+
+register(CONFIG, smoke_of(CONFIG, qk_norm=True))

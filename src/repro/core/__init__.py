@@ -1,0 +1,32 @@
+"""CompMat-JAX core: datalog materialisation over compressed RDF KBs.
+
+Implements Hu, Urbani, Motik, Horrocks — "Datalog Reasoning over Compressed
+RDF Knowledge Bases" (CIKM 2019): meta-facts, structure sharing via the
+mu-mapping, compressed semi-naive evaluation (Algorithms 1-6), plus a flat
+reference engine and a shard_map-distributed variant.
+"""
+
+from .columns import ColumnStore, rle_encode
+from .datalog import Atom, Program, Rule, parse_program, vertical_partition
+from .engine import CMatEngine, MaterialisationStats
+from .flat import FlatEngine, flat_seminaive
+from .metafacts import FactStore, MetaFact, flat_repr_size
+from .terms import Dictionary
+
+__all__ = [
+    "Atom",
+    "CMatEngine",
+    "ColumnStore",
+    "Dictionary",
+    "FactStore",
+    "FlatEngine",
+    "MaterialisationStats",
+    "MetaFact",
+    "Program",
+    "Rule",
+    "flat_repr_size",
+    "flat_seminaive",
+    "parse_program",
+    "rle_encode",
+    "vertical_partition",
+]

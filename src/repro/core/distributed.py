@@ -1,0 +1,487 @@
+"""Distributed semi-naive materialisation under ``shard_map``.
+
+The paper's engine is single-node.  To make the technique deployable at
+cluster scale we add the standard distributed-datalog construction
+(hash-partition + exchange), mapped onto JAX-native collectives:
+
+* every relation is **hash-partitioned on its first argument** across the
+  ``data`` axis of the device mesh;
+* each round evaluates rules locally on each shard (naive iteration; the
+  semi-naive delta restriction is a host-path feature — the distributed
+  variant trades redundant local work for static shapes);
+* derivations whose head key hashes to another shard are exchanged with a
+  single ``all_to_all`` per round (this is the only communication);
+* termination is detected with an ``all_reduce`` OR of "any new facts".
+
+Facts live in fixed-capacity padded buffers (JAX static shapes): a
+``(capacity, arity)`` int32 array plus a validity count; empty slots hold
+``EMPTY = -1``.  Join/dedup primitives are the jnp twins of the numpy host
+path in :mod:`repro.core.util` and are what the Pallas kernels accelerate.
+
+The same code lowers on the 1-device CPU mesh (tests), the 256-chip
+single-pod mesh, and the 512-chip multi-pod mesh (dry-run).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from .datalog import Program
+
+EMPTY = jnp.int32(-1)
+
+__all__ = ["DistributedEngine", "ShardedRelation", "local_round"]
+
+
+@dataclass
+class ShardedRelation:
+    """Padded fact buffer: rows (capacity, arity) int32, count scalar."""
+
+    rows: jax.Array
+    count: jax.Array  # int32 scalar (per shard under shard_map)
+
+
+def _hash_shard(keys: jax.Array, n_shards: int) -> jax.Array:
+    """Multiplicative hash -> shard id (stable across rounds)."""
+    h = (keys.astype(jnp.uint32) * jnp.uint32(2654435761)) >> jnp.uint32(16)
+    return (h % jnp.uint32(n_shards)).astype(jnp.int32)
+
+
+# --------------------------------------------------------------------- #
+# jnp primitives (device twins of core.util; kernels/ accelerates these)
+# --------------------------------------------------------------------- #
+def sorted_member_jnp(a: jax.Array, b_sorted: jax.Array) -> jax.Array:
+    """Membership of a[i] in sorted b (EMPTY-padded b allowed at the end)."""
+    idx = jnp.searchsorted(b_sorted, a)
+    idx = jnp.minimum(idx, b_sorted.shape[0] - 1)
+    return b_sorted[idx] == a
+
+
+def sorted_member_kernel(a: jax.Array, b_sorted: jax.Array) -> jax.Array:
+    """Pallas-kernel membership (``repro.kernels.sorted_member``) — the
+    TPU device path for the dedup anti-join.  interpret=True here (CPU
+    container); on TPU pass interpret=False through ``ops.member``."""
+    from ..kernels import ops
+
+    return ops.member(a, b_sorted, interpret=True)
+
+
+#: x64 is disabled by default in JAX, so packed fact keys live in int32:
+#: binary facts use 15/16-bit halves, constraining the *distributed* path
+#: to dictionaries of < 32768 constants (the host engine keeps full int64).
+MAX_DIST_CONST = 1 << 15
+BIG = jnp.int32(np.iinfo(np.int32).max)
+
+
+def pack_pairs(rows: jax.Array) -> jax.Array:
+    """Pack (n, 2) int32 rows into sortable int32 keys; (n, 1) passes through."""
+    if rows.shape[1] == 1:
+        return rows[:, 0]
+    hi = rows[:, 0]
+    lo = rows[:, 1]
+    return (hi << 16) | (lo & 0xFFFF)
+
+
+def unpack_pairs(keys: jax.Array, arity: int) -> jax.Array:
+    if arity == 1:
+        return keys[:, None]
+    hi = keys >> 16
+    lo = jnp.bitwise_and(keys, 0xFFFF)
+    return jnp.stack([hi, lo], axis=1)
+
+
+def dedup_against(
+    new_keys: jax.Array, new_valid: jax.Array, old_keys_sorted: jax.Array,
+    member_fn=sorted_member_jnp,
+) -> jax.Array:
+    """Valid-mask of new facts that are not already present in old."""
+    member = member_fn(new_keys, old_keys_sorted)
+    # first-occurrence within new: sort, compare neighbours, scatter back
+    masked = jnp.where(new_valid, new_keys, BIG)
+    order = jnp.argsort(masked)
+    ks = masked[order]
+    first_sorted = jnp.concatenate(
+        [jnp.ones((1,), bool), ks[1:] != ks[:-1]]
+    )
+    first = jnp.zeros_like(first_sorted).at[order].set(first_sorted)
+    return new_valid & first & (~member)
+
+
+def join_on_key(
+    l_keys: jax.Array,
+    l_valid: jax.Array,
+    l_payload: jax.Array,
+    r_keys: jax.Array,
+    r_valid: jax.Array,
+    r_payload: jax.Array,
+    out_capacity: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Equi-join with bounded output (static shapes).
+
+    Returns (left payload, right payload, valid) for up to ``out_capacity``
+    matching pairs, enumerated as (left row) x (matching right rows).
+    """
+    r_sort_key = jnp.where(r_valid, r_keys, BIG)
+    order = jnp.argsort(r_sort_key)
+    r_keys_s = r_sort_key[order]
+    r_payload_s = r_payload[order]
+
+    lo = jnp.searchsorted(r_keys_s, jnp.where(l_valid, l_keys, BIG - 1), side="left")
+    hi = jnp.searchsorted(r_keys_s, jnp.where(l_valid, l_keys, BIG - 1), side="right")
+    counts = jnp.where(l_valid, hi - lo, 0)
+    offsets = jnp.cumsum(counts) - counts
+    total = jnp.sum(counts)
+
+    out_idx = jnp.arange(out_capacity)
+    # which left row does output slot i belong to?
+    l_of = jnp.searchsorted(offsets + counts, out_idx, side="right")
+    l_of = jnp.minimum(l_of, l_keys.shape[0] - 1)
+    within = out_idx - offsets[l_of]
+    r_of = jnp.minimum(lo[l_of] + within, r_keys.shape[0] - 1)
+    valid = out_idx < total
+    return l_payload[l_of], r_payload_s[r_of], valid
+
+
+# --------------------------------------------------------------------- #
+# the distributed engine
+# --------------------------------------------------------------------- #
+class DistributedEngine:
+    """Hash-partitioned semi-naive materialisation for binary datalog.
+
+    Supports the rule shapes that cover RDF/OWL-RL style programs after
+    vertical partitioning (arity <= 2): single-atom rules and two-atom
+    chain joins ``A(x,y), B(y,z) -> H(x,z)`` (plus their unary variants).
+    The host drives rounds; each round is one jitted ``shard_map`` call.
+    """
+
+    def __init__(
+        self,
+        program: Program,
+        mesh: Mesh,
+        axis: str = "data",
+        capacity: int = 1 << 14,
+        join_capacity: int | None = None,
+        use_pallas_kernels: bool = False,
+    ):
+        self.program = program
+        self.mesh = mesh
+        self.axis = axis
+        self.capacity = capacity
+        self.join_capacity = join_capacity or capacity
+        self.n_shards = mesh.shape[axis]
+        self._compiled_round = None
+        # TPU device path: dedup membership through the Pallas kernel
+        self._member_fn = (
+            sorted_member_kernel if use_pallas_kernels else sorted_member_jnp
+        )
+
+    # -------------------------------------------------------------- #
+    def shard_dataset(self, dataset: dict[str, np.ndarray]) -> dict:
+        """Partition a host dataset into per-shard padded buffers, laid out
+        as global arrays sharded on the leading (shard) axis."""
+        n, cap = self.n_shards, self.capacity
+        out = {}
+        for pred, rows in dataset.items():
+            rows = np.asarray(rows, dtype=np.int32)
+            if rows.ndim == 1:
+                rows = rows.reshape(-1, 1)
+            arity = rows.shape[1]
+            shard = np.asarray(
+                (rows[:, 0].astype(np.uint32) * np.uint32(2654435761)) >> np.uint32(16)
+            ) % np.uint32(n)
+            buf = np.full((n, cap, arity), -1, dtype=np.int32)
+            cnt = np.zeros((n,), dtype=np.int32)
+            for s in range(n):
+                mine = rows[shard == s]
+                if mine.shape[0] > cap:
+                    raise ValueError(f"capacity {cap} too small for shard {s}")
+                buf[s, : mine.shape[0]] = mine
+                cnt[s] = mine.shape[0]
+            out[pred] = (buf, cnt)
+        return out
+
+    # -------------------------------------------------------------- #
+    def _round_fn(self, preds: tuple[str, ...], arities: dict[str, int]):
+        """Build the jitted one-round function over fixed predicate order."""
+        program, axis, n_shards = self.program, self.axis, self.n_shards
+        cap, jcap = self.capacity, self.join_capacity
+
+        def body(*flat):
+            # flat: rows_0, cnt_0, rows_1, cnt_1, ...  — shard_map hands us
+            # blocks with a leading axis of size 1; squeeze it here and
+            # restore it on the way out.
+            rels = {}
+            for k, pred in enumerate(preds):
+                rels[pred] = ShardedRelation(flat[2 * k][0], flat[2 * k + 1][0])
+
+            derived: dict[str, list[tuple[jax.Array, jax.Array]]] = {}
+            total_dropped = jnp.zeros((), jnp.int32)
+
+            def emit(pred, rows, valid):
+                derived.setdefault(pred, []).append((rows, valid))
+
+            for rule in program:
+                d = self._eval_rule_local(rule, rels, emit, arities)
+                total_dropped = total_dropped + d
+
+            # merge + rekey + exchange + dedup per head predicate
+            new_flat = []
+            any_new = jnp.zeros((), dtype=jnp.int32)
+            for pred in preds:
+                rel = rels[pred]
+                arity = arities[pred]
+                blocks = derived.get(pred, [])
+                if not blocks:
+                    new_flat.extend([rel.rows[None], rel.count[None]])
+                    continue
+                rows = jnp.concatenate([b[0] for b in blocks])
+                valid = jnp.concatenate([b[1] for b in blocks])
+                rows = jnp.where(valid[:, None], rows, EMPTY)
+
+                # exchange: route each row to the shard owning its key
+                rows, valid, d = self._exchange(rows, valid, n_shards)
+                total_dropped = total_dropped + d
+
+                # dedup against local store
+                keys = pack_pairs(rows)
+                old_keys = pack_pairs(rel.rows)
+                slot_valid = jnp.arange(cap) < rel.count
+                old_sorted = jnp.sort(jnp.where(slot_valid, old_keys, BIG))
+                fresh = dedup_against(keys, valid, old_sorted,
+                                      member_fn=self._member_fn)
+
+                # append fresh rows into the padded buffer
+                n_fresh = jnp.sum(fresh.astype(jnp.int32))
+                dest = rel.count + jnp.cumsum(fresh.astype(jnp.int32)) - 1
+                dest = jnp.where(fresh, dest, cap - 1)  # park invalid writes
+                new_rows = rel.rows.at[dest].set(
+                    jnp.where(fresh[:, None], rows, rel.rows[dest])
+                )
+                new_count = jnp.minimum(rel.count + n_fresh, cap)
+                rels[pred] = ShardedRelation(new_rows, new_count)
+                any_new = any_new + n_fresh
+                new_flat.extend([new_rows[None], new_count[None]])
+
+            total_new = jax.lax.psum(any_new, axis)
+            total_dropped = jax.lax.psum(total_dropped, axis)
+            return tuple(new_flat) + (total_new, total_dropped)
+
+        in_specs = []
+        for pred in preds:
+            in_specs.extend([P(axis, None, None), P(axis)])
+        out_specs = tuple(in_specs) + (P(), P())
+
+        shmapped = jax.shard_map(
+            body,
+            mesh=self.mesh,
+            in_specs=tuple(in_specs),
+            out_specs=out_specs,
+            # pallas_call outputs have no varying-axes metadata; disable
+            # the vma check so the kernel dedup path can run under
+            # shard_map (the specs above still pin the layouts)
+            check_vma=False,
+        )
+        return jax.jit(shmapped)
+
+    # -------------------------------------------------------------- #
+    def _exchange(self, rows, valid, n_shards, keys=None):
+        """Route rows to ``hash(key)`` owner shards with one all_to_all.
+
+        ``keys`` defaults to the first column (relation-ownership routing
+        for derived facts); joins pass the join-key column so both sides
+        are co-partitioned before the local merge (classic distributed
+        semi-naive re-keying).  Returns (rows, valid, n_dropped): rows
+        past the per-bucket capacity are dropped and *counted* so the
+        host can fail loudly instead of silently under-deriving.
+        """
+        if keys is None:
+            keys = rows[:, 0]
+        if n_shards == 1:
+            return rows, valid, jnp.zeros((), jnp.int32)
+        cap = rows.shape[0]
+        per = max(cap // n_shards, 1)
+        shard_of = jnp.where(valid, _hash_shard(keys, n_shards), n_shards)
+        # stable sort by destination; bucket i occupies slots [i*per,(i+1)*per)
+        order = jnp.argsort(shard_of, stable=True)
+        rows_s = rows[order]
+        shard_s = shard_of[order]
+        idx = jnp.arange(cap)
+        # position within bucket (prefix count of same destination)
+        pos_in_bucket = idx - jnp.searchsorted(shard_s, shard_s, side="left")
+        ok = (pos_in_bucket < per) & (shard_s < n_shards)
+        dropped = jnp.sum(((~ok) & (shard_s < n_shards)).astype(jnp.int32))
+        slot = jnp.where(ok, shard_s * per + pos_in_bucket, n_shards * per)
+        buckets = jnp.full(
+            (n_shards * per + 1, rows.shape[1]), EMPTY, dtype=rows.dtype
+        )
+        buckets = buckets.at[slot].set(
+            jnp.where(ok[:, None], rows_s, EMPTY)
+        )[: n_shards * per]
+        buckets = buckets.reshape(n_shards, per, rows.shape[1])
+        exchanged = jax.lax.all_to_all(
+            buckets, self.axis, split_axis=0, concat_axis=0, tiled=False
+        )
+        exchanged = exchanged.reshape(n_shards * per, rows.shape[1])
+        valid_out = exchanged[:, 0] != EMPTY
+        return exchanged, valid_out, dropped
+
+    # -------------------------------------------------------------- #
+    def _eval_rule_local(self, rule, rels, emit, arities):
+        """Evaluate one rule on the local shard; returns dropped-row count
+        from the join-key re-partitioning (0 when no exchange happens)."""
+        body = rule.body
+        head = rule.head
+        cap = self.capacity
+        zero = jnp.zeros((), jnp.int32)
+
+        def rows_valid(pred):
+            rel = rels.get(pred)
+            if rel is None:
+                return None
+            v = jnp.arange(rel.rows.shape[0]) < rel.count
+            return rel.rows, v
+
+        if len(body) == 1:
+            src = rows_valid(body[0].predicate)
+            if src is None:
+                return zero
+            rows, valid = src
+            rows, valid = _apply_atom_constraints(body[0], rows, valid)
+            out = _project_head(body[0].variables(), rows, head)
+            if out is not None:
+                emit(head.predicate, out, valid)
+            return zero
+        elif len(body) == 2:
+            a, b = body
+            sa, sb = rows_valid(a.predicate), rows_valid(b.predicate)
+            if sa is None or sb is None:
+                return zero
+            ra, va = _apply_atom_constraints(a, *sa)
+            rb, vb = _apply_atom_constraints(b, *sb)
+            va_vars, vb_vars = a.variables(), b.variables()
+            common = [v for v in va_vars if v in vb_vars]
+            if len(common) != 1:
+                raise NotImplementedError(
+                    "distributed engine supports single-key two-atom joins"
+                )
+            key = common[0]
+            # re-partition both sides on the join key: facts live on the
+            # shard of their *first* argument, which is generally not the
+            # join variable — without this exchange only same-shard pairs
+            # would ever join (caught by the 4-shard integration test)
+            dropped = jnp.zeros((), jnp.int32)
+            ra = jnp.where(va[:, None], ra, EMPTY)
+            rb = jnp.where(vb[:, None], rb, EMPTY)
+            ra, va, d1 = self._exchange(
+                ra, va, self.n_shards, keys=ra[:, va_vars.index(key)]
+            )
+            rb, vb, d2 = self._exchange(
+                rb, vb, self.n_shards, keys=rb[:, vb_vars.index(key)]
+            )
+            dropped = dropped + d1 + d2
+            ka = ra[:, va_vars.index(key)]
+            kb = rb[:, vb_vars.index(key)]
+            lpay, rpay, valid = join_on_key(
+                ka, va, ra, kb, vb, rb, self.join_capacity
+            )
+            var_cols = {}
+            for i, v in enumerate(va_vars):
+                var_cols[v] = lpay[:, i]
+            for i, v in enumerate(vb_vars):
+                var_cols.setdefault(v, rpay[:, i])
+            cols = []
+            for t in head.terms:
+                if isinstance(t, int):
+                    cols.append(jnp.full((self.join_capacity,), t, jnp.int32))
+                else:
+                    cols.append(var_cols[t])
+            emit(head.predicate, jnp.stack(cols, axis=1), valid)
+            return dropped
+        else:
+            raise NotImplementedError(
+                "distributed engine supports bodies of <= 2 atoms"
+            )
+
+    # -------------------------------------------------------------- #
+    def materialise(self, dataset: dict[str, np.ndarray], max_rounds: int = 64):
+        """Run rounds to fixpoint; returns per-predicate host arrays."""
+        preds = tuple(
+            sorted(set(dataset) | self.program.predicates())
+        )
+        arities = {}
+        for p in preds:
+            if p in dataset:
+                r = np.asarray(dataset[p])
+                arities[p] = 1 if r.ndim == 1 else r.shape[1]
+        for rule in self.program:
+            for atom in (rule.head, *rule.body):
+                arities.setdefault(atom.predicate, atom.arity)
+        full = {
+            p: dataset.get(p, np.zeros((0, arities[p]), dtype=np.int32))
+            for p in preds
+        }
+        sharded = self.shard_dataset(full)
+        flat = []
+        for p in preds:
+            buf, cnt = sharded[p]
+            flat.extend([jnp.asarray(buf), jnp.asarray(cnt)])
+
+        round_fn = self._round_fn(preds, arities)
+        rounds = 0
+        for _ in range(max_rounds):
+            out = round_fn(*flat)
+            flat, total_new, dropped = list(out[:-2]), out[-2], out[-1]
+            rounds += 1
+            if int(dropped) > 0:
+                raise RuntimeError(
+                    f"exchange overflow: {int(dropped)} rows dropped — "
+                    f"increase capacity/join_capacity (skewed join keys)"
+                )
+            if int(total_new) == 0:
+                break
+
+        result = {}
+        for k, p in enumerate(preds):
+            buf = np.asarray(flat[2 * k])
+            cnt = np.asarray(flat[2 * k + 1])
+            rows = np.concatenate(
+                [buf[s, : cnt[s]] for s in range(self.n_shards)]
+            )
+            result[p] = np.unique(rows.astype(np.int64), axis=0)
+        self.rounds = rounds
+        return result
+
+
+def _apply_atom_constraints(atom, rows, valid):
+    """Constants / repeated variables as validity-mask filters."""
+    vars_ = atom.variables()
+    first = {v: atom.terms.index(v) for v in vars_}
+    for pos, t in enumerate(atom.terms):
+        if isinstance(t, int):
+            valid = valid & (rows[:, pos] == t)
+        elif pos != first[t]:
+            valid = valid & (rows[:, pos] == rows[:, first[t]])
+    cols = [rows[:, first[v]] for v in vars_]
+    return jnp.stack(cols, axis=1), valid
+
+
+def _project_head(body_vars, rows, head):
+    cols = []
+    for t in head.terms:
+        if isinstance(t, int):
+            cols.append(jnp.full((rows.shape[0],), t, dtype=rows.dtype))
+        elif t in body_vars:
+            cols.append(rows[:, body_vars.index(t)])
+        else:
+            return None
+    return jnp.stack(cols, axis=1)
+
+
+def local_round(*args, **kwargs):  # pragma: no cover - convenience alias
+    raise NotImplementedError("use DistributedEngine.materialise")

@@ -1,0 +1,270 @@
+"""Algorithm 1: the CompMat semi-naive materialisation engine.
+
+The fixpoint loop runs on the host (round count is data dependent and
+small, as in the paper); per-round bulk work (compression, joins, dedup)
+is vectorised column arithmetic — the numpy host path here, with the same
+primitives available as Pallas TPU kernels (``repro.kernels``) and as a
+``shard_map`` distributed engine (``repro.core.distributed``).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .columns import ColumnStore
+from .compress import compress_rows
+from .datalog import Program, Rule
+from .dedup import elim_dup
+from .joins import SubstSet, match, sjoin, xjoin
+from .metafacts import FactStore, MetaFact, flat_repr_size
+
+__all__ = ["CMatEngine", "MaterialisationStats"]
+
+
+@dataclass
+class MaterialisationStats:
+    rounds: int = 0
+    n_rule_applications: int = 0
+    n_meta_facts: int = 0
+    n_facts: int = 0
+    time_compress: float = 0.0
+    time_match: float = 0.0
+    time_join: float = 0.0
+    time_dedup: float = 0.0
+    time_total: float = 0.0
+    per_round: list[dict] = field(default_factory=list)
+
+    def dominant_phase(self) -> str:
+        phases = {
+            "compress": self.time_compress,
+            "match": self.time_match,
+            "join": self.time_join,
+            "dedup": self.time_dedup,
+        }
+        return max(phases, key=phases.get)
+
+
+class CMatEngine:
+    """Compressed datalog materialisation (the paper's CMat, Algorithm 1)."""
+
+    def __init__(
+        self,
+        program: Program,
+        inplace_splits: bool = False,
+        max_rounds: int = 10_000,
+        dedup_index: bool = False,
+    ):
+        # ``inplace_splits=True`` is the paper's Algorithm 4 accounting
+        # (mu(a) := b_in.b_out).  We found it unsound in general: a split
+        # that reaches a leaf shared with a meta-fact whose *other* columns
+        # are not co-split with the same mask silently permutes one column
+        # of that meta-fact (reachable via projection heads, e.g.
+        # ``P(x,y) -> W(x)``).  The sound default copies the survivors into
+        # fresh leaves; fully-novel derivations still share wholesale, so
+        # the headline compression results are unaffected (see DESIGN.md).
+        self.program = program
+        self.store = ColumnStore()
+        self.facts = FactStore(self.store)
+        self.inplace_splits = inplace_splits
+        self.max_rounds = max_rounds
+        self.stats = MaterialisationStats()
+        self._explicit: dict[str, np.ndarray] = {}
+        # persistent sorted dedup index (speed for memory — the paper's
+        # reported bottleneck is dedup re-unpacking; see DedupIndex)
+        from .dedup import DedupIndex
+
+        self._dedup_index = DedupIndex() if dedup_index else None
+
+    # ------------------------------------------------------------------ #
+    def load(self, dataset: dict[str, np.ndarray]) -> None:
+        """Compress the explicit dataset into meta-facts (Alg. 1 lines 1-4)."""
+        t0 = time.perf_counter()
+        for pred, rows in dataset.items():
+            rows = np.asarray(rows, dtype=np.int64)
+            if rows.ndim == 1:
+                rows = rows.reshape(-1, 1)
+            rows = np.unique(rows, axis=0)
+            self._explicit[pred] = rows
+            if self._dedup_index is not None:
+                self._dedup_index.seed(pred, rows)
+            for cols, length in compress_rows(rows, self.store):
+                self.facts.add(MetaFact(pred, cols, length, round=0))
+        self.stats.time_compress += time.perf_counter() - t0
+
+    # ------------------------------------------------------------------ #
+    def materialise(self) -> MaterialisationStats:
+        """Run the semi-naive fixpoint (Alg. 1 lines 6-23)."""
+        t_start = time.perf_counter()
+        round_no = 0
+        while round_no < self.max_rounds:
+            self.facts.current_round = round_no
+            if not self.facts.has_delta():
+                break
+            round_no += 1
+            round_stats = self._round(round_no)
+            self.stats.per_round.append(round_stats)
+        self.stats.rounds = round_no
+        self.stats.n_meta_facts = self.facts.n_meta_facts()
+        self.stats.n_facts = self.facts.n_facts()
+        self.stats.time_total = time.perf_counter() - t_start
+        return self.stats
+
+    # ------------------------------------------------------------------ #
+    def _round(self, round_no: int) -> dict:
+        facts, store = self.facts, self.store
+        candidates: dict[str, list[tuple[tuple[int, ...], int]]] = {}
+        match_cache: dict = {}
+        n_apps = 0
+
+        def cached_match(atom, which: str) -> SubstSet:
+            key = (atom.predicate, atom.terms, which)
+            hit = match_cache.get(key)
+            if hit is None:
+                t0 = time.perf_counter()
+                hit = match(
+                    atom,
+                    getattr(facts, which)(atom.predicate),
+                    store,
+                    self.inplace_splits,
+                )
+                self.stats.time_match += time.perf_counter() - t0
+                match_cache[key] = hit
+            return hit
+
+        for rule in self.program:
+            n = len(rule.body)
+            for i in range(n):
+                # require B_i to match Delta (semi-naive restriction)
+                if cached_match(rule.body[i], "delta").is_empty():
+                    continue
+                result = self._eval_body(rule, i, cached_match)
+                if result is None or result.is_empty():
+                    continue
+                n_apps += 1
+                self._emit_head(rule, result, candidates)
+
+        t0 = time.perf_counter()
+        delta = elim_dup(candidates, facts, store, round_no,
+                         self.inplace_splits, index=self._dedup_index)
+        self.stats.time_dedup += time.perf_counter() - t0
+
+        # Alg. 1 line 23: re-compress length-one meta-facts
+        t0 = time.perf_counter()
+        delta = self._recompress_singletons(delta, round_no)
+        self.stats.time_compress += time.perf_counter() - t0
+
+        for mf in delta:
+            facts.add(mf)
+        self.stats.n_rule_applications += n_apps
+        return {
+            "round": round_no,
+            "new_meta_facts": len(delta),
+            "new_facts": sum(mf.length for mf in delta),
+            "rule_applications": n_apps,
+        }
+
+    # ------------------------------------------------------------------ #
+    def _eval_body(self, rule: Rule, i: int, cached_match) -> SubstSet | None:
+        """Evaluate the body left-to-right (Alg. 1 lines 9-19)."""
+        L: SubstSet | None = None
+        V: set[str] = set()
+        for j, atom in enumerate(rule.body):
+            which = "old" if j < i else ("delta" if j == i else "all")
+            R = cached_match(atom, which)
+            if R.is_empty():
+                return None
+            atom_vars = set(atom.variables())
+            t0 = time.perf_counter()
+            if L is None:
+                L = R
+            elif V <= atom_vars:
+                L = sjoin(L, R, tuple(v for v in R.vars if v in V), self.store,
+                          self.inplace_splits)
+            elif atom_vars <= V:
+                L = sjoin(R, L, tuple(v for v in L.vars if v in atom_vars),
+                          self.store, self.inplace_splits)
+            else:
+                common = tuple(v for v in L.vars if v in atom_vars)
+                L = xjoin(L, R, common, self.store)
+            self.stats.time_join += time.perf_counter() - t0
+            V |= atom_vars
+            if L.is_empty():
+                return None
+        return L
+
+    # ------------------------------------------------------------------ #
+    def _emit_head(self, rule: Rule, L: SubstSet, candidates: dict) -> None:
+        head = rule.head
+        bucket = candidates.setdefault(head.predicate, [])
+        var_idx = {v: L.vars.index(v) for v in head.variables()}
+        for cols_ids, length in L.items:
+            head_cols = []
+            for t in head.terms:
+                if isinstance(t, int):
+                    head_cols.append(self.store.new_constant(t, length))
+                else:
+                    head_cols.append(cols_ids[var_idx[t]])
+            bucket.append((tuple(head_cols), length))
+
+    # ------------------------------------------------------------------ #
+    def _recompress_singletons(
+        self, delta: list[MetaFact], round_no: int
+    ) -> list[MetaFact]:
+        """Remove length-one meta-facts and re-compress them per predicate
+        (Alg. 1 line 23) — critical for join speed in later rounds."""
+        singles: dict[str, list[MetaFact]] = {}
+        keep: list[MetaFact] = []
+        for mf in delta:
+            if mf.length == 1:
+                singles.setdefault(mf.predicate, []).append(mf)
+            else:
+                keep.append(mf)
+        for pred, mfs in singles.items():
+            if len(mfs) == 1:
+                keep.append(mfs[0])
+                continue
+            rows = np.stack(
+                [
+                    np.asarray(
+                        [self.store.head_value(c) for c in mf.columns], dtype=np.int64
+                    )
+                    for mf in mfs
+                ]
+            )
+            for cols, length in compress_rows(rows, self.store):
+                keep.append(MetaFact(pred, cols, length, round=round_no))
+        return keep
+
+    # ------------------------------------------------------------------ #
+    # reporting
+    # ------------------------------------------------------------------ #
+    def materialisation(self) -> dict[str, np.ndarray]:
+        """Unfolded, deduplicated mat(Pi, E) — for testing/inspection."""
+        return self.facts.to_dict()
+
+    def report(self) -> dict:
+        flat_mat = self.materialisation()
+        explicit_size = flat_repr_size(
+            {p: np.unique(r, axis=0) for p, r in self._explicit.items()}
+        )
+        return {
+            "rounds": self.stats.rounds,
+            "n_meta_facts": self.stats.n_meta_facts,
+            "n_facts_explicit": int(sum(r.shape[0] for r in self._explicit.values())),
+            "n_facts_materialised": int(
+                sum(r.shape[0] for r in flat_mat.values())
+            ),
+            "flat_size_E": explicit_size,
+            "flat_size_I": flat_repr_size(flat_mat),
+            "compressed_size": self.facts.total_repr_size(),
+            "mu_stats": self.facts.mu_stats(),
+            "dominant_phase": self.stats.dominant_phase(),
+            "time_total": self.stats.time_total,
+            "time_dedup": self.stats.time_dedup,
+            "time_join": self.stats.time_join,
+            "time_match": self.stats.time_match,
+            "time_compress": self.stats.time_compress,
+        }

@@ -1,0 +1,269 @@
+"""Vectorised meta-substitution joins: match / sjoin / xjoin (Alg. 3-5).
+
+A :class:`SubstSet` is the engine's working set ``L`` from Algorithm 1: a
+variable order plus a list of meta-substitutions, each a tuple of column
+ids (one per variable, equal unfolding length).
+
+TPU/vector adaptation (see DESIGN.md §3): the paper enumerates
+substitutions through priority queues; we instead
+
+* *materialise only the join-key columns* (unfold + cache),
+* evaluate semi-joins as sorted-membership tests (``searchsorted``),
+* evaluate cross-joins by grouping the right side on the key with one
+  ``compress`` per group, sharing each group's meta-constants across all
+  matching left rows (identical output representation to Algorithm 5).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .columns import ColumnStore
+from .compress import compress_grouped, sort_for_compression
+from .metafacts import MetaFact
+from .util import factorize_rows, multicol_member
+
+__all__ = ["SubstSet", "match", "sjoin", "xjoin"]
+
+
+@dataclass
+class SubstSet:
+    """A set of meta-substitutions over a fixed variable order."""
+
+    vars: tuple[str, ...]
+    items: list[tuple[tuple[int, ...], int]] = field(default_factory=list)
+    # items: (column ids aligned with ``vars``, unfolding length)
+
+    def is_empty(self) -> bool:
+        return not self.items
+
+    def n_substitutions(self) -> int:
+        return sum(length for _, length in self.items)
+
+
+def _unfold_cols(store: ColumnStore, items, var_idx: list[int]) -> np.ndarray:
+    """Unfold selected columns of every item into one ``(n, k)`` array."""
+    if not items:
+        return np.zeros((0, len(var_idx)), dtype=np.int64)
+    cols = []
+    for j in var_idx:
+        cols.append(np.concatenate([store.unfold(cols_ids[j]) for cols_ids, _ in items]))
+    if not var_idx:
+        n = sum(length for _, length in items)
+        return np.zeros((n, 0), dtype=np.int64)
+    return np.stack(cols, axis=1)
+
+
+def _filter_items(
+    store: ColumnStore,
+    subst: SubstSet,
+    mask: np.ndarray,
+    inplace_splits: bool = False,
+) -> SubstSet:
+    """Keep only the positions of ``mask`` in each item, via the paper's
+    shuffle: untouched items are shared as-is; touched items have every
+    column split (Algorithm 4)."""
+    out = SubstSet(subst.vars)
+    off = 0
+    for cols_ids, length in subst.items:
+        sub = mask[off : off + length]
+        off += length
+        if sub.all():
+            out.items.append((cols_ids, length))
+        elif sub.any():
+            split_of = {
+                c: store.split(c, sub, inplace=inplace_splits)
+                for c in dict.fromkeys(cols_ids)
+            }
+            new_cols = tuple(split_of[c] for c in cols_ids)
+            out.items.append((new_cols, int(sub.sum())))
+    return out
+
+
+# --------------------------------------------------------------------- #
+# match (Appendix A.1, last paragraph)
+# --------------------------------------------------------------------- #
+def match(
+    atom,
+    facts: list[MetaFact],
+    store: ColumnStore,
+    inplace_splits: bool = False,
+) -> SubstSet:
+    """All meta-substitutions matching ``atom`` against a meta-fact list.
+
+    Handles constants in the atom and repeated variables by masking +
+    shuffle, exactly as the paper's ``match``/``shuffle`` combination.
+    """
+    vars_ = atom.variables()
+    var_first_pos = {v: atom.terms.index(v) for v in vars_}
+    needs_mask = any(isinstance(t, int) for t in atom.terms) or len(vars_) != len(
+        atom.terms
+    )
+    out = SubstSet(vars_)
+    for mf in facts:
+        if len(mf.columns) != len(atom.terms):
+            continue
+        if not needs_mask:
+            cols = tuple(mf.columns[var_first_pos[v]] for v in vars_)
+            out.items.append((cols, mf.length))
+            continue
+        mask = np.ones(mf.length, dtype=bool)
+        for pos, t in enumerate(atom.terms):
+            if isinstance(t, int):  # constant
+                mask &= store.unfold(mf.columns[pos]) == t
+            elif pos != var_first_pos[t]:  # repeated variable
+                mask &= store.unfold(mf.columns[pos]) == store.unfold(
+                    mf.columns[var_first_pos[t]]
+                )
+        if not mask.any():
+            continue
+        cols = tuple(mf.columns[var_first_pos[v]] for v in vars_)
+        if mask.all():
+            out.items.append((cols, mf.length))
+        else:
+            if inplace_splits:
+                # In-place redefinition is only sound if *every* column of
+                # the source meta-fact is co-split with the same mask
+                # (positional alignment) — including duplicate-variable
+                # positions the result does not use.
+                split_of = {}
+                for c in dict.fromkeys(mf.columns):
+                    split_of[c] = store.split(c, mask, inplace=True)
+                new_cols = tuple(split_of[mf.columns[var_first_pos[v]]] for v in vars_)
+            else:
+                new_cols = tuple(store.split(c, mask, inplace=False) for c in cols)
+            out.items.append((new_cols, int(mask.sum())))
+    return out
+
+
+# --------------------------------------------------------------------- #
+# semi-join (Algorithm 3)
+# --------------------------------------------------------------------- #
+def sjoin(
+    filter_set: SubstSet,
+    data_set: SubstSet,
+    key_vars: tuple[str, ...],
+    store: ColumnStore,
+    inplace_splits: bool = False,
+) -> SubstSet:
+    """Filter ``data_set`` to the substitutions whose key tuple occurs in
+    ``filter_set`` (vars(filter) ⊇ key_vars, vars(data) ⊇ key_vars).
+
+    The paper's queue-merge becomes one sorted-membership test; survivors
+    are re-expressed with structure sharing through ``shuffle``.
+    """
+    if data_set.is_empty() or filter_set.is_empty():
+        return SubstSet(data_set.vars)
+    f_idx = [filter_set.vars.index(v) for v in key_vars]
+    d_idx = [data_set.vars.index(v) for v in key_vars]
+    filter_keys = _unfold_cols(store, filter_set.items, f_idx)
+    data_keys = _unfold_cols(store, data_set.items, d_idx)
+    mask = multicol_member(data_keys, filter_keys)
+    if not mask.any():
+        return SubstSet(data_set.vars)
+    return _filter_items(store, data_set, mask, inplace_splits)
+
+
+# --------------------------------------------------------------------- #
+# cross-join (Algorithm 5)
+# --------------------------------------------------------------------- #
+def xjoin(
+    left: SubstSet,
+    right: SubstSet,
+    key_vars: tuple[str, ...],
+    store: ColumnStore,
+) -> SubstSet:
+    """General equi-join with structure-shared output.
+
+    For every join-key group, the right side's non-key columns are
+    compressed **once**; every matching left row then emits meta-
+    substitutions that reference the group's meta-constants, with the left
+    values as O(1) RLE-constant columns (paper Alg. 5 lines 63-72).
+    Output storage is O(|L| + |R|) instead of O(|L| x |R|).
+
+    ``key_vars`` may be empty, in which case this is a Cartesian product
+    with a single group.
+    """
+    out_vars = tuple(left.vars) + tuple(v for v in right.vars if v not in left.vars)
+    out = SubstSet(out_vars)
+    if left.is_empty() or right.is_empty():
+        return out
+
+    l_key_idx = [left.vars.index(v) for v in key_vars]
+    r_key_idx = [right.vars.index(v) for v in key_vars]
+    r_rest_vars = [v for v in right.vars if v not in key_vars and v not in left.vars]
+    r_rest_idx = [right.vars.index(v) for v in r_rest_vars]
+
+    l_keys = _unfold_cols(store, left.items, l_key_idx)
+    r_keys = _unfold_cols(store, right.items, r_key_idx)
+    l_all = _unfold_cols(store, left.items, list(range(len(left.vars))))
+    r_rest = _unfold_cols(store, right.items, r_rest_idx)
+
+    codes_l, codes_r = factorize_rows(l_keys, r_keys)
+
+    # sort right by (key code, rest columns) so each group is
+    # compression-ready; sort left by key code
+    if r_rest.shape[1] > 0:
+        # One global permutation: key primary, rest columns secondary with
+        # fewest-distinct-first inside the group (compression-friendly).
+        n_distinct = [np.unique(r_rest[:, j]).shape[0] for j in range(r_rest.shape[1])]
+        col_order = np.argsort(n_distinct, kind="stable")
+        keys = tuple(r_rest[:, j] for j in reversed(col_order)) + (codes_r,)
+        r_perm = np.lexsort(keys)
+    else:
+        r_perm = np.argsort(codes_r, kind="stable")
+    codes_r_s = codes_r[r_perm]
+    r_rest_s = r_rest[r_perm]
+    l_perm = np.argsort(codes_l, kind="stable")
+    codes_l_s = codes_l[l_perm]
+    l_all_s = l_all[l_perm]
+
+    # group boundaries on the right
+    uniq_r, r_starts = np.unique(codes_r_s, return_index=True)
+    r_ends = np.append(r_starts[1:], codes_r_s.shape[0])
+    # which right-groups have any left match, and the left span per group
+    l_lo = np.searchsorted(codes_l_s, uniq_r, side="left")
+    l_hi = np.searchsorted(codes_l_s, uniq_r, side="right")
+    has_match = l_hi > l_lo
+    if not has_match.any():
+        return out
+
+    m_starts = r_starts[has_match]
+    m_ends = r_ends[has_match]
+    m_l_lo = l_lo[has_match]
+    m_l_hi = l_hi[has_match]
+
+    if r_rest_s.shape[1] > 0:
+        # The paper's T is a *set* (Alg. 5 line 65): drop duplicate rest-rows
+        # within each group before compressing.  Rows are sorted within
+        # groups, so duplicates are consecutive.
+        n_r = codes_r_s.shape[0]
+        dup = np.zeros(n_r, dtype=bool)
+        if n_r > 1:
+            dup[1:] = (r_rest_s[1:] == r_rest_s[:-1]).all(axis=1) & (
+                codes_r_s[1:] == codes_r_s[:-1]
+            )
+        if dup.any():
+            keep_rows = ~dup
+            # remap group boundaries to the deduplicated index space
+            pos = np.cumsum(keep_rows) - 1  # new index of each kept row
+            m_starts = pos[m_starts]
+            m_ends = np.searchsorted(np.flatnonzero(keep_rows), m_ends)
+            r_rest_s = r_rest_s[keep_rows]
+        groups = compress_grouped(m_starts, m_ends, r_rest_s, store)
+    else:
+        groups = [[((), 1)] for _ in range(len(m_starts))]
+
+    n_left_vars = len(left.vars)
+    for g, (llo, lhi) in enumerate(zip(m_l_lo, m_l_hi)):
+        pieces = groups[g]
+        for li in range(int(llo), int(lhi)):
+            lrow = l_all_s[li]
+            for piece_cols, plen in pieces:
+                cols = tuple(
+                    store.new_constant(int(lrow[j]), plen) for j in range(n_left_vars)
+                ) + tuple(piece_cols)
+                out.items.append((cols, plen))
+    return out

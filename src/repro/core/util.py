@@ -1,0 +1,74 @@
+"""Vectorised multi-column set operations (host / numpy path).
+
+These replace the paper's priority-queue merge loops with data-parallel
+sorted-array primitives — the same adaptation the Pallas kernels make on
+TPU (see ``repro.kernels``).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "factorize_rows",
+    "multicol_member",
+    "first_occurrence_mask",
+    "sorted_member",
+]
+
+
+def sorted_member(a: np.ndarray, b_sorted: np.ndarray) -> np.ndarray:
+    """Membership of each element of ``a`` in the sorted 1-D array ``b``."""
+    if b_sorted.shape[0] == 0:
+        return np.zeros(a.shape[0], dtype=bool)
+    idx = np.searchsorted(b_sorted, a)
+    idx = np.minimum(idx, b_sorted.shape[0] - 1)
+    return b_sorted[idx] == a
+
+
+def factorize_rows(*row_sets: np.ndarray) -> list[np.ndarray]:
+    """Jointly factorize several ``(n_i, k)`` row sets into dense int codes
+    such that two rows (from any set) get equal codes iff they are equal."""
+    k = row_sets[0].shape[1] if row_sets[0].ndim == 2 else 1
+    splits = np.cumsum([r.shape[0] for r in row_sets])[:-1]
+    stacked = np.concatenate([np.atleast_2d(r.reshape(r.shape[0], -1)) for r in row_sets])
+    if stacked.shape[0] == 0:
+        return [np.zeros(r.shape[0], dtype=np.int64) for r in row_sets]
+    if k == 0:
+        codes = np.zeros(stacked.shape[0], dtype=np.int64)
+    elif k == 1:
+        _, codes = np.unique(stacked[:, 0], return_inverse=True)
+    else:
+        _, codes = np.unique(stacked, axis=0, return_inverse=True)
+    codes = codes.astype(np.int64)
+    return list(np.split(codes, splits))
+
+
+def multicol_member(a_rows: np.ndarray, b_rows: np.ndarray) -> np.ndarray:
+    """Boolean mask: which rows of ``a_rows`` occur in ``b_rows``."""
+    n = a_rows.shape[0]
+    if n == 0:
+        return np.zeros(0, dtype=bool)
+    if b_rows.shape[0] == 0:
+        return np.zeros(n, dtype=bool)
+    if a_rows.ndim == 2 and a_rows.shape[1] == 1:
+        a_rows, b_rows = a_rows[:, 0], b_rows[:, 0]
+    if a_rows.ndim == 1:
+        return sorted_member(a_rows, np.sort(b_rows))
+    codes_a, codes_b = factorize_rows(a_rows, b_rows)
+    return sorted_member(codes_a, np.sort(codes_b))
+
+
+def first_occurrence_mask(codes: np.ndarray) -> np.ndarray:
+    """Mask of positions that are the first occurrence of their value."""
+    n = codes.shape[0]
+    if n == 0:
+        return np.zeros(0, dtype=bool)
+    order = np.argsort(codes, kind="stable")
+    sorted_codes = codes[order]
+    is_first_sorted = np.empty(n, dtype=bool)
+    is_first_sorted[0] = True
+    is_first_sorted[1:] = sorted_codes[1:] != sorted_codes[:-1]
+    mask = np.zeros(n, dtype=bool)
+    mask[order] = is_first_sorted
+    return mask

@@ -1,0 +1,90 @@
+"""KB-to-token linearisation: where the paper's engine feeds LM training.
+
+The materialised knowledge base (computed by the CompMat engine — the
+paper's contribution) is linearised into token sequences for KB-grounded
+language-model training:
+
+    <S> subject predicate object <E> <S> ...
+
+Token ids are offset so constants, predicates, and specials occupy
+disjoint id ranges inside the model's vocabulary.  The compressed
+representation pays off operationally: the linearisation iterates
+*meta-facts* and emits RLE runs without unfolding duplicated columns.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.engine import CMatEngine
+
+__all__ = ["KBTokenizer", "linearise_materialisation"]
+
+TOK_BOS = 0
+TOK_EOS = 1
+TOK_SEP = 2
+N_SPECIALS = 3
+
+
+class KBTokenizer:
+    """Maps predicates/constants into a model vocabulary."""
+
+    def __init__(self, n_constants: int, predicates: list[str], vocab_size: int):
+        self.pred_of = {p: N_SPECIALS + i for i, p in enumerate(sorted(predicates))}
+        self.const_base = N_SPECIALS + len(self.pred_of)
+        self.vocab_size = vocab_size
+        if self.const_base + n_constants > vocab_size:
+            # fold constants into the available range (hash-bucketing):
+            # standard trick for entity vocabularies larger than the LM's
+            self.n_buckets = vocab_size - self.const_base
+        else:
+            self.n_buckets = n_constants
+
+    def constant(self, cid: int) -> int:
+        return self.const_base + (int(cid) % max(self.n_buckets, 1))
+
+    def predicate(self, pred: str) -> int:
+        return self.pred_of[pred]
+
+
+def linearise_materialisation(
+    engine: CMatEngine, vocab_size: int, max_facts: int | None = None
+) -> np.ndarray:
+    """Emit a token stream from a materialised CMat engine."""
+    preds = sorted(engine.facts.predicates())
+    n_constants = max(
+        (int(engine.store.unfold(c).max()) + 1
+         for lst in (engine.facts.all(p) for p in preds)
+         for mf in lst
+         for c in mf.columns
+         if engine.store.length(c)),
+        default=0,
+    )
+    tok = KBTokenizer(n_constants, preds, vocab_size)
+    out: list[np.ndarray] = []
+    emitted = 0
+    for pred in preds:
+        pid = tok.predicate(pred)
+        for mf in engine.facts.all(pred):
+            cols = [engine.store.unfold(c) for c in mf.columns]
+            n = mf.length
+            if max_facts is not None and emitted + n > max_facts:
+                n = max_facts - emitted
+                if n <= 0:
+                    break
+            arity = len(cols)
+            # layout per fact: BOS pred c1 [c2] EOS
+            width = 3 + arity
+            block = np.empty((n, width), dtype=np.int32)
+            block[:, 0] = TOK_BOS
+            block[:, 1] = pid
+            for j, col in enumerate(cols):
+                vals = (tok.const_base
+                        + (col[:n] % max(tok.n_buckets, 1))).astype(np.int32)
+                block[:, 2 + j] = vals
+            block[:, -1] = TOK_EOS
+            out.append(block.reshape(-1))
+            emitted += n
+    if not out:
+        return np.zeros((0,), dtype=np.int32)
+    return np.concatenate(out)

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for CompMat's hot spots (semi-join membership,
+RLE unfolding, cross-join span location) with pure-jnp oracles."""
+
+from . import ops, ref
+from .join_bounds import join_bounds
+from .rle_expand import rle_expand
+from .sorted_member import sorted_member
+
+__all__ = ["join_bounds", "ops", "ref", "rle_expand", "sorted_member"]

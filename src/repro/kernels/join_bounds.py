@@ -1,0 +1,106 @@
+"""Join-bounds kernel — the cross-join (Algorithm 5) group locator.
+
+For every left key the cross-join needs the span ``[lo, hi)`` of matching
+rows in the key-sorted right side:
+
+    lo[i] = #{k : r[k] <  l[i]}        hi[i] = #{k : r[k] <= l[i]}
+
+A serial merge computes these with two pointers; on TPU we accumulate the
+counts blockwise over the sorted right side, with a three-way prune per
+(left-tile x right-block):
+
+* ``rmax <  lmin``  -> the whole block is below the tile: add BLOCK to
+  both counters without comparing,
+* ``rmin >  lmax``  -> the whole block is above: skip entirely,
+* otherwise        -> one broadcast compare (VPU).
+
+For sorted inputs only O(1) blocks per tile take the compare path, so the
+work is O(n + m) with machine-width parallelism — this is the paper's
+merge retimed for a vector unit.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_L = 512
+DEFAULT_BLOCK_R = 1024
+_SENTINEL = jnp.iinfo(jnp.int32).max
+
+
+def _bounds_kernel(l_ref, r_ref, lo_ref, hi_ref, *, block_r: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        lo_ref[...] = jnp.zeros_like(lo_ref)
+        hi_ref[...] = jnp.zeros_like(hi_ref)
+
+    l = l_ref[...]
+    r = r_ref[...]
+    rmin, rmax = r[0], r[-1]
+    lmin, lmax = jnp.min(l), jnp.max(l)
+
+    @pl.when(rmax < lmin)
+    def _all_below():
+        lo_ref[...] += block_r
+        hi_ref[...] += block_r
+
+    @pl.when(jnp.logical_and(rmax >= lmin, rmin <= lmax))
+    def _compare():
+        lo_ref[...] += jnp.sum(
+            (r[None, :] < l[:, None]).astype(jnp.int32), axis=1
+        )
+        hi_ref[...] += jnp.sum(
+            (r[None, :] <= l[:, None]).astype(jnp.int32), axis=1
+        )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_l", "block_r", "interpret")
+)
+def join_bounds(
+    l_keys: jax.Array,
+    r_sorted: jax.Array,
+    *,
+    block_l: int = DEFAULT_BLOCK_L,
+    block_r: int = DEFAULT_BLOCK_R,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Return (lo, hi) spans of each left key in the sorted right keys."""
+    n, m = l_keys.shape[0], r_sorted.shape[0]
+    if n == 0:
+        z = jnp.zeros((0,), dtype=jnp.int32)
+        return z, z
+    if m == 0:
+        z = jnp.zeros((n,), dtype=jnp.int32)
+        return z, z
+    n_pad = -n % block_l
+    m_pad = -m % block_r
+    l_p = jnp.pad(l_keys.astype(jnp.int32), (0, n_pad), constant_values=_SENTINEL)
+    r_p = jnp.pad(
+        r_sorted.astype(jnp.int32), (0, m_pad), constant_values=_SENTINEL
+    )
+    grid = (l_p.shape[0] // block_l, r_p.shape[0] // block_r)
+    lo, hi = pl.pallas_call(
+        functools.partial(_bounds_kernel, block_r=block_r),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_l,), lambda i, j: (i,)),
+            pl.BlockSpec((block_r,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_l,), lambda i, j: (i,)),
+            pl.BlockSpec((block_l,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((l_p.shape[0],), jnp.int32),
+            jax.ShapeDtypeStruct((l_p.shape[0],), jnp.int32),
+        ],
+        interpret=interpret,
+    )(l_p, r_p)
+    return lo[:n], hi[:n]

@@ -1,0 +1,50 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``interpret`` defaults to True (this container is CPU-only; the kernel
+bodies execute in Python for validation).  On TPU pass
+``interpret=False`` — BlockSpecs are already VMEM-tiled for v5e.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .join_bounds import join_bounds as _join_bounds
+from .rle_expand import rle_expand as _rle_expand
+from .sorted_member import sorted_member as _sorted_member
+
+__all__ = ["member", "anti_join_mask", "expand_rle", "group_spans"]
+
+
+def member(a, b_sorted, *, interpret: bool = True, **blocks) -> jax.Array:
+    """``out[i] = a[i] in b_sorted`` (semi-join filter)."""
+    return _sorted_member(
+        jnp.asarray(a), jnp.asarray(b_sorted), interpret=interpret, **blocks
+    )
+
+
+def anti_join_mask(new, old_sorted, *, interpret: bool = True, **blocks):
+    """Mask of ``new`` elements NOT in ``old_sorted`` (the dedup test of
+    Algorithm 6)."""
+    return ~member(new, old_sorted, interpret=interpret, **blocks)
+
+
+def expand_rle(run_values, run_counts, total: int, *, interpret: bool = True,
+               **blocks):
+    """Unfold an RLE leaf meta-constant into ``total`` constants."""
+    return _rle_expand(
+        jnp.asarray(run_values),
+        jnp.asarray(run_counts),
+        total=int(total),
+        interpret=interpret,
+        **blocks,
+    )
+
+
+def group_spans(l_keys, r_sorted, *, interpret: bool = True, **blocks):
+    """Per-left-key [lo, hi) spans in the sorted right keys — the
+    cross-join group locator of Algorithm 5."""
+    return _join_bounds(
+        jnp.asarray(l_keys), jnp.asarray(r_sorted), interpret=interpret, **blocks
+    )

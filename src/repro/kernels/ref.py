@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for every kernel (the correctness references)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def sorted_member_ref(a: jax.Array, b_sorted: jax.Array) -> jax.Array:
+    """Membership of a[i] in sorted b — searchsorted reference."""
+    if b_sorted.shape[0] == 0:
+        return jnp.zeros(a.shape, dtype=bool)
+    idx = jnp.clip(jnp.searchsorted(b_sorted, a), 0, b_sorted.shape[0] - 1)
+    return b_sorted[idx] == a
+
+
+def rle_expand_ref(run_values, run_counts, total: int):
+    """np.repeat reference (host; dynamic output size)."""
+    out = np.repeat(np.asarray(run_values), np.asarray(run_counts))
+    assert out.shape[0] == total
+    return jnp.asarray(out, dtype=jnp.int32)
+
+
+def join_bounds_ref(l_keys: jax.Array, r_sorted: jax.Array):
+    lo = jnp.searchsorted(r_sorted, l_keys, side="left").astype(jnp.int32)
+    hi = jnp.searchsorted(r_sorted, l_keys, side="right").astype(jnp.int32)
+    return lo, hi

@@ -1,0 +1,77 @@
+"""RLE expansion kernel — unfolding leaf meta-constants.
+
+The paper stores leaf meta-constants run-length encoded (``d * n``); every
+join/dedup unfolds them.  A serial decoder is memory-bound and sequential;
+on TPU we decode positionally: output element ``i`` belongs to the first
+run whose cumulative end exceeds ``i``, i.e. ``run(i) = #{k : ends[k] <= i}``
+— a broadcast compare-and-sum per output tile, followed by a gather of the
+run values (on TPU the gather can be expressed as a one-hot matmul to run
+on the MXU; ``jnp.take`` lowers to the native gather here).
+
+The run table (ends + values) is replicated into VMEM for every output
+tile: with the default 16 MiB VMEM budget that caps the table at ~1M runs
+per call; ``repro.kernels.ops.rle_expand`` chunks larger tables.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_OUT = 1024
+_END_SENTINEL = jnp.iinfo(jnp.int32).max
+
+
+def _rle_kernel(ends_ref, vals_ref, o_ref, *, block_out: int):
+    i = pl.program_id(0)
+    idx = i * block_out + jax.lax.iota(jnp.int32, block_out)
+    ends = ends_ref[...]
+    vals = vals_ref[...]
+    # run index of each output position: number of run-ends <= idx
+    run = jnp.sum(
+        (ends[None, :] <= idx[:, None]).astype(jnp.int32), axis=1
+    )
+    run = jnp.minimum(run, vals.shape[0] - 1)
+    o_ref[...] = jnp.take(vals, run)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("total", "block_out", "interpret")
+)
+def rle_expand(
+    run_values: jax.Array,
+    run_counts: jax.Array,
+    *,
+    total: int,
+    block_out: int = DEFAULT_BLOCK_OUT,
+    interpret: bool = True,
+) -> jax.Array:
+    """Expand RLE runs into ``total`` output elements.
+
+    ``total`` must equal ``run_counts.sum()`` (static, host-known — meta-
+    constant lengths are part of the representation).
+    """
+    r = run_values.shape[0]
+    if total == 0 or r == 0:
+        return jnp.zeros((0,), dtype=jnp.int32)
+    ends = jnp.cumsum(run_counts.astype(jnp.int32))
+    n_pad = -total % block_out
+    out_len = total + n_pad
+    ends_p = ends  # replicated whole per tile
+    vals_p = run_values.astype(jnp.int32)
+    grid = (out_len // block_out,)
+    out = pl.pallas_call(
+        functools.partial(_rle_kernel, block_out=block_out),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((r,), lambda i: (0,)),
+            pl.BlockSpec((r,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_out,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((out_len,), jnp.int32),
+        interpret=interpret,
+    )(ends_p, vals_p)
+    return out[:total]

@@ -1,0 +1,92 @@
+"""Block-pruned membership kernel — the semi-join / dedup hot spot.
+
+TPU adaptation of the paper's priority-queue merge (semi-)join and merge
+anti-join (Algorithms 3 and 6).  A serial two-pointer merge is O(n+m) but
+has loop-carried dependencies that do not vectorise.  On TPU we instead
+evaluate membership as a *block-pruned brute-force compare*:
+
+* grid = (tiles of ``a``) x (blocks of ``b``),
+* each step compares an ``a``-tile against a ``b``-block with one
+  broadcast equality (VPU-friendly, no data-dependent control flow),
+* because ``b`` is sorted, a block whose [min, max] range does not
+  overlap the tile's range is skipped with ``pl.when`` — for sorted
+  inputs at most O(1) of the ``m/BLOCK_B`` blocks per tile survive the
+  prune, so useful work is O(n * overlap) rather than O(n * m).
+
+Used for: dedup anti-join (``~member``), semi-join filters, and the
+distributed engine's ``dedup_against``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_A = 512
+DEFAULT_BLOCK_B = 1024
+_SENTINEL = jnp.iinfo(jnp.int32).max  # caller guarantees ids < sentinel
+
+
+def _member_kernel(a_ref, b_ref, o_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    # prune: sorted b => this block covers [bmin, bmax]; skip if disjoint
+    # from the tile's value range.
+    bmin, bmax = b[0], b[-1]
+    amin, amax = jnp.min(a), jnp.max(a)
+
+    @pl.when(jnp.logical_and(amax >= bmin, amin <= bmax))
+    def _compare():
+        hit = (a[:, None] == b[None, :]).any(axis=1)
+        o_ref[...] = jnp.logical_or(o_ref[...], hit)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_a", "block_b", "interpret")
+)
+def sorted_member(
+    a: jax.Array,
+    b_sorted: jax.Array,
+    *,
+    block_a: int = DEFAULT_BLOCK_A,
+    block_b: int = DEFAULT_BLOCK_B,
+    interpret: bool = True,
+) -> jax.Array:
+    """``out[i] = a[i] in b_sorted``; ``b_sorted`` ascending int32.
+
+    ``interpret=True`` runs the kernel body on CPU (validation); on TPU
+    pass ``interpret=False``.
+    """
+    n, m = a.shape[0], b_sorted.shape[0]
+    if n == 0:
+        return jnp.zeros((0,), dtype=bool)
+    if m == 0:
+        return jnp.zeros((n,), dtype=bool)
+    n_pad = -n % block_a
+    m_pad = -m % block_b
+    a_p = jnp.pad(a.astype(jnp.int32), (0, n_pad), constant_values=_SENTINEL)
+    b_p = jnp.pad(
+        b_sorted.astype(jnp.int32), (0, m_pad), constant_values=_SENTINEL
+    )
+    grid = (a_p.shape[0] // block_a, b_p.shape[0] // block_b)
+    out = pl.pallas_call(
+        _member_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_a,), lambda i, j: (i,)),
+            pl.BlockSpec((block_b,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_a,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((a_p.shape[0],), jnp.bool_),
+        interpret=interpret,
+    )(a_p, b_p)
+    return out[:n]

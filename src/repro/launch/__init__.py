@@ -1,0 +1,21 @@
+"""Launch layer: meshes, sharding rules, dry-run, train/serve drivers."""
+
+from .mesh import data_axes, make_host_mesh, make_production_mesh
+from .sharding import (
+    batch_shardings,
+    cache_shardings,
+    guarded_spec,
+    param_shardings,
+    state_shardings,
+)
+
+__all__ = [
+    "batch_shardings",
+    "cache_shardings",
+    "data_axes",
+    "guarded_spec",
+    "make_host_mesh",
+    "make_production_mesh",
+    "param_shardings",
+    "state_shardings",
+]

@@ -1,0 +1,252 @@
+"""Sharding rules: parameters, optimizer states, batches, caches.
+
+Layout strategy (see DESIGN.md §6):
+
+* **FSDP x TP**: every weight is sharded over the batch axes
+  (('pod','data')) on its d_model-ish dimension *and* over ``model`` on
+  its heads/ffn/expert dimension.  Under scan-over-layers XLA all-gathers
+  one layer's weights per scan step (FSDP), overlapping with compute.
+* **EP**: MoE expert dim shards over ``model``.
+* **Context parallelism**: decode caches with batch < data-axis size
+  (long_500k) shard the *sequence* dimension of the KV cache / the state
+  dimension of SSM states over ``data`` instead.
+* Every rule is divisibility-guarded: a dimension that does not divide by
+  the axis size is replicated instead (e.g. granite's kv=1 MQA heads fall
+  back to sharding head_dim).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from .mesh import data_axes
+
+__all__ = [
+    "guarded_spec",
+    "param_shardings",
+    "state_shardings",
+    "batch_shardings",
+    "cache_shardings",
+]
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def guarded_spec(mesh: Mesh, shape, proposed) -> P:
+    """Drop proposed axes that do not divide the dimension size."""
+    out = []
+    for dim, axis in zip(shape, proposed):
+        if axis is not None and dim % _axis_size(mesh, axis) == 0 and dim > 0:
+            out.append(axis)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+# --------------------------------------------------------------------- #
+# parameter rules
+# --------------------------------------------------------------------- #
+def _param_rule(path: str, shape, mesh: Mesh, fsdp, ep_only: bool = False) -> P:
+    """Sharding for one parameter leaf, dispatched on name + rank.
+
+    Stage parameters carry a leading layer axis (never sharded); the rules
+    below give the spec for the *trailing* dims and are left-padded.
+    ``ep_only``: keep the model axis for MoE experts only; everything else
+    is FSDP-sharded with no tensor parallelism (best for MoE models whose
+    d_model is too small to amortise TP all-reduces — §Perf iteration 8).
+    """
+    name = path.split("/")[-1]
+    is_moe = "/moe/" in path and "shared" not in path
+
+    def pad(spec_tail):
+        return (None,) * (len(shape) - len(spec_tail)) + tuple(spec_tail)
+
+    if name in ("embed",):
+        # vocab over `model` so logits stay (b@dp, s, V@model) and the
+        # softmax/xent reduce is a small all-reduce over `model`.  d is
+        # deliberately NOT sharded: a d@data embed table propagates
+        # feature-sharding into the activations and kills data
+        # parallelism (observed; see EXPERIMENTS.md §Perf iteration 0).
+        tail = ("model", None)
+    elif name == "unembed":
+        tail = (None, "model")
+    elif name == "router":
+        tail = (fsdp, None)
+    elif name in ("wq",):
+        tail = (fsdp, "model", None)
+    elif name in ("wk", "wv"):
+        # kv heads may be too few to shard (MQA) — guard falls back; try
+        # sharding head_dim instead when kv-dim sharding is impossible.
+        kv = shape[-2]
+        if kv % _axis_size(mesh, "model") == 0:
+            tail = (fsdp, "model", None)
+        else:
+            tail = (fsdp, None, "model")
+    elif name == "wo":
+        tail = ("model", None, fsdp)
+    elif name in ("w_gate", "w_up"):
+        tail = ("model", fsdp, None) if is_moe else (fsdp, "model")
+    elif name == "w_down":
+        tail = ("model", None, fsdp) if is_moe else ("model", fsdp)
+    elif name == "wq_a" or name == "wkv_a":
+        tail = (fsdp, None)
+    elif name in ("wq_b", "wk_b", "wv_b"):
+        tail = (None, "model", None)
+    elif name == "in_proj":
+        tail = (fsdp, "model")
+    elif name == "out_proj":
+        tail = ("model", fsdp)
+    elif name == "conv_w":
+        tail = (None, "model")
+    elif name in ("conv_b", "dt_bias", "D"):
+        tail = ("model",)
+    elif name == "x_proj":
+        tail = ("model", None)
+    elif name == "dt_proj":
+        tail = (None, "model")
+    elif name == "A_log":
+        # mamba1: (..., d_in, state) — shard d_in;  mamba2: (..., nh) —
+        # shard the head dim.  d_in is always >= 512 in real configs.
+        if len(shape) >= 2 and shape[-2] >= 512:
+            tail = ("model", None)
+        else:
+            tail = ("model",)
+    else:  # norms, scales, small vectors -> replicated
+        return P(*([None] * len(shape)))
+
+    if ep_only and not is_moe:
+        # strip tensor parallelism: any 'model' entry becomes replicated
+        tail = tuple(None if a == "model" else a for a in tail)
+    spec = pad(tail)
+    return guarded_spec(mesh, shape, spec)
+
+
+def param_shardings(abstract_params, mesh: Mesh, strategy: str = "fsdp_tp"):
+    """NamedSharding tree for a parameter pytree (abstract or concrete).
+
+    ``strategy='fsdp_tp'`` (default): weights sharded FSDP over the batch
+    axes x TP over ``model``.  ``strategy='pure_fsdp'``: no tensor
+    parallelism — weights fully sharded over *every* mesh axis and
+    activations batch-sharded over every axis; optimal for models whose
+    per-shard TP matmuls would be tiny relative to the TP all-reduces
+    (see EXPERIMENTS.md §Perf, llama3.2-1b iteration).
+    """
+    if strategy == "pure_fsdp":
+        all_axes = tuple(mesh.axis_names)
+        fsdp = all_axes if len(all_axes) > 1 else all_axes[0]
+        n = _axis_size(mesh, fsdp)
+
+        def one(path_parts, leaf):
+            # shard the largest dimension divisible by the full device
+            # count; small tensors (norm scales, biases) stay replicated
+            spec = [None] * len(leaf.shape)
+            for i, d in sorted(enumerate(leaf.shape), key=lambda t: -t[1]):
+                if d > 0 and d % n == 0:
+                    spec[i] = fsdp
+                    break
+            return NamedSharding(mesh, P(*spec))
+
+        return _tree_map_with_path(one, abstract_params)
+
+    fsdp = data_axes(mesh)
+    fsdp = fsdp if len(fsdp) > 1 else fsdp[0]
+    ep_only = strategy == "fsdp_ep"
+
+    def one(path_parts, leaf):
+        path = "/".join(str(p) for p in path_parts)
+        spec = _param_rule(path, leaf.shape, mesh, fsdp, ep_only=ep_only)
+        return NamedSharding(mesh, spec)
+
+    return _tree_map_with_path(one, abstract_params)
+
+
+def _tree_map_with_path(fn, tree):
+    def convert(kp, leaf):
+        parts = []
+        for entry in kp:
+            if hasattr(entry, "key"):
+                parts.append(entry.key)
+            elif hasattr(entry, "idx"):
+                parts.append(str(entry.idx))
+            else:
+                parts.append(str(entry))
+        return fn(parts, leaf)
+
+    return jax.tree_util.tree_map_with_path(convert, tree)
+
+
+def state_shardings(abstract_state, mesh: Mesh):
+    """Train state: params + AdamW moments inherit the param layout
+    (ZeRO); scalars replicated."""
+    p_shard = param_shardings(abstract_state["params"], mesh)
+    out = {"params": p_shard}
+    if "opt" in abstract_state:
+        out["opt"] = {
+            "mu": param_shardings(abstract_state["opt"]["mu"], mesh),
+            "nu": param_shardings(abstract_state["opt"]["nu"], mesh),
+            "step": NamedSharding(mesh, P()),
+        }
+    if "error_feedback" in abstract_state:
+        out["error_feedback"] = param_shardings(
+            abstract_state["error_feedback"], mesh
+        )
+    return out
+
+
+# --------------------------------------------------------------------- #
+# batch / cache rules
+# --------------------------------------------------------------------- #
+def batch_shardings(abstract_batch, mesh: Mesh):
+    """Training / prefill batches: leading batch dim over the DP axes."""
+    dp = data_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+
+    def one(leaf):
+        spec = guarded_spec(
+            mesh, leaf.shape, (dp,) + (None,) * (len(leaf.shape) - 1)
+        )
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map(one, abstract_batch)
+
+
+def cache_shardings(abstract_cache_tree, mesh: Mesh, batch_size: int):
+    """Decode caches.
+
+    Layout per leaf (layer-stacked): (L, b, S, heads, hd) for KV caches,
+    (L, b, ...) for SSM states.  If the batch divides the DP axes, shard
+    batch; otherwise (long-context, batch=1) shard the sequence axis of KV
+    caches / the widest state axis of SSM states over ``data``
+    (context parallelism).
+    """
+    dp = data_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+    dp_size = _axis_size(mesh, dp)
+    batch_fits = batch_size % dp_size == 0 and batch_size >= dp_size
+
+    def one(leaf):
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        if len(shape) >= 2:
+            if batch_fits:
+                spec[1] = dp
+            elif len(shape) >= 3:
+                # context parallel: shard the largest non-batch axis
+                spec[2] = "data"
+            # shard heads/feature dim over model where possible
+            if len(shape) >= 4:
+                spec[3] = "model"
+            elif len(shape) == 3 and not batch_fits:
+                pass
+        return NamedSharding(mesh, guarded_spec(mesh, shape, spec))
+
+    return jax.tree_util.tree_map(one, abstract_cache_tree)

@@ -1,0 +1,143 @@
+"""GQA attention: chunked-causal training path + KV-cache decode path.
+
+Training attention is *query-chunked*: scores are materialised only for
+one query block at a time ((b, h, q_chunk, S) instead of (b, h, S, S)),
+which bounds activation memory at long sequence lengths without a custom
+kernel; XLA pipelines the chunk loop.  Heads shard over the ``model`` mesh
+axis, batch over ``data`` — see ``repro.launch.sharding``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import COMPUTE_DTYPE, apply_mrope, apply_rope, dense_init, l2norm
+
+NEG_INF = -1e30
+
+
+def attention_init(key, cfg):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    params = {
+        "wq": dense_init(k1, (d, h, hd)),
+        "wk": dense_init(k2, (d, kv, hd)),
+        "wv": dense_init(k3, (d, kv, hd)),
+        "wo": dense_init(k4, (h, hd, d)),
+    }
+    if cfg.qk_norm:
+        params["q_scale"] = jnp.ones((hd,), dtype=jnp.float32)
+        params["k_scale"] = jnp.ones((hd,), dtype=jnp.float32)
+    return params
+
+
+def _project_qkv(params, x, cfg, positions, mrope_positions=None):
+    dtype = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dtype))
+    if cfg.qk_norm:
+        q = l2norm(q) * params["q_scale"].astype(dtype)
+        k = l2norm(k) * params["k_scale"].astype(dtype)
+    if cfg.mrope_sections is not None and mrope_positions is not None:
+        q = apply_mrope(q, mrope_positions, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, mrope_positions, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def chunked_attention(q, k, v, *, causal: bool, chunk: int, q_offset: int = 0):
+    """Query-chunked attention.
+
+    q: (b, s_q, h, hd); k, v: (b, s_kv, n_kv, hd).  GQA is expressed by
+    reshaping q to (b, s, n_kv, group, hd) so the einsum never tiles KV.
+    """
+    b, s_q, h, hd = q.shape
+    n_kv = k.shape[2]
+    group = h // n_kv
+    scale = hd**-0.5
+    q = q.reshape(b, s_q, n_kv, group, hd) * scale
+
+    n_chunks = max(s_q // chunk, 1)
+    chunk = s_q // n_chunks
+    q_chunks = q.reshape(b, n_chunks, chunk, n_kv, group, hd)
+    q_chunks = jnp.moveaxis(q_chunks, 1, 0)  # (n_chunks, b, chunk, kv, g, hd)
+
+    kv_pos = jnp.arange(k.shape[1])
+
+    def one_chunk(carry, qc_and_idx):
+        qc, idx = qc_and_idx
+        scores = jnp.einsum("bqkgd,bskd->bkgqs", qc, k).astype(jnp.float32)
+        if causal:
+            q_pos = q_offset + idx * chunk + jnp.arange(chunk)
+            mask = kv_pos[None, :] <= q_pos[:, None]  # (chunk, s_kv)
+            scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(qc.dtype)
+        out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+        return carry, out
+
+    _, outs = jax.lax.scan(
+        one_chunk, None, (q_chunks, jnp.arange(n_chunks))
+    )
+    outs = jnp.moveaxis(outs, 0, 1)  # (b, n_chunks, chunk, kv, g, hd)
+    return outs.reshape(b, s_q, h, hd)
+
+
+def attention_apply(
+    params,
+    x,
+    cfg,
+    positions,
+    *,
+    causal: bool = True,
+    mrope_positions=None,
+):
+    """Full-sequence (training / prefill) attention."""
+    q, k, v = _project_qkv(params, x, cfg, positions, mrope_positions)
+    out = chunked_attention(
+        q, k, v, causal=causal, chunk=min(cfg.attn_chunk, x.shape[1])
+    )
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+
+
+def attention_decode(
+    params,
+    x,
+    cfg,
+    cache_k,
+    cache_v,
+    cache_len,
+    *,
+    mrope_positions=None,
+):
+    """Single-token decode against a KV cache.
+
+    x: (b, 1, d); cache_k/v: (b, S, n_kv, hd); cache_len: scalar int32 —
+    the number of valid cache entries (new token is written at that slot).
+    """
+    dtype = x.dtype
+    positions = jnp.full((x.shape[0], 1), cache_len, dtype=jnp.int32)
+    q, k_new, v_new = _project_qkv(params, x, cfg, positions, mrope_positions)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k_new.astype(cache_k.dtype), cache_len, axis=1
+    )
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v_new.astype(cache_v.dtype), cache_len, axis=1
+    )
+    b, _, h, hd = q.shape
+    n_kv = cache_k.shape[2]
+    group = h // n_kv
+    qg = q.reshape(b, 1, n_kv, group, hd) * hd**-0.5
+    scores = jnp.einsum(
+        "bqkgd,bskd->bkgqs", qg, cache_k.astype(dtype)
+    ).astype(jnp.float32)
+    valid = jnp.arange(cache_k.shape[1])[None, :] <= cache_len
+    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, cache_v.astype(dtype))
+    out = out.reshape(b, 1, h, hd)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dtype))
+    return y, cache_k, cache_v

@@ -1,0 +1,141 @@
+"""Shared model layers: norms, RoPE / M-RoPE, SwiGLU, embeddings.
+
+Pure-function style: parameters are nested dicts of jax arrays, every
+layer is ``apply(params, x, ...)``.  Parameters are stored f32 and cast to
+the compute dtype (bf16) inside the blocks (mixed-precision discipline).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+COMPUTE_DTYPE = jnp.bfloat16
+PARAM_DTYPE = jnp.float32
+
+
+# --------------------------------------------------------------------- #
+# init helpers
+# --------------------------------------------------------------------- #
+def dense_init(key, shape, scale: float | None = None):
+    fan_in = shape[0] if len(shape) >= 1 else 1
+    scale = scale if scale is not None else fan_in**-0.5
+    return (jax.random.normal(key, shape) * scale).astype(PARAM_DTYPE)
+
+
+def embed_init(key, shape):
+    return (jax.random.normal(key, shape) * 0.02).astype(PARAM_DTYPE)
+
+
+# --------------------------------------------------------------------- #
+# RMSNorm
+# --------------------------------------------------------------------- #
+def rmsnorm_init(d: int):
+    return {"scale": jnp.ones((d,), dtype=PARAM_DTYPE)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"]).astype(dtype)
+
+
+def l2norm(x, eps: float = 1e-6):
+    """Head-dim L2 norm used by qk_norm variants without learned scale."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dtype)
+
+
+# --------------------------------------------------------------------- #
+# rotary embeddings
+# --------------------------------------------------------------------- #
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: (..., s, h, d_head); positions: broadcastable to (..., s)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)  # (d/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,s,1,d/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    out = jnp.stack([y1, y2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions_3d, sections, theta: float = 10_000.0):
+    """Multimodal RoPE (Qwen2-VL): the head dim is split into (t, h, w)
+    sections, each rotated by its own position stream.
+
+    x: (b, s, heads, d); positions_3d: (b, 3, s); sections: per-axis
+    *pair* counts summing to d/2.
+    """
+    d = x.shape[-1]
+    assert sum(sections) == d // 2, "M-RoPE sections must sum to d_head/2"
+    freqs = rope_frequencies(d, theta)  # (d/2,)
+    # build per-pair position ids by section
+    sec_ids = jnp.concatenate(
+        [jnp.full((n,), i, dtype=jnp.int32) for i, n in enumerate(sections)]
+    )  # (d/2,)
+    # positions_3d: (b, 3, s) -> per pair (b, s, d/2)
+    pos = jnp.take(positions_3d, sec_ids, axis=1)  # (b, d/2, s)
+    pos = jnp.swapaxes(pos, 1, 2)  # (b, s, d/2)
+    angles = pos[..., None, :].astype(jnp.float32) * freqs  # (b, s, 1, d/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    out = jnp.stack([y1, y2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# SwiGLU MLP
+# --------------------------------------------------------------------- #
+def mlp_init(key, d: int, f: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d, f)),
+        "w_up": dense_init(k2, (d, f)),
+        "w_down": dense_init(k3, (f, d)),
+    }
+
+
+def mlp_apply(params, x):
+    dtype = x.dtype
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"].astype(dtype))
+    u = jnp.einsum("...d,df->...f", x, params["w_up"].astype(dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(dtype) * u
+    return jnp.einsum("...f,fd->...d", h, params["w_down"].astype(dtype))
+
+
+# --------------------------------------------------------------------- #
+# embeddings / unembedding
+# --------------------------------------------------------------------- #
+def embedding_init(key, vocab: int, d: int, tied: bool):
+    k1, k2 = jax.random.split(key)
+    params = {"embed": embed_init(k1, (vocab, d))}
+    if not tied:
+        params["unembed"] = dense_init(k2, (d, vocab))
+    return params
+
+
+def embed_tokens(params, tokens):
+    return params["embed"][tokens].astype(COMPUTE_DTYPE)
+
+
+def unembed(params, x):
+    if "unembed" in params:
+        w = params["unembed"].astype(x.dtype)
+        return jnp.einsum("...d,dv->...v", x, w)
+    w = params["embed"].astype(x.dtype)
+    return jnp.einsum("...d,vd->...v", x, w)

@@ -1,0 +1,125 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Queries and KV are projected through low-rank latents; only the compressed
+KV latent (kv_lora_rank) plus the shared RoPE key (qk_rope_dim) are cached
+at decode time.  The decode path uses the *absorbed* formulation: W_UK is
+folded into the query and W_UV into the output so scores and values are
+computed directly against the cached latent — the latency win that makes
+MLA serve-efficient.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import NEG_INF
+from .layers import apply_rope, dense_init, rmsnorm, rmsnorm_init
+
+
+def mla_init(key, cfg):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "wq_a": dense_init(ks[0], (d, m.q_lora_rank)),
+        "q_norm": rmsnorm_init(m.q_lora_rank),
+        "wq_b": dense_init(ks[1], (m.q_lora_rank, h, qk)),
+        "wkv_a": dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_dim)),
+        "kv_norm": rmsnorm_init(m.kv_lora_rank),
+        "wk_b": dense_init(ks[3], (m.kv_lora_rank, h, m.qk_nope_dim)),
+        "wv_b": dense_init(ks[4], (m.kv_lora_rank, h, m.v_head_dim)),
+        "wo": dense_init(ks[5], (h, m.v_head_dim, d)),
+    }
+
+
+def _project_latents(params, x, cfg, positions):
+    """Shared Q/KV latent computation; returns per-head q and the caches."""
+    m = cfg.mla
+    dtype = x.dtype
+    cq = jnp.einsum("bsd,dr->bsr", x, params["wq_a"].astype(dtype))
+    cq = rmsnorm(params["q_norm"], cq)
+    q = jnp.einsum("bsr,rhk->bshk", cq, params["wq_b"].astype(dtype))
+    q_nope, q_rope = (
+        q[..., : m.qk_nope_dim],
+        q[..., m.qk_nope_dim :],
+    )
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"].astype(dtype))
+    c_kv = rmsnorm(params["kv_norm"], ckv_full[..., : m.kv_lora_rank])
+    k_rope = ckv_full[..., m.kv_lora_rank :][:, :, None, :]  # (b,s,1,rope)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0, :]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_apply(params, x, cfg, positions, *, causal: bool = True):
+    """Training / prefill path: materialise per-head K/V and attend."""
+    m = cfg.mla
+    dtype = x.dtype
+    q_nope, q_rope, c_kv, k_rope = _project_latents(params, x, cfg, positions)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, params["wk_b"].astype(dtype))
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, params["wv_b"].astype(dtype))
+
+    b, s, h, _ = q_nope.shape
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    chunk = min(cfg.attn_chunk, s)
+    n_chunks = max(s // chunk, 1)
+    chunk = s // n_chunks
+
+    kv_pos = jnp.arange(s)
+
+    def one_chunk(_, qs):
+        qn, qr, idx = qs
+        scores = (
+            jnp.einsum("bqhk,bshk->bhqs", qn, k_nope)
+            + jnp.einsum("bqhk,bsk->bhqs", qr, k_rope)
+        ).astype(jnp.float32) * scale
+        if causal:
+            q_pos = idx * chunk + jnp.arange(chunk)
+            mask = kv_pos[None, :] <= q_pos[:, None]
+            scores = jnp.where(mask[None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(dtype)
+        return None, jnp.einsum("bhqs,bshk->bqhk", probs, v)
+
+    qn_c = jnp.moveaxis(q_nope.reshape(b, n_chunks, chunk, h, -1), 1, 0)
+    qr_c = jnp.moveaxis(q_rope.reshape(b, n_chunks, chunk, h, -1), 1, 0)
+    _, outs = jax.lax.scan(one_chunk, None, (qn_c, qr_c, jnp.arange(n_chunks)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, h, m.v_head_dim)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dtype))
+
+
+def mla_decode(params, x, cfg, cache_ckv, cache_krope, cache_len):
+    """Absorbed single-token decode.
+
+    cache_ckv: (b, S, kv_lora_rank); cache_krope: (b, S, qk_rope_dim).
+    Scores:  q_nope W_UK^T . c_kv  +  q_rope . k_rope
+    Output:  (probs . c_kv) W_UV   -> heads -> W_O
+    """
+    m = cfg.mla
+    dtype = x.dtype
+    positions = jnp.full((x.shape[0], 1), cache_len, dtype=jnp.int32)
+    q_nope, q_rope, c_kv_new, k_rope_new = _project_latents(
+        params, x, cfg, positions
+    )
+    cache_ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache_ckv, c_kv_new.astype(cache_ckv.dtype), cache_len, axis=1
+    )
+    cache_krope = jax.lax.dynamic_update_slice_in_dim(
+        cache_krope, k_rope_new.astype(cache_krope.dtype), cache_len, axis=1
+    )
+    # absorb W_UK into q: (b,1,h,nope) x (r,h,nope) -> (b,1,h,r)
+    q_lat = jnp.einsum("bqhk,rhk->bqhr", q_nope, params["wk_b"].astype(dtype))
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    scores = (
+        jnp.einsum("bqhr,bsr->bhqs", q_lat, cache_ckv.astype(dtype))
+        + jnp.einsum("bqhk,bsk->bhqs", q_rope, cache_krope.astype(dtype))
+    ).astype(jnp.float32) * scale
+    valid = jnp.arange(cache_ckv.shape[1])[None, :] <= cache_len
+    scores = jnp.where(valid[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(dtype)
+    out_lat = jnp.einsum("bhqs,bsr->bqhr", probs, cache_ckv.astype(dtype))
+    out = jnp.einsum("bqhr,rhk->bqhk", out_lat, params["wv_b"].astype(dtype))
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dtype))
+    return y, cache_ckv, cache_krope

@@ -1,0 +1,84 @@
+"""Public model facade: build / init / apply for any registered arch."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from . import transformer
+
+__all__ = ["init_params", "abstract_params", "input_specs", "Model"]
+
+
+def init_params(key, cfg: ModelConfig):
+    return transformer.init_params(key, cfg)
+
+
+def abstract_params(cfg: ModelConfig):
+    """Parameter ShapeDtypeStructs without allocating (dry-run path)."""
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: transformer.init_params(k, cfg), key)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, *, per_host: int | None = None):
+    """ShapeDtypeStruct stand-ins for every model input of a cell.
+
+    train/prefill: full-sequence batch.  decode: one new token plus the
+    KV/SSM cache of ``seq_len`` (built via ``init_cache`` eval_shape).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.family == "vlm":
+            # stub vision frontend: precomputed patch embeddings (1/4 of
+            # the span is vision, matching dynamic-resolution image packing)
+            n_vis = max(s // 4, 16)
+            batch["tokens"] = jax.ShapeDtypeStruct((b, s - n_vis), i32)
+            batch["vision_embeds"] = jax.ShapeDtypeStruct(
+                (b, n_vis, cfg.d_model), jnp.bfloat16
+            )
+        if cfg.family == "encdec":
+            # stub audio frontend: precomputed frame embeddings, 2x the
+            # target length (speech-to-text ratio)
+            batch["src_embeds"] = jax.ShapeDtypeStruct(
+                (b, min(2 * s, 8192), cfg.d_model), jnp.bfloat16
+            )
+        return batch
+    # decode: one token + cache of seq_len
+    cache = jax.eval_shape(lambda: transformer.init_cache(cfg, b, s))
+    batch = {
+        "token": jax.ShapeDtypeStruct((b, 1), i32),
+        "cache": cache,
+        "cache_len": jax.ShapeDtypeStruct((), i32),
+    }
+    if cfg.family == "encdec":
+        batch["memory"] = jax.ShapeDtypeStruct(
+            (b, 1024, cfg.d_model), jnp.bfloat16
+        )
+    return batch
+
+
+class Model:
+    """Thin OO wrapper used by examples and the serving loop."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def init(self, key):
+        return init_params(key, self.cfg)
+
+    def loss(self, params, batch):
+        return transformer.forward_train(params, self.cfg, batch)
+
+    def logits(self, params, batch):
+        return transformer.forward_logits(params, self.cfg, batch)
+
+    def init_cache(self, batch: int, max_len: int):
+        return transformer.init_cache(self.cfg, batch, max_len)
+
+    def decode_step(self, params, token, cache, cache_len, memory=None):
+        return transformer.decode_step(
+            params, self.cfg, token, cache, cache_len, memory=memory
+        )

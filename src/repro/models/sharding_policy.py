@@ -1,0 +1,79 @@
+"""Activation-sharding policy.
+
+GSPMD propagates input shardings, but propagation alone can settle in
+pathological layouts (e.g. feature-sharded activations with a replicated
+batch).  Production frameworks pin the layout at a few anchor points with
+``with_sharding_constraint``; models call :func:`constrain` with logical
+axis names and the launcher installs the physical mapping:
+
+    batch  -> ('pod', 'data')     model -> 'model'      None -> replicated
+
+When no policy is installed (CPU unit tests), ``constrain`` is a no-op.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+_POLICY: dict | None = None
+
+
+def set_policy_from_mesh(mesh: Mesh, *, sequence_parallel: bool = False,
+                         strategy: str = "fsdp_tp") -> None:
+    if strategy == "pure_fsdp":
+        axes = tuple(mesh.axis_names)
+        batch = axes if len(axes) > 1 else (axes[0] if axes else None)
+        set_policy(batch, None, dict(zip(mesh.axis_names, mesh.devices.shape)))
+        return
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    batch = batch_axes if len(batch_axes) > 1 else (batch_axes[0] if batch_axes else None)
+    model = "model" if "model" in mesh.axis_names else None
+    set_policy(batch, model, dict(zip(mesh.axis_names, mesh.devices.shape)),
+               sequence_parallel=sequence_parallel)
+
+
+def set_policy(batch_axes, model_axis, axis_sizes: dict, *,
+               sequence_parallel: bool = False) -> None:
+    global _POLICY
+    _POLICY = {
+        "batch": batch_axes,
+        "model": model_axis,
+        # 'seq' maps the logical sequence dim of the residual stream onto
+        # the model axis (Megatron sequence parallelism): the per-layer TP
+        # output all-reduce becomes all-gather + reduce-scatter and every
+        # elementwise/norm op runs on 1/TP of the tokens.
+        "seq": model_axis if sequence_parallel else None,
+        "sizes": dict(axis_sizes),
+    }
+
+
+def clear_policy() -> None:
+    global _POLICY
+    _POLICY = None
+
+
+def _axis_size(axis, sizes) -> int:
+    n = 1
+    for a in (axis if isinstance(axis, tuple) else (axis,)):
+        n *= sizes.get(a, 1)
+    return n
+
+
+def constrain(x, dims: tuple):
+    """dims entries: 'batch' | 'model' | None per array dimension."""
+    if _POLICY is None:
+        return x
+    sizes = _POLICY["sizes"]
+    spec = []
+    for d, size in zip(dims, x.shape):
+        axis = _POLICY.get(d) if d else None
+        if axis is None:
+            spec.append(None)
+            continue
+        # divisibility guard: replicate when the dim does not divide
+        spec.append(axis if size % _axis_size(axis, sizes) == 0 else None)
+    return jax.lax.with_sharding_constraint(x, P(*spec))

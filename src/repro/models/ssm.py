@@ -1,0 +1,291 @@
+"""State-space blocks: Mamba-1 (selective scan) and Mamba-2 (SSD).
+
+Both use *chunked* scans: the sequence is split into blocks; within a
+block the recurrence is computed in parallel (associative scan for
+Mamba-1, matmul form for Mamba-2/SSD — the MXU-friendly formulation), and
+a lightweight ``lax.scan`` carries the state across blocks.  Decode is the
+O(1)-state single-step recurrence — this is what makes the SSM archs the
+designated ``long_500k`` runners.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+
+# ===================================================================== #
+# Mamba-1
+# ===================================================================== #
+def mamba1_init(key, cfg):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    dt_rank = max(d // 16, 1)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_in)),
+        "conv_w": dense_init(ks[1], (s.conv_dim, d_in), scale=s.conv_dim**-0.5),
+        "conv_b": jnp.zeros((d_in,), jnp.float32),
+        "x_proj": dense_init(ks[2], (d_in, dt_rank + 2 * s.state_dim)),
+        "dt_proj": dense_init(ks[3], (dt_rank, d_in), scale=dt_rank**-0.5),
+        "dt_bias": jnp.zeros((d_in,), jnp.float32),
+        "A_log": jnp.log(
+            jnp.broadcast_to(
+                jnp.arange(1, s.state_dim + 1, dtype=jnp.float32), (d_in, s.state_dim)
+            )
+        ),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[4], (d_in, d)),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv: x (b, l, d_in), w (k, d_in)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    return out + b[None, None, :]
+
+
+def _mamba1_gates(params, x, cfg):
+    """Common projections; returns (a, bx, C, z, x_conv) all (b,l,...)."""
+    s = cfg.ssm
+    dtype = x.dtype
+    d_in = params["conv_b"].shape[0]
+    dt_rank = params["dt_proj"].shape[0]
+    xz = jnp.einsum("bld,de->ble", x, params["in_proj"].astype(dtype))
+    xi, z = xz[..., :d_in], xz[..., d_in:]
+    xc = jax.nn.silu(
+        _causal_conv(xi, params["conv_w"].astype(dtype), params["conv_b"].astype(dtype))
+        .astype(jnp.float32)
+    )
+    proj = jnp.einsum(
+        "bld,de->ble", xc.astype(dtype), params["x_proj"].astype(dtype)
+    ).astype(jnp.float32)
+    dt, B, C = (
+        proj[..., :dt_rank],
+        proj[..., dt_rank : dt_rank + s.state_dim],
+        proj[..., dt_rank + s.state_dim :],
+    )
+    delta = jax.nn.softplus(
+        jnp.einsum("blr,rd->bld", dt, params["dt_proj"].astype(jnp.float32))
+        + params["dt_bias"]
+    )  # (b, l, d_in)
+    A = -jnp.exp(params["A_log"])  # (d_in, n)
+    a = jnp.exp(delta[..., None] * A[None, None])  # (b, l, d_in, n)
+    bx = (delta * xc)[..., None] * B[:, :, None, :]  # (b, l, d_in, n)
+    return a, bx, C, z, xc
+
+
+def mamba1_apply(params, x, cfg):
+    """Training/prefill forward. x: (b, l, d)."""
+    s = cfg.ssm
+    dtype = x.dtype
+    a, bx, C, z, xc = _mamba1_gates(params, x, cfg)
+    b_, l, d_in, n = a.shape
+    chunk = min(s.chunk, l)
+    n_chunks = max(l // chunk, 1)
+    chunk = l // n_chunks
+
+    a_c = jnp.moveaxis(a.reshape(b_, n_chunks, chunk, d_in, n), 1, 0)
+    bx_c = jnp.moveaxis(bx.reshape(b_, n_chunks, chunk, d_in, n), 1, 0)
+
+    def assoc(left, right):
+        al, bl = left
+        ar, br = right
+        return al * ar, br + ar * bl
+
+    def one_chunk(h, inputs):
+        ac, bc = inputs  # (b, chunk, d_in, n)
+        pa, pb = jax.lax.associative_scan(assoc, (ac, bc), axis=1)
+        hs = pb + pa * h[:, None]  # (b, chunk, d_in, n)
+        return hs[:, -1], hs
+
+    h0 = jnp.zeros((b_, d_in, n), dtype=a.dtype)
+    _, hs = jax.lax.scan(one_chunk, h0, (a_c, bx_c))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(b_, l, d_in, n)
+    y = jnp.einsum("bldn,bln->bld", hs, C) + params["D"] * xc
+    y = y.astype(dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(dtype)
+    return jnp.einsum("bld,de->ble", y, params["out_proj"].astype(dtype))
+
+
+def mamba1_decode(params, x, cfg, conv_state, ssm_state):
+    """Single-token decode. x: (b, 1, d); conv_state: (b, k-1, d_in);
+    ssm_state: (b, d_in, n)."""
+    s = cfg.ssm
+    dtype = x.dtype
+    d_in = params["conv_b"].shape[0]
+    dt_rank = params["dt_proj"].shape[0]
+    xz = jnp.einsum("bld,de->ble", x, params["in_proj"].astype(dtype))
+    xi, z = xz[..., :d_in], xz[..., d_in:]
+    window = jnp.concatenate([conv_state.astype(dtype), xi], axis=1)  # (b,k,d_in)
+    conv_state_new = window[:, 1:]
+    w = params["conv_w"].astype(dtype)
+    xc = jnp.einsum("bkd,kd->bd", window, w) + params["conv_b"].astype(dtype)
+    xc = jax.nn.silu(xc.astype(jnp.float32))  # (b, d_in)
+    # match the train path's precision: x_proj runs in compute dtype
+    proj = (xc.astype(dtype) @ params["x_proj"].astype(dtype)).astype(
+        jnp.float32
+    )
+    dt, B, C = (
+        proj[..., :dt_rank],
+        proj[..., dt_rank : dt_rank + s.state_dim],
+        proj[..., dt_rank + s.state_dim :],
+    )
+    delta = jax.nn.softplus(dt @ params["dt_proj"].astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    a = jnp.exp(delta[..., None] * A[None])  # (b, d_in, n)
+    h = a * ssm_state + (delta * xc)[..., None] * B[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, C) + params["D"] * xc
+    y = y.astype(dtype) * jax.nn.silu(z[:, 0].astype(jnp.float32)).astype(dtype)
+    out = jnp.einsum("bd,de->be", y, params["out_proj"].astype(dtype))
+    return out[:, None, :], conv_state_new, h
+
+
+# ===================================================================== #
+# Mamba-2 (SSD)
+# ===================================================================== #
+def mamba2_init(key, cfg):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    nh = s.n_ssm_heads or max(d_in // 64, 1)
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_in + 2 * s.state_dim + nh)),
+        "conv_w": dense_init(
+            ks[1], (s.conv_dim, d_in + 2 * s.state_dim), scale=s.conv_dim**-0.5
+        ),
+        "conv_b": jnp.zeros((d_in + 2 * s.state_dim,), jnp.float32),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "out_proj": dense_init(ks[2], (d_in, d)),
+    }
+
+
+def _mamba2_gates(params, x, cfg):
+    s = cfg.ssm
+    dtype = x.dtype
+    d = x.shape[-1]
+    d_in = s.expand * d
+    nh = params["A_log"].shape[0]
+    hd = d_in // nh
+    proj = jnp.einsum("bld,de->ble", x, params["in_proj"].astype(dtype))
+    z = proj[..., :d_in]
+    xBC = proj[..., d_in : 2 * d_in + 2 * s.state_dim]
+    dt_raw = proj[..., 2 * d_in + 2 * s.state_dim :]  # (b, l, nh)
+    xBC = jax.nn.silu(
+        _causal_conv(xBC, params["conv_w"].astype(dtype), params["conv_b"].astype(dtype))
+        .astype(jnp.float32)
+    ).astype(dtype)
+    xi = xBC[..., :d_in]
+    B = xBC[..., d_in : d_in + s.state_dim].astype(jnp.float32)
+    C = xBC[..., d_in + s.state_dim :].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (b,l,nh)
+    A = -jnp.exp(params["A_log"])  # (nh,)
+    xh = xi.reshape(*xi.shape[:-1], nh, hd)
+    return xh, B, C, dt, A, z
+
+
+def mamba2_apply(params, x, cfg):
+    """SSD chunked forward (matmul formulation). x: (b, l, d)."""
+    s = cfg.ssm
+    dtype = x.dtype
+    xh, B, C, dt, A, z = _mamba2_gates(params, x, cfg)
+    b_, l, nh, hd = xh.shape
+    n = s.state_dim
+    chunk = min(s.chunk, l)
+    n_chunks = max(l // chunk, 1)
+    chunk = l // n_chunks
+
+    # reshape into chunks
+    def to_chunks(t):
+        return jnp.moveaxis(
+            t.reshape(b_, n_chunks, chunk, *t.shape[2:]), 1, 0
+        )
+
+    xh_c, B_c, C_c, dt_c = map(to_chunks, (xh, B, C, dt))
+    loga = dt * A[None, None]  # (b, l, nh)
+    loga_c = to_chunks(loga)
+
+    def one_chunk(h, inputs):
+        xc, Bc, Cc, dtc, lac = inputs
+        # cumulative decay within chunk: (b, chunk, nh)
+        cum = jnp.cumsum(lac, axis=1)
+        # intra-chunk (attention-like) term
+        # decay(t, s) = exp(cum_t - cum_s) for s <= t
+        diff = cum[:, :, None, :] - cum[:, None, :, :]  # (b, t, s, nh)
+        tri = jnp.tril(jnp.ones((chunk, chunk), dtype=bool))
+        decay = jnp.where(tri[None, :, :, None], jnp.exp(diff), 0.0)
+        cb = jnp.einsum("btn,bsn->bts", Cc, Bc)  # (b, t, s)
+        w = cb[..., None] * decay * dtc[:, None]  # (b, t, s, nh)
+        y_intra = jnp.einsum("btsh,bshd->bthd", w, xc.astype(jnp.float32))
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum(
+            "btn,bhnd,bth->bthd",
+            Cc,
+            h,
+            jnp.exp(cum),
+        )
+        # new carried state
+        rem = cum[:, -1:, :] - cum  # decay from position to chunk end
+        state_in = jnp.einsum(
+            "bsn,bshd,bsh->bhnd",
+            Bc,
+            xc.astype(jnp.float32),
+            jnp.exp(rem) * dtc,
+        )
+        h_new = h * jnp.exp(cum[:, -1])[:, :, None, None] + state_in
+        return h_new, y_intra + y_inter
+
+    h0 = jnp.zeros((b_, nh, n, hd), dtype=jnp.float32)
+    _, ys = jax.lax.scan(
+        one_chunk, h0, (xh_c, B_c, C_c, dt_c, loga_c)
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(b_, l, nh, hd)
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b_, l, nh * hd).astype(dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(dtype)
+    return jnp.einsum("bld,de->ble", y, params["out_proj"].astype(dtype))
+
+
+def mamba2_decode(params, x, cfg, conv_state, ssm_state):
+    """Single-token SSD decode. conv_state: (b, k-1, d_conv_in);
+    ssm_state: (b, nh, n, hd)."""
+    s = cfg.ssm
+    dtype = x.dtype
+    d = x.shape[-1]
+    d_in = s.expand * d
+    nh = params["A_log"].shape[0]
+    hd = d_in // nh
+    proj = jnp.einsum("bld,de->ble", x, params["in_proj"].astype(dtype))
+    z = proj[..., :d_in][:, 0]
+    xBC = proj[..., d_in : 2 * d_in + 2 * s.state_dim]
+    dt_raw = proj[:, 0, 2 * d_in + 2 * s.state_dim :]
+    window = jnp.concatenate([conv_state.astype(dtype), xBC], axis=1)
+    conv_state_new = window[:, 1:]
+    w = params["conv_w"].astype(dtype)
+    xBC = jnp.einsum("bkd,kd->bd", window, w) + params["conv_b"].astype(dtype)
+    xBC = jax.nn.silu(xBC.astype(jnp.float32))
+    xi = xBC[..., :d_in]
+    B = xBC[..., d_in : d_in + s.state_dim]
+    C = xBC[..., d_in + s.state_dim :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (b,nh)
+    A = -jnp.exp(params["A_log"])
+    a = jnp.exp(dt * A[None])  # (b, nh)
+    xh = xi.reshape(-1, nh, hd)
+    h = (
+        ssm_state * a[:, :, None, None]
+        + jnp.einsum("bn,bhd,bh->bhnd", B, xh, dt)
+    )
+    y = jnp.einsum("bn,bhnd->bhd", C, h) + params["D"][None, :, None] * xh
+    y = y.reshape(-1, d_in).astype(dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(dtype)
+    out = jnp.einsum("bd,de->be", y, params["out_proj"].astype(dtype))
+    return out[:, None, :], conv_state_new, h

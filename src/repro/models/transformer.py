@@ -1,0 +1,523 @@
+"""Model composition: stage-structured transformer / SSM / hybrid LMs.
+
+A model is a sequence of homogeneous *stages*; each stage is a stack of
+identical layers whose parameters are stacked on a leading axis and
+executed with ``jax.lax.scan`` (small HLO, fast compiles at 61+ layers)
+with per-layer ``jax.checkpoint`` (remat).  Stage kinds:
+
+  attn_mlp   dense transformer block (GQA + SwiGLU)
+  attn_moe   GQA + shared/routed MoE
+  mla_mlp    multi-head latent attention + SwiGLU (DeepSeek dense prefix)
+  mla_moe    MLA + MoE (DeepSeek-V3)
+  mamba1     Mamba-1 selective-scan block
+  mamba2     Mamba-2 (SSD) block; hybrid models inject a *shared*
+             attention block every ``cfg.attn_every`` layers (Zamba2)
+  xattn_mlp  decoder block with cross-attention (encoder-decoder)
+
+Entry points: ``init_params``, ``forward_train`` (loss), ``forward_logits``
+(prefill), ``init_cache`` + ``decode_step`` (serving).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import attention, mla, moe, ssm
+from .layers import (
+    COMPUTE_DTYPE,
+    embed_tokens,
+    embedding_init,
+    mlp_apply,
+    mlp_init,
+    rmsnorm,
+    rmsnorm_init,
+    unembed,
+)
+from .sharding_policy import constrain
+
+# --------------------------------------------------------------------- #
+# stage plan
+# --------------------------------------------------------------------- #
+def stage_plan(cfg) -> list[tuple[str, int]]:
+    if cfg.family in ("dense", "vlm"):
+        return [("attn_mlp", cfg.n_layers)]
+    if cfg.family == "moe":
+        if cfg.mla is not None:
+            plan = []
+            if cfg.moe.first_k_dense:
+                plan.append(("mla_mlp", cfg.moe.first_k_dense))
+            plan.append(("mla_moe", cfg.n_layers - cfg.moe.first_k_dense))
+            return plan
+        plan = []
+        if cfg.moe.first_k_dense:
+            plan.append(("attn_mlp", cfg.moe.first_k_dense))
+        plan.append(("attn_moe", cfg.n_layers - cfg.moe.first_k_dense))
+        return plan
+    if cfg.family == "ssm":
+        kind = "mamba2" if cfg.ssm.variant == "mamba2" else "mamba1"
+        return [(kind, cfg.n_layers)]
+    if cfg.family == "hybrid":
+        return [("mamba2" if cfg.ssm.variant == "mamba2" else "mamba1", cfg.n_layers)]
+    if cfg.family == "encdec":
+        return [("xattn_mlp", cfg.n_layers)]
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+# --------------------------------------------------------------------- #
+# per-layer init (vmapped into stacks)
+# --------------------------------------------------------------------- #
+def _layer_init(kind: str, key, cfg):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    if kind == "attn_mlp":
+        return {
+            "norm1": rmsnorm_init(cfg.d_model),
+            "attn": attention.attention_init(k1, cfg),
+            "norm2": rmsnorm_init(cfg.d_model),
+            "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff),
+        }
+    if kind == "attn_moe":
+        return {
+            "norm1": rmsnorm_init(cfg.d_model),
+            "attn": attention.attention_init(k1, cfg),
+            "norm2": rmsnorm_init(cfg.d_model),
+            "moe": moe.moe_init(k2, cfg),
+        }
+    if kind == "mla_mlp":
+        return {
+            "norm1": rmsnorm_init(cfg.d_model),
+            "attn": mla.mla_init(k1, cfg),
+            "norm2": rmsnorm_init(cfg.d_model),
+            "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff),
+        }
+    if kind == "mla_moe":
+        return {
+            "norm1": rmsnorm_init(cfg.d_model),
+            "attn": mla.mla_init(k1, cfg),
+            "norm2": rmsnorm_init(cfg.d_model),
+            "moe": moe.moe_init(k2, cfg),
+        }
+    if kind == "mamba1":
+        return {"norm1": rmsnorm_init(cfg.d_model), "mixer": ssm.mamba1_init(k1, cfg)}
+    if kind == "mamba2":
+        return {"norm1": rmsnorm_init(cfg.d_model), "mixer": ssm.mamba2_init(k1, cfg)}
+    if kind == "xattn_mlp":
+        return {
+            "norm1": rmsnorm_init(cfg.d_model),
+            "attn": attention.attention_init(k1, cfg),
+            "norm_x": rmsnorm_init(cfg.d_model),
+            "xattn": attention.attention_init(k3, cfg),
+            "norm2": rmsnorm_init(cfg.d_model),
+            "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff),
+        }
+    raise ValueError(kind)
+
+
+def init_params(key, cfg):
+    keys = jax.random.split(key, 8)
+    params = {"embedding": embedding_init(keys[0], cfg.vocab_size, cfg.d_model,
+                                          cfg.tie_embeddings)}
+    stages = []
+    for si, (kind, n) in enumerate(stage_plan(cfg)):
+        layer_keys = jax.random.split(jax.random.fold_in(keys[1], si), n)
+        stacked = jax.vmap(lambda k: _layer_init(kind, k, cfg))(layer_keys)
+        stages.append({"kind_params": stacked})
+    params["stages"] = stages
+    params["final_norm"] = rmsnorm_init(cfg.d_model)
+    if cfg.family == "hybrid" and cfg.attn_every:
+        params["shared_attn"] = {
+            "norm": rmsnorm_init(cfg.d_model),
+            "attn": attention.attention_init(keys[2], cfg),
+        }
+    if cfg.family == "encdec":
+        enc_keys = jax.random.split(keys[3], cfg.n_encoder_layers)
+        params["encoder"] = {
+            "layers": jax.vmap(lambda k: _layer_init("attn_mlp", k, cfg))(enc_keys),
+            "final_norm": rmsnorm_init(cfg.d_model),
+        }
+    if cfg.mtp_depth:
+        params["mtp"] = _layer_init("attn_mlp", keys[4], cfg)
+        params["mtp_norm"] = rmsnorm_init(cfg.d_model)
+    return params
+
+
+# --------------------------------------------------------------------- #
+# forward layers
+# --------------------------------------------------------------------- #
+def _apply_layer(kind, lp, x, cfg, positions, *, causal=True, memory=None,
+                 mrope_positions=None):
+    """One layer forward; returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn_mlp", "attn_moe"):
+        h = rmsnorm(lp["norm1"], x)
+        x = x + attention.attention_apply(
+            lp["attn"], h, cfg, positions, causal=causal,
+            mrope_positions=mrope_positions,
+        )
+        h = rmsnorm(lp["norm2"], x)
+        if kind == "attn_mlp":
+            x = x + mlp_apply(lp["mlp"], h)
+        else:
+            y, aux = moe.moe_apply(lp["moe"], h, cfg)
+            x = x + y
+    elif kind in ("mla_mlp", "mla_moe"):
+        h = rmsnorm(lp["norm1"], x)
+        x = x + mla.mla_apply(lp["attn"], h, cfg, positions, causal=causal)
+        h = rmsnorm(lp["norm2"], x)
+        if kind == "mla_mlp":
+            x = x + mlp_apply(lp["mlp"], h)
+        else:
+            y, aux = moe.moe_apply(lp["moe"], h, cfg)
+            x = x + y
+    elif kind == "mamba1":
+        x = x + ssm.mamba1_apply(lp["mixer"], rmsnorm(lp["norm1"], x), cfg)
+    elif kind == "mamba2":
+        x = x + ssm.mamba2_apply(lp["mixer"], rmsnorm(lp["norm1"], x), cfg)
+    elif kind == "xattn_mlp":
+        h = rmsnorm(lp["norm1"], x)
+        x = x + attention.attention_apply(lp["attn"], h, cfg, positions, causal=True)
+        h = rmsnorm(lp["norm_x"], x)
+        x = x + _cross_attention(lp["xattn"], h, memory, cfg)
+        h = rmsnorm(lp["norm2"], x)
+        x = x + mlp_apply(lp["mlp"], h)
+    else:
+        raise ValueError(kind)
+    return x, aux
+
+
+def _cross_attention(params, x, memory, cfg):
+    """Decoder->encoder cross attention (no RoPE on memory keys)."""
+    dtype = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dtype))
+    k = jnp.einsum("bsd,dhk->bshk", memory, params["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", memory, params["wv"].astype(dtype))
+    out = attention.chunked_attention(
+        q, k, v, causal=False, chunk=min(cfg.attn_chunk, x.shape[1])
+    )
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dtype))
+
+
+def _shared_attn_maybe(params, x, cfg, positions, layer_idx):
+    """Zamba2-style shared attention block every ``attn_every`` layers."""
+    if "shared_attn" not in params or not cfg.attn_every:
+        return x
+    sa = params["shared_attn"]
+
+    def apply_it(x):
+        h = rmsnorm(sa["norm"], x)
+        return x + attention.attention_apply(sa["attn"], h, cfg, positions,
+                                             causal=True)
+
+    return jax.lax.cond(
+        (layer_idx + 1) % cfg.attn_every == 0, apply_it, lambda x: x, x
+    )
+
+
+#: per-layer remat policy: 'full' recomputes everything in the backward
+#: pass (min memory); 'dots' saves matmul outputs (less recompute, more
+#: memory) — see EXPERIMENTS.md §Perf for the measured trade-off.
+REMAT_POLICY = "full"
+
+
+def set_remat_policy(name: str) -> None:
+    global REMAT_POLICY
+    assert name in ("full", "dots")
+    REMAT_POLICY = name
+
+
+def _run_stage(stage_params, kind, x, cfg, positions, params, *,
+               causal=True, memory=None, mrope_positions=None,
+               layer_offset=0):
+    """Scan a layer stack with remat; returns (x, aux_sum)."""
+
+    def body(carry, inputs):
+        x, aux = carry
+        # pin the residual stream: (b@dp, s[, @model if SP], d)
+        lp, idx = inputs
+        x = constrain(x, ("batch", "seq", None))
+        x, a = _apply_layer(
+            kind, lp, x, cfg, positions, causal=causal, memory=memory,
+            mrope_positions=mrope_positions,
+        )
+        if cfg.family == "hybrid":
+            x = _shared_attn_maybe(params, x, cfg, positions, idx)
+        return (x, aux + a), None
+
+    if REMAT_POLICY == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    else:
+        body = jax.checkpoint(body)
+    n_layers = jax.tree_util.tree_leaves(stage_params)[0].shape[0]
+    idxs = layer_offset + jnp.arange(n_layers)
+    (x, aux), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (stage_params, idxs)
+    )
+    return x, aux
+
+
+# --------------------------------------------------------------------- #
+# top-level forwards
+# --------------------------------------------------------------------- #
+def _cast_stage_params(stage_params):
+    """Cast matrix weights to the compute dtype *before* the layer scan so
+    the FSDP all-gather moves bf16, not f32 (halves the gather bytes —
+    EXPERIMENTS.md §Perf 'cast-before-gather').  Vectors (norm scales,
+    biases) stay f32: they are replicated, never gathered."""
+    return jax.tree_util.tree_map(
+        lambda a: a.astype(COMPUTE_DTYPE)
+        if (a.ndim >= 3 and a.dtype == jnp.float32) else a,
+        stage_params,
+    )
+
+
+def _backbone(params, cfg, x, positions, *, causal=True, memory=None,
+              mrope_positions=None):
+    aux_total = jnp.zeros((), jnp.float32)
+    offset = 0
+    for (kind, n), stage in zip(stage_plan(cfg), params["stages"]):
+        x, aux = _run_stage(
+            _cast_stage_params(stage["kind_params"]), kind, x, cfg,
+            positions, params,
+            causal=causal, memory=memory, mrope_positions=mrope_positions,
+            layer_offset=offset,
+        )
+        aux_total = aux_total + aux
+        offset += n
+    return rmsnorm(params["final_norm"], x), aux_total
+
+
+def _encode(params, cfg, src_embeds):
+    """Encoder stack over precomputed frontend embeddings (audio stub)."""
+    positions = jnp.arange(src_embeds.shape[1])[None, :]
+    x = src_embeds.astype(COMPUTE_DTYPE)
+    x, _ = _run_stage(
+        params["encoder"]["layers"], "attn_mlp", x, cfg, positions, params,
+        causal=False,
+    )
+    return rmsnorm(params["encoder"]["final_norm"], x)
+
+
+def _make_mrope_positions(cfg, batch, n_vis, n_text):
+    """Synthesized 3D (t, h, w) M-RoPE ids: vision patches on a grid, text
+    linear after the vision span (stub frontend discipline)."""
+    side = max(int(n_vis**0.5), 1)
+    t = jnp.concatenate([jnp.zeros((n_vis,), jnp.int32),
+                         jnp.arange(n_text, dtype=jnp.int32) + side])
+    hh = jnp.concatenate([(jnp.arange(n_vis, dtype=jnp.int32) // side),
+                          jnp.arange(n_text, dtype=jnp.int32) + side])
+    ww = jnp.concatenate([(jnp.arange(n_vis, dtype=jnp.int32) % side),
+                          jnp.arange(n_text, dtype=jnp.int32) + side])
+    pos = jnp.stack([t, hh, ww])  # (3, s)
+    return jnp.broadcast_to(pos[None], (batch, 3, n_vis + n_text))
+
+
+def forward_hidden(params, cfg, batch):
+    """Full-sequence forward -> final hidden states (pre-unembed)."""
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    x = constrain(embed_tokens(params["embedding"], tokens),
+                  ("batch", None, None))
+    mrope_positions = None
+    memory = None
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        vis = batch["vision_embeds"].astype(COMPUTE_DTYPE)
+        x = jnp.concatenate([vis, x], axis=1)
+        mrope_positions = _make_mrope_positions(
+            cfg, b, vis.shape[1], tokens.shape[1]
+        )
+    if cfg.family == "encdec":
+        memory = _encode(params, cfg, batch["src_embeds"])
+    positions = jnp.arange(x.shape[1])[None, :]
+    h, aux = _backbone(
+        params, cfg, x, positions, memory=memory,
+        mrope_positions=mrope_positions,
+    )
+    return h, aux
+
+
+def forward_logits(params, cfg, batch):
+    """Full-sequence forward -> logits (prefill / eval path)."""
+    h, aux = forward_hidden(params, cfg, batch)
+    logits = constrain(
+        unembed(params["embedding"], h), ("batch", None, "model")
+    )
+    return logits, aux
+
+
+def _xent(logits, targets):
+    lg = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, targets[..., None], axis=-1)[..., 0]
+    return (logz - gold).mean(), jnp.square(logz).mean()
+
+
+def forward_train(params, cfg, batch):
+    """Next-token loss (+ router aux + MTP head if configured)."""
+    tokens = batch["tokens"]
+    h, aux = forward_hidden(params, cfg, batch)
+    h = h[:, -tokens.shape[1] :]  # score only the text span (vlm prefix)
+    logits = constrain(
+        unembed(params["embedding"], h), ("batch", None, "model")
+    )
+    xent, z2 = _xent(logits[:, :-1], tokens[:, 1:])
+    zloss = 1e-4 * z2
+    loss = xent + zloss + aux
+    metrics = {"xent": xent, "aux": aux, "zloss": zloss}
+    if cfg.mtp_depth and "mtp" in params:
+        # DeepSeek-V3-style multi-token prediction: one extra dense block
+        # over the trunk hiddens predicts token t+2 with the shared head.
+        positions = jnp.arange(h.shape[1])[None, :]
+        h2, _ = _apply_layer("attn_mlp", params["mtp"], h, cfg, positions)
+        h2 = rmsnorm(params["mtp_norm"], h2)
+        mtp_logits = unembed(params["embedding"], h2)
+        mtp_xent, _ = _xent(mtp_logits[:, :-2], tokens[:, 2:])
+        loss = loss + 0.3 * mtp_xent
+        metrics["mtp_xent"] = mtp_xent
+    return loss, metrics
+
+
+# --------------------------------------------------------------------- #
+# serving: cache init + decode step
+# --------------------------------------------------------------------- #
+def init_cache(cfg, batch: int, max_len: int):
+    """Per-stage stacked caches (dtype bf16, layer-major)."""
+    hd, kv = cfg.head_dim, cfg.n_kv_heads
+    caches = []
+    for kind, n in stage_plan(cfg):
+        if kind in ("attn_mlp", "attn_moe", "xattn_mlp"):
+            caches.append({
+                "k": jnp.zeros((n, batch, max_len, kv, hd), COMPUTE_DTYPE),
+                "v": jnp.zeros((n, batch, max_len, kv, hd), COMPUTE_DTYPE),
+            })
+        elif kind in ("mla_mlp", "mla_moe"):
+            m = cfg.mla
+            caches.append({
+                "ckv": jnp.zeros((n, batch, max_len, m.kv_lora_rank), COMPUTE_DTYPE),
+                "krope": jnp.zeros((n, batch, max_len, m.qk_rope_dim), COMPUTE_DTYPE),
+            })
+        elif kind in ("mamba1", "mamba2"):
+            s = cfg.ssm
+            d_in = s.expand * cfg.d_model
+            conv_ch = d_in if kind == "mamba1" else d_in + 2 * s.state_dim
+            entry = {
+                "conv": jnp.zeros((n, batch, s.conv_dim - 1, conv_ch), COMPUTE_DTYPE),
+            }
+            if kind == "mamba1":
+                entry["ssm"] = jnp.zeros((n, batch, d_in, s.state_dim), jnp.float32)
+            else:
+                nh = s.n_ssm_heads or max(d_in // 64, 1)
+                entry["ssm"] = jnp.zeros(
+                    (n, batch, nh, s.state_dim, d_in // nh), jnp.float32
+                )
+            caches.append(entry)
+        else:
+            raise ValueError(kind)
+    shared = None
+    if cfg.family == "hybrid" and cfg.attn_every:
+        n_shared = cfg.n_layers // cfg.attn_every
+        shared = {
+            "k": jnp.zeros((n_shared, batch, max_len, kv, hd), COMPUTE_DTYPE),
+            "v": jnp.zeros((n_shared, batch, max_len, kv, hd), COMPUTE_DTYPE),
+        }
+    return {"stages": caches, "shared_attn": shared}
+
+
+def decode_step(params, cfg, token, cache, cache_len, *, memory=None):
+    """One serving step: token (b, 1) int32 -> (logits, new cache).
+
+    ``cache_len`` is the current number of valid positions (scalar int32).
+    """
+    x = embed_tokens(params["embedding"], token)
+    new_stage_caches = []
+    shared_cache = cache.get("shared_attn")
+    shared_idx = 0
+
+    for (kind, n), stage, sc in zip(
+        stage_plan(cfg), params["stages"], cache["stages"]
+    ):
+        if kind in ("attn_mlp", "attn_moe", "mla_mlp", "mla_moe", "xattn_mlp"):
+            def body(carry, inputs):
+                x, = carry
+                lp, c = inputs
+                h = rmsnorm(lp["norm1"], x)
+                if kind in ("mla_mlp", "mla_moe"):
+                    y, ckv, krope = mla.mla_decode(
+                        lp["attn"], h, cfg, c["ckv"], c["krope"], cache_len
+                    )
+                    new_c = {"ckv": ckv, "krope": krope}
+                else:
+                    y, ck, cv = attention.attention_decode(
+                        lp["attn"], h, cfg, c["k"], c["v"], cache_len
+                    )
+                    new_c = {"k": ck, "v": cv}
+                x = x + y
+                if kind == "xattn_mlp":
+                    h = rmsnorm(lp["norm_x"], x)
+                    x = x + _cross_attention(lp["xattn"], h, memory, cfg)
+                h = rmsnorm(lp["norm2"], x)
+                if kind in ("attn_mlp", "mla_mlp", "xattn_mlp"):
+                    x = x + mlp_apply(lp["mlp"], h)
+                else:
+                    y, _ = moe.moe_apply(lp["moe"], h, cfg)
+                    x = x + y
+                return (x,), new_c
+
+            (x,), new_c = jax.lax.scan(body, (x,), (stage["kind_params"], sc))
+            new_stage_caches.append(new_c)
+        elif kind in ("mamba1", "mamba2"):
+            decode_fn = ssm.mamba1_decode if kind == "mamba1" else ssm.mamba2_decode
+
+            def body(carry, inputs):
+                (x,) = carry
+                lp, c = inputs
+                h = rmsnorm(lp["norm1"], x)
+                y, conv, st = decode_fn(lp["mixer"], h, cfg, c["conv"], c["ssm"])
+                x = x + y
+                return (x,), {"conv": conv, "ssm": st}
+
+            every = cfg.attn_every if (cfg.family == "hybrid" and cfg.attn_every) else n
+            seg_bounds = list(range(0, n, every)) + [n]
+            new_c_parts = []
+            for lo, hi in zip(seg_bounds[:-1], seg_bounds[1:]):
+                seg_params = jax.tree_util.tree_map(
+                    lambda a: a[lo:hi], stage["kind_params"]
+                )
+                seg_cache = jax.tree_util.tree_map(lambda a: a[lo:hi], sc)
+                (x,), seg_new = jax.lax.scan(body, (x,), (seg_params, seg_cache))
+                new_c_parts.append(seg_new)
+                # shared attention block after each full segment (Zamba2)
+                if (
+                    cfg.family == "hybrid"
+                    and cfg.attn_every
+                    and shared_cache is not None
+                    and hi - lo == every
+                    and shared_idx < shared_cache["k"].shape[0]
+                ):
+                    sa = params["shared_attn"]
+                    h = rmsnorm(sa["norm"], x)
+                    y, ck, cv = attention.attention_decode(
+                        sa["attn"], h, cfg,
+                        shared_cache["k"][shared_idx],
+                        shared_cache["v"][shared_idx],
+                        cache_len,
+                    )
+                    x = x + y
+                    shared_cache = {
+                        "k": shared_cache["k"].at[shared_idx].set(ck),
+                        "v": shared_cache["v"].at[shared_idx].set(cv),
+                    }
+                    shared_idx += 1
+            new_c = jax.tree_util.tree_map(
+                lambda *parts: jnp.concatenate(parts, axis=0), *new_c_parts
+            )
+            new_stage_caches.append(new_c)
+        else:
+            raise ValueError(kind)
+
+    h = rmsnorm(params["final_norm"], x)
+    logits = unembed(params["embedding"], h)
+    return logits, {"stages": new_stage_caches, "shared_attn": shared_cache}

@@ -1,0 +1,5 @@
+"""Roofline analysis: HLO cost parsing + three-term roofline model."""
+
+from .hlo_cost import HloCost, analyze_hlo
+
+__all__ = ["HloCost", "analyze_hlo"]

@@ -1,0 +1,144 @@
+"""Three-term roofline model over dry-run artifacts.
+
+Hardware model (TPU v5e target):
+    peak_flops = 197e12  bf16 FLOP/s per chip
+    hbm_bw     = 819e9   B/s per chip
+    link_bw    = 50e9    B/s per ICI link
+
+Terms (seconds, per step, per device — the dry-run artifacts are already
+per-device):
+
+    compute    = HLO_FLOPs / peak_flops
+    memory     = HLO_bytes / hbm_bw
+    collective = collective_bytes / link_bw
+
+``collective_bytes`` counts each collective's *result* bytes once (ring
+all-reduce moves ~2x that on the wire; the constant factor does not change
+which term dominates, and is noted in EXPERIMENTS.md).
+
+MODEL_FLOPS (the "useful" floor) is ``6 * N * D`` for training (N = total
+params for dense, active params for MoE; D = tokens per step) and
+``2 * N * batch`` for a decode step.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+
+from ..configs import SHAPES, get_config
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+__all__ = ["RooflineRow", "roofline_row", "load_dryrun", "full_table",
+           "format_table"]
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops_per_dev: float
+    hlo_flops_per_dev: float
+    temp_bytes: float
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — how much compiled compute is useful."""
+        return (
+            self.model_flops_per_dev / self.hlo_flops_per_dev
+            if self.hlo_flops_per_dev
+            else 0.0
+        )
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-FLOPs throughput vs peak, given the *dominant* term paces
+        the step: (MODEL_FLOPS/peak) / max(term)."""
+        dom = max(self.compute_s, self.memory_s, self.collective_s)
+        if dom <= 0:
+            return 0.0
+        return (self.model_flops_per_dev / PEAK_FLOPS) / dom
+
+
+def model_flops_per_device(arch: str, shape_name: str, n_devices: int) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count() if cfg.moe is not None else cfg.param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens / n_devices
+    # decode / prefill-step: forward only
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens / n_devices
+    return 2.0 * n * shape.global_batch / n_devices
+
+
+def roofline_row(rec: dict) -> RooflineRow | None:
+    if rec.get("status") != "OK":
+        return None
+    mf = model_flops_per_device(rec["arch"], rec["shape"], rec["n_devices"])
+    return RooflineRow(
+        arch=rec["arch"],
+        shape=rec["shape"],
+        mesh=rec["mesh"],
+        compute_s=rec["flops_per_device"] / PEAK_FLOPS,
+        memory_s=rec["hbm_bytes_per_device"] / HBM_BW,
+        collective_s=rec["collective_total_per_device"] / LINK_BW,
+        model_flops_per_dev=mf,
+        hlo_flops_per_dev=rec["flops_per_device"],
+        temp_bytes=rec["memory"]["temp_bytes"] or 0,
+    )
+
+
+def load_dryrun(directory: str = "experiments/dryrun") -> list[dict]:
+    recs = []
+    for fname in sorted(os.listdir(directory)):
+        if fname.endswith(".json"):
+            with open(os.path.join(directory, fname)) as f:
+                recs.append(json.load(f))
+    return recs
+
+
+def full_table(directory: str = "experiments/dryrun", mesh: str = "single"):
+    rows = []
+    for rec in load_dryrun(directory):
+        if rec.get("mesh") != mesh:
+            continue
+        row = roofline_row(rec)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def format_table(rows: list[RooflineRow]) -> str:
+    hdr = (
+        f"{'arch':<22}{'shape':<13}{'compute_s':>11}{'memory_s':>11}"
+        f"{'coll_s':>10}{'bottleneck':>12}{'useful':>8}{'roofl%':>8}"
+    )
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r.arch:<22}{r.shape:<13}{r.compute_s:>11.4f}"
+            f"{r.memory_s:>11.4f}{r.collective_s:>10.4f}"
+            f"{r.bottleneck:>12}{r.useful_ratio:>8.2f}"
+            f"{100*r.roofline_fraction:>7.1f}%"
+        )
+    return "\n".join(lines)

@@ -1,0 +1,274 @@
+"""HLO-text cost model with loop-trip-count multipliers.
+
+``compiled.cost_analysis()`` counts every ``while`` body exactly once, so
+a scan-over-layers model under-reports FLOPs by ~n_layers and collective
+bytes by every loop factor.  This parser rebuilds per-device totals from
+the post-SPMD-partitioner HLO text:
+
+* the module is segmented into computations,
+* ``while`` ops give (caller, body, cond) edges; trip counts are read from
+  the loop-bound constant in the condition computation,
+* every computation's multiplier = product of enclosing trip counts
+  (propagated over the call graph, including fusion/call edges),
+* FLOPs are counted from ``dot`` / ``convolution`` result+contraction
+  shapes; collective bytes from the result shapes of all-gather /
+  all-reduce / reduce-scatter / all-to-all / collective-permute ops;
+  HBM traffic is approximated as bytes written (every op result) plus
+  parameter reads, post-fusion.
+
+All numbers are per-device (the partitioned module is per-device).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+__all__ = ["HloCost", "analyze_hlo"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(
+    r"\b(pred|bf16|f16|f32|f64|s4|u4|s8|u8|s16|u16|s32|u32|s64|u64|c64|c128)"
+    r"\[([\d,]*)\]"
+)
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_CALL_RE = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_COLLECTIVE_KIND = re.compile(
+    r"\b(all-gather-start|all-gather|all-reduce-start|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)\b"
+)
+_DOT_RE = re.compile(r"=\s*[\w\[\],{}\s]*?\bdot\(")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shapes_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        n = 1
+        dims = m.group(2)
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[m.group(1)]
+    return total
+
+
+def _shape_elems(m) -> int:
+    n = 1
+    if m.group(2):
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+    return n
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes_written: float = 0.0
+    collective_bytes: dict = field(default_factory=dict)
+    per_collective_ops: int = 0
+    trip_counts: dict = field(default_factory=dict)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def _split_computations(hlo: str) -> tuple[dict[str, list[str]], str]:
+    """Segment HLO text into computations; returns (bodies, entry_name)."""
+    comps: dict[str, list[str]] = {}
+    entry = None
+    current = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if not stripped:
+            continue
+        if current is None:
+            # computation headers end with '{' and contain '->'; names may
+            # be followed by a parameter list with nested parentheses.
+            if stripped.endswith("{") and "->" in stripped:
+                head = stripped
+                is_entry = head.startswith("ENTRY")
+                if is_entry:
+                    head = head[len("ENTRY"):].strip()
+                name = head.lstrip("%").split("(")[0].split(" ")[0].strip()
+                current = name
+                comps[current] = []
+                if is_entry:
+                    entry = name
+            continue
+        if stripped == "}":
+            current = None
+            continue
+        comps[current].append(stripped)
+    return comps, entry
+
+
+_DOT_OPERAND_RE = re.compile(r"dot\(\s*%?([\w\.\-]+)")
+
+
+def _dot_flops(line: str, symbols: dict[str, list[int]]) -> float:
+    """2 * |output| * |contracting| from the result shape + dnums.
+
+    HLO format: ``%name = f32[m,n]{...} dot(%a, %b), lhs_contracting_...``
+    — operands are names; their shapes come from the computation-local
+    symbol table (every op/parameter line defines ``%name = shape ...``).
+    """
+    rhs = line.split("=", 1)[1] if "=" in line else line
+    first = _SHAPE_RE.search(rhs)
+    if first is None:
+        return 0.0
+    out_elems = _shape_elems(first)
+    cm = _CONTRACT_RE.search(line)
+    om = _DOT_OPERAND_RE.search(rhs)
+    lhs_dims = symbols.get(om.group(1)) if om else None
+    if cm is None or not lhs_dims:
+        return 2.0 * out_elems  # fallback: at least count outputs
+    contract = 1
+    for idx in cm.group(1).split(","):
+        if idx and int(idx) < len(lhs_dims):
+            contract *= lhs_dims[int(idx)]
+    return 2.0 * out_elems * contract
+
+
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=")
+
+
+def _build_symbols(lines: list[str]) -> dict[str, list[int]]:
+    """name -> result dims for every definition in a computation."""
+    out: dict[str, list[int]] = {}
+    for line in lines:
+        dm = _DEF_RE.match(line)
+        if not dm:
+            continue
+        rhs = line.split("=", 1)[1]
+        sm = _SHAPE_RE.search(rhs)
+        if sm:
+            dims = [int(d) for d in sm.group(2).split(",") if d] if sm.group(2) else []
+            out[dm.group(1)] = dims
+    return out
+
+
+def _line_result_bytes(line: str) -> int:
+    """Bytes of the op's result: the first shape literal right of ``=``
+    (tuple results sum every element shape of the tuple literal)."""
+    rhs = line.split("=", 1)[1] if "=" in line else line
+    op_split = rhs.find("(")
+    head = rhs[:op_split] if op_split > 0 else rhs
+    total = _shapes_bytes(head)
+    if total == 0:  # shape may sit inside a tuple literal before the op
+        m = _SHAPE_RE.search(rhs)
+        if m:
+            total = _shape_elems(m) * _DTYPE_BYTES[m.group(1)]
+    return total
+
+
+def analyze_hlo(hlo: str) -> HloCost:
+    comps, entry = _split_computations(hlo)
+
+    # ---- call graph + trip counts ---- #
+    # while edges (trip-weighted) vs plain call/fusion edges (weight 1):
+    # FLOPs propagate through both (dots often live inside wrapped
+    # fusions); bytes only through while edges — fusion internals are
+    # register traffic, not HBM writes, and the fusion *result* is already
+    # counted at the caller line.
+    while_edges: dict[str, list[tuple[str, float]]] = {c: [] for c in comps}
+    call_edges: dict[str, list[str]] = {c: [] for c in comps}
+    trip_of_body: dict[str, float] = {}
+    for cname, lines in comps.items():
+        for line in lines:
+            bm, cm = _BODY_RE.search(line), _COND_RE.search(line)
+            if bm and cm:
+                cond, body = cm.group(1), bm.group(1)
+                trip = _trip_count(comps.get(cond, []))
+                trip_of_body[body] = trip
+                while_edges[cname].append((body, trip))
+                while_edges[cname].append((cond, trip))
+                continue
+            for callee in _CALL_RE.findall(line):
+                if callee in comps:
+                    call_edges[cname].append(callee)
+
+    if entry is None:
+        entry = _find_entry(comps, while_edges, call_edges)
+
+    flop_mult: dict[str, float] = {}
+    byte_mult: dict[str, float] = {}
+
+    def visit(name: str, m: float, depth=0):
+        if depth > 64 or name not in comps:
+            return
+        flop_mult[name] = flop_mult.get(name, 0.0) + m
+        for callee, k in while_edges.get(name, []):
+            visit(callee, m * k, depth + 1)
+        for callee in call_edges.get(name, []):
+            visit(callee, m, depth + 1)
+
+    def visit_bytes(name: str, m: float, depth=0):
+        if depth > 64 or name not in comps:
+            return
+        byte_mult[name] = byte_mult.get(name, 0.0) + m
+        for callee, k in while_edges.get(name, []):
+            visit_bytes(callee, m * k, depth + 1)
+
+    visit(entry, 1.0)
+    visit_bytes(entry, 1.0)
+
+    # ---- accumulate ---- #
+    cost = HloCost(trip_counts=trip_of_body)
+    for cname, lines in comps.items():
+        fm = flop_mult.get(cname, 0.0)
+        bm_ = byte_mult.get(cname, 0.0)
+        if fm <= 0 and bm_ <= 0:
+            continue
+        symbols = _build_symbols(lines)
+        for line in lines:
+            if fm > 0 and (" dot(" in line or "convolution(" in line):
+                cost.flops += fm * _dot_flops(line, symbols)
+            if bm_ <= 0:
+                continue
+            km = _COLLECTIVE_KIND.search(line)
+            if km and "=" in line:
+                kind = km.group(1).replace("-start", "")
+                cost.collective_bytes[kind] = (
+                    cost.collective_bytes.get(kind, 0.0)
+                    + bm_ * _line_result_bytes(line)
+                )
+                cost.per_collective_ops += 1
+            if "=" in line and "parameter(" not in line and \
+                    "get-tuple-element" not in line:
+                cost.bytes_written += bm_ * _line_result_bytes(line)
+    return cost
+
+
+def _trip_count(cond_lines: list[str]) -> float:
+    """Loop bound from the condition computation: the largest integer
+    constant compared against the induction variable."""
+    best = 1.0
+    for line in cond_lines:
+        if "constant(" in line:
+            for c in _CONST_RE.findall(line):
+                best = max(best, float(c))
+    return best
+
+
+def _find_entry(comps: dict, while_edges: dict, call_edges: dict) -> str:
+    called = set()
+    for edges in while_edges.values():
+        called.update(c for c, _ in edges)
+    for edges in call_edges.values():
+        called.update(edges)
+    for c in comps:
+        if c not in called:
+            return c
+    return next(iter(comps))

@@ -1,0 +1,154 @@
+"""Per-kernel validation: shape sweeps + hypothesis vs the ref.py oracles.
+
+All kernels run in interpret=True mode (CPU container; TPU is the target).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from numpy.testing import assert_array_equal
+
+from repro.kernels import ops, ref
+
+SHAPES = [
+    (0, 5),
+    (1, 1),
+    (7, 3),
+    (64, 64),
+    (100, 1000),
+    (513, 2049),   # non-multiples of the block sizes
+    (1024, 17),
+    (2000, 0),
+]
+
+
+def _rand_sorted(rng, m, hi=10_000):
+    return np.sort(rng.integers(0, hi, size=m).astype(np.int32))
+
+
+class TestSortedMember:
+    @pytest.mark.parametrize("n,m", SHAPES)
+    def test_shapes(self, n, m):
+        rng = np.random.default_rng(n * 31 + m)
+        a = rng.integers(0, 10_000, size=n).astype(np.int32)
+        b = _rand_sorted(rng, m)
+        got = np.asarray(ops.member(a, b))
+        want = np.asarray(ref.sorted_member_ref(a, b))
+        assert_array_equal(got, want)
+
+    @pytest.mark.parametrize("block_a,block_b", [(8, 16), (128, 128), (512, 1024)])
+    def test_block_sweep(self, block_a, block_b):
+        rng = np.random.default_rng(0)
+        a = rng.integers(0, 500, size=300).astype(np.int32)
+        b = _rand_sorted(rng, 450, hi=500)
+        got = np.asarray(ops.member(a, b, block_a=block_a, block_b=block_b))
+        want = np.asarray(ref.sorted_member_ref(a, b))
+        assert_array_equal(got, want)
+
+    def test_anti_join(self):
+        a = np.asarray([1, 2, 3, 4, 5], dtype=np.int32)
+        b = np.asarray([2, 4], dtype=np.int32)
+        got = np.asarray(ops.anti_join_mask(a, b))
+        assert_array_equal(got, [True, False, True, False, True])
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        a=st.lists(st.integers(0, 1000), max_size=200),
+        b=st.lists(st.integers(0, 1000), max_size=200),
+    )
+    def test_property(self, a, b):
+        a = np.asarray(a, dtype=np.int32)
+        b = np.sort(np.asarray(b, dtype=np.int32))
+        got = np.asarray(ops.member(a, b, block_a=64, block_b=64))
+        want = np.isin(a, b)
+        assert_array_equal(got, want)
+
+
+class TestRleExpand:
+    @pytest.mark.parametrize(
+        "runs",
+        [
+            [(5, 1)],
+            [(3, 4), (7, 2), (9, 10)],
+            [(1, 1000)],
+            [(i, 1) for i in range(100)],
+            [(i, (i % 7) + 1) for i in range(300)],
+        ],
+    )
+    def test_shapes(self, runs):
+        vals = np.asarray([v for v, _ in runs], dtype=np.int32)
+        cnts = np.asarray([c for _, c in runs], dtype=np.int32)
+        total = int(cnts.sum())
+        got = np.asarray(ops.expand_rle(vals, cnts, total))
+        want = np.asarray(ref.rle_expand_ref(vals, cnts, total))
+        assert_array_equal(got, want)
+
+    @pytest.mark.parametrize("block_out", [16, 128, 1024])
+    def test_block_sweep(self, block_out):
+        rng = np.random.default_rng(1)
+        vals = rng.integers(0, 100, size=50).astype(np.int32)
+        cnts = rng.integers(1, 9, size=50).astype(np.int32)
+        total = int(cnts.sum())
+        got = np.asarray(ops.expand_rle(vals, cnts, total, block_out=block_out))
+        want = np.asarray(ref.rle_expand_ref(vals, cnts, total))
+        assert_array_equal(got, want)
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        runs=st.lists(
+            st.tuples(st.integers(0, 100), st.integers(1, 20)),
+            min_size=1,
+            max_size=60,
+        )
+    )
+    def test_property(self, runs):
+        vals = np.asarray([v for v, _ in runs], dtype=np.int32)
+        cnts = np.asarray([c for _, c in runs], dtype=np.int32)
+        total = int(cnts.sum())
+        got = np.asarray(ops.expand_rle(vals, cnts, total, block_out=64))
+        assert_array_equal(got, np.repeat(vals, cnts))
+
+
+class TestJoinBounds:
+    @pytest.mark.parametrize("n,m", SHAPES)
+    def test_shapes(self, n, m):
+        rng = np.random.default_rng(n * 7 + m)
+        l = rng.integers(0, 300, size=n).astype(np.int32)
+        r = _rand_sorted(rng, m, hi=300)
+        lo_g, hi_g = ops.group_spans(l, r)
+        lo_w, hi_w = ref.join_bounds_ref(l, r)
+        assert_array_equal(np.asarray(lo_g), np.asarray(lo_w))
+        assert_array_equal(np.asarray(hi_g), np.asarray(hi_w))
+
+    @pytest.mark.parametrize("block_l,block_r", [(8, 8), (64, 256), (512, 1024)])
+    def test_block_sweep(self, block_l, block_r):
+        rng = np.random.default_rng(3)
+        l = rng.integers(0, 100, size=333).astype(np.int32)
+        r = _rand_sorted(rng, 777, hi=100)
+        lo_g, hi_g = ops.group_spans(l, r, block_l=block_l, block_r=block_r)
+        lo_w, hi_w = ref.join_bounds_ref(l, r)
+        assert_array_equal(np.asarray(lo_g), np.asarray(lo_w))
+        assert_array_equal(np.asarray(hi_g), np.asarray(hi_w))
+
+    def test_prune_fastpath_correct(self):
+        """Left tile far above right blocks exercises the += BLOCK path."""
+        l = np.full(64, 1_000_000, dtype=np.int32)
+        r = np.arange(4096, dtype=np.int32)
+        lo_g, hi_g = ops.group_spans(l, r, block_l=64, block_r=256)
+        assert_array_equal(np.asarray(lo_g), np.full(64, 4096, dtype=np.int32))
+        assert_array_equal(np.asarray(hi_g), np.full(64, 4096, dtype=np.int32))
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        l=st.lists(st.integers(0, 500), max_size=150),
+        r=st.lists(st.integers(0, 500), max_size=150),
+    )
+    def test_property(self, l, r):
+        l = np.asarray(l, dtype=np.int32)
+        r = np.sort(np.asarray(r, dtype=np.int32))
+        lo_g, hi_g = ops.group_spans(l, r, block_l=32, block_r=32)
+        lo_w = np.searchsorted(r, l, side="left")
+        hi_w = np.searchsorted(r, l, side="right")
+        assert_array_equal(np.asarray(lo_g), lo_w.astype(np.int32))
+        assert_array_equal(np.asarray(hi_g), hi_w.astype(np.int32))

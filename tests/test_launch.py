@@ -1,0 +1,130 @@
+"""Launch-layer tests: sharding rules, mesh policy, distributed engine."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.core import flat_seminaive
+from repro.core.distributed import DistributedEngine
+from repro.core.generators import chain, lubm_like
+from repro.launch.sharding import (
+    batch_shardings,
+    guarded_spec,
+    param_shardings,
+)
+from repro.models.model import abstract_params, input_specs
+from repro.configs import SHAPES
+
+
+def _mesh11():
+    return Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+
+
+class TestGuardedSpec:
+    def test_divisible_kept(self):
+        mesh = _mesh11()
+        spec = guarded_spec(mesh, (16, 32), ("data", "model"))
+        assert spec == P("data", "model")
+
+    def test_indivisible_dropped(self):
+        # fake a larger mesh shape via a mesh with axis sizes 1 — use the
+        # production mesh shape logic instead: axis size 1 divides all
+        mesh = _mesh11()
+        spec = guarded_spec(mesh, (0, 7), ("data", "model"))
+        assert spec == P(None, "model")  # 0-dim dropped, 7 % 1 == 0 kept
+
+
+class TestParamShardings:
+    @pytest.mark.parametrize("arch", ["llama3.2-1b", "qwen2-moe-a2.7b",
+                                      "falcon-mamba-7b", "deepseek-v3-671b",
+                                      "seamless-m4t-large-v2"])
+    def test_rules_cover_every_leaf(self, arch):
+        cfg = get_config(arch, smoke=True)
+        mesh = _mesh11()
+        params = abstract_params(cfg)
+        shardings = param_shardings(params, mesh)
+        n_p = len(jax.tree_util.tree_leaves(params))
+        n_s = len(jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda x: isinstance(x, NamedSharding)))
+        assert n_p == n_s
+        for s in jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda x: isinstance(x, NamedSharding)
+        ):
+            assert isinstance(s, NamedSharding)
+
+    def test_pure_fsdp_strategy(self):
+        cfg = get_config("llama3.2-1b", smoke=True)
+        mesh = _mesh11()
+        shardings = param_shardings(abstract_params(cfg), mesh,
+                                    strategy="pure_fsdp")
+        leaves = jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda x: isinstance(x, NamedSharding))
+        assert leaves  # all leaves resolved
+
+    def test_batch_shardings(self):
+        cfg = get_config("llama3.2-1b")
+        mesh = _mesh11()
+        batch = input_specs(cfg, SHAPES["train_4k"])
+        sh = batch_shardings(batch, mesh)
+        assert isinstance(sh["tokens"], NamedSharding)
+
+
+class TestInputSpecs:
+    @pytest.mark.parametrize("shape", list(SHAPES))
+    def test_specs_are_abstract(self, shape):
+        cfg = get_config("falcon-mamba-7b")  # supports all shapes
+        specs = input_specs(cfg, SHAPES[shape])
+        for leaf in jax.tree_util.tree_leaves(specs):
+            assert isinstance(leaf, jax.ShapeDtypeStruct)
+
+    def test_vlm_has_vision_stub(self):
+        cfg = get_config("qwen2-vl-72b")
+        specs = input_specs(cfg, SHAPES["train_4k"])
+        assert "vision_embeds" in specs
+        assert specs["vision_embeds"].shape[-1] == cfg.d_model
+
+    def test_encdec_has_audio_stub(self):
+        cfg = get_config("seamless-m4t-large-v2")
+        specs = input_specs(cfg, SHAPES["train_4k"])
+        assert "src_embeds" in specs
+
+
+class TestDistributedEngine:
+    def test_matches_flat_oracle_chain(self):
+        program, dataset, _ = chain(10)
+        mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+        eng = DistributedEngine(program, mesh, capacity=1 << 10)
+        got = eng.materialise(dataset)
+        want = flat_seminaive(program, dataset)
+        for pred, rows in want.items():
+            assert {tuple(r) for r in got[pred]} == {tuple(r) for r in rows}
+
+    def test_pallas_kernel_dedup_path(self):
+        """The distributed engine with the Pallas membership kernel as the
+        dedup device path must match the flat oracle."""
+        program, dataset, _ = chain(8)
+        mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+        eng = DistributedEngine(program, mesh, capacity=1 << 9,
+                                use_pallas_kernels=True)
+        got = eng.materialise(dataset)
+        want = flat_seminaive(program, dataset)
+        for pred, rows in want.items():
+            assert {tuple(r) for r in got[pred]} == {tuple(r) for r in rows}
+
+    def test_matches_flat_oracle_lubm(self):
+        program, dataset, _ = lubm_like(n_dept=4, n_students=40, n_courses=8)
+        rules = [r for r in program if len(r.body) <= 2]
+        program = type(program)(rules)
+        mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+        eng = DistributedEngine(program, mesh, capacity=1 << 12)
+        got = eng.materialise(dataset)
+        want = flat_seminaive(program, dataset)
+        for pred, rows in want.items():
+            assert {tuple(r) for r in got.get(pred, np.zeros((0, 2)))} == {
+                tuple(r) for r in rows
+            }

@@ -1,0 +1,156 @@
+"""Per-architecture smoke tests: reduced configs, one forward/train step on
+CPU, asserting output shapes and absence of NaNs; plus a decode step."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_configs
+from repro.models.model import Model
+from repro.models import transformer
+
+ARCHS = [
+    "qwen3-0.6b",
+    "granite-20b",
+    "deepseek-7b",
+    "llama3.2-1b",
+    "qwen2-moe-a2.7b",
+    "deepseek-v3-671b",
+    "falcon-mamba-7b",
+    "zamba2-1.2b",
+    "seamless-m4t-large-v2",
+    "qwen2-vl-72b",
+]
+
+B, S = 2, 32
+
+
+def _smoke_batch(cfg, key):
+    ks = jax.random.split(key, 3)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size, jnp.int32)
+    }
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = (
+            jax.random.normal(ks[1], (B, 16, cfg.d_model)) * 0.02
+        ).astype(jnp.bfloat16)
+    if cfg.family == "encdec":
+        batch["src_embeds"] = (
+            jax.random.normal(ks[2], (B, 2 * S, cfg.d_model)) * 0.02
+        ).astype(jnp.bfloat16)
+    return batch
+
+
+def test_all_archs_registered():
+    assert set(ARCHS) <= set(list_configs())
+    assert len(list_configs()) == 10
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_smoke(arch):
+    cfg = get_config(arch, smoke=True)
+    model = Model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    batch = _smoke_batch(cfg, jax.random.PRNGKey(1))
+
+    def loss_fn(p):
+        loss, metrics = model.loss(p, batch)
+        return loss, metrics
+
+    (loss, metrics), grads = jax.jit(
+        jax.value_and_grad(loss_fn, has_aux=True)
+    )(params)
+    assert np.isfinite(float(loss)), f"{arch}: non-finite loss"
+    assert float(metrics["xent"]) > 0
+    # gradient sanity: finite and at least one non-zero
+    leaves = jax.tree_util.tree_leaves(grads)
+    assert all(np.isfinite(np.asarray(l)).all() for l in leaves)
+    assert any(float(jnp.abs(l).max()) > 0 for l in leaves)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_logits_shape(arch):
+    cfg = get_config(arch, smoke=True)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _smoke_batch(cfg, jax.random.PRNGKey(1))
+    logits, _ = jax.jit(model.logits)(params, batch)
+    total = S + (16 if cfg.family == "vlm" else 0)
+    assert logits.shape == (B, total, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, dtype=np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_step_smoke(arch):
+    cfg = get_config(arch, smoke=True)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cache = model.init_cache(B, max_len=16)
+    token = jnp.zeros((B, 1), jnp.int32)
+    memory = None
+    if cfg.family == "encdec":
+        memory = (
+            jax.random.normal(jax.random.PRNGKey(2), (B, 8, cfg.d_model)) * 0.02
+        ).astype(jnp.bfloat16)
+
+    step = jax.jit(
+        lambda p, t, c, n: model.decode_step(p, t, c, n, memory=memory)
+    )
+    logits, cache = step(params, token, cache, jnp.int32(0))
+    logits2, cache = step(params, token, cache, jnp.int32(1))
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, dtype=np.float32)).all()
+    assert np.isfinite(np.asarray(logits2, dtype=np.float32)).all()
+
+
+def test_decode_matches_forward_dense():
+    """Greedy decode logits must match teacher-forced forward logits."""
+    cfg = get_config("llama3.2-1b", smoke=True)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0,
+                                cfg.vocab_size, jnp.int32)
+    full_logits, _ = model.logits(params, {"tokens": tokens})
+
+    cache = model.init_cache(1, max_len=8)
+    outs = []
+    for t in range(8):
+        logits, cache = model.decode_step(
+            params, tokens[:, t : t + 1], cache, jnp.int32(t)
+        )
+        outs.append(logits[:, 0])
+    dec_logits = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(full_logits, np.float32),
+        np.asarray(dec_logits, np.float32),
+        rtol=2e-2,
+        atol=2e-2,
+    )
+
+
+def test_decode_matches_forward_ssm():
+    cfg = get_config("falcon-mamba-7b", smoke=True)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0,
+                                cfg.vocab_size, jnp.int32)
+    full_logits, _ = model.logits(params, {"tokens": tokens})
+    cache = model.init_cache(1, max_len=8)
+    outs = []
+    for t in range(8):
+        logits, cache = model.decode_step(
+            params, tokens[:, t : t + 1], cache, jnp.int32(t)
+        )
+        outs.append(logits[:, 0])
+    dec_logits = jnp.stack(outs, axis=1)
+    # bf16 compute: one rounding difference in a d-dim dot product shifts a
+    # logit by ~0.01-0.08; state propagation errors would *grow* with
+    # position (verified flat in debugging), so a flat tolerance suffices.
+    np.testing.assert_allclose(
+        np.asarray(full_logits, np.float32),
+        np.asarray(dec_logits, np.float32),
+        rtol=0.1,
+        atol=0.12,
+    )
