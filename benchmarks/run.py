@@ -20,6 +20,7 @@ def main() -> None:
     from . import (
         bench_dedup,
         bench_kernels,
+        bench_query,
         bench_representation,
         bench_roofline,
         bench_runtime,
@@ -31,6 +32,7 @@ def main() -> None:
         "dedup": bench_dedup.run,                    # beyond-paper ablation
         "kernels": bench_kernels.run,                # Pallas microbench
         "roofline": bench_roofline.run,              # deliverable (g)
+        "query": bench_query.run,                    # compressed vs flat answering
     }
     failures = 0
     for name, fn in benches.items():

@@ -10,6 +10,7 @@ from .columns import ColumnStore, rle_encode
 from .datalog import Atom, Program, Rule, parse_program, vertical_partition
 from .engine import CMatEngine, MaterialisationStats
 from .flat import FlatEngine, flat_seminaive
+from .frozen import FrozenFacts
 from .metafacts import FactStore, MetaFact, flat_repr_size
 from .terms import Dictionary
 
@@ -20,6 +21,7 @@ __all__ = [
     "Dictionary",
     "FactStore",
     "FlatEngine",
+    "FrozenFacts",
     "MaterialisationStats",
     "MetaFact",
     "Program",

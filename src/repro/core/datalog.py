@@ -95,8 +95,14 @@ def _parse_atom(text: str, dictionary: Dictionary | None) -> Atom:
             if dictionary is None:
                 raise ValueError(f"constant {raw!r} needs a dictionary")
             terms.append(dictionary.intern(raw.strip('"<>')))
-        else:
+        elif raw.lstrip("-").isdigit():
+            # numeric literal: a raw constant id (negative ids occur only
+            # as unknown-constant sentinels; they match no stored fact)
+            terms.append(int(raw))
+        elif raw.isidentifier():
             terms.append(raw)  # treat as variable
+        else:
+            raise ValueError(f"cannot interpret term {raw!r} in {text!r}")
     return Atom(pred, tuple(terms))
 
 

@@ -41,6 +41,8 @@ def _match_flat(atom, rows: np.ndarray) -> _Table | None:
     sel = rows[mask]
     if sel.shape[0] == 0:
         return None
+    if not vars_:  # all-constant atom: an existence filter
+        return _Table((), np.zeros((sel.shape[0], 0), dtype=np.int64))
     cols = [sel[:, first_pos[v]] for v in vars_]
     return _Table(vars_, np.stack(cols, axis=1))
 

@@ -1,0 +1,137 @@
+"""Frozen post-materialisation snapshot of a :class:`FactStore`.
+
+The paper frames materialisation as a *preprocessing step* so queries can
+later be answered by lookup.  :class:`FrozenFacts` is the read side of
+that contract (DESIGN.md §Query): once the fixpoint is reached the store
+is frozen and
+
+* the meta-facts and the mu-mapping below the freeze mark are never
+  redefined again (query-time splits always copy, ``inplace=False``),
+* per-predicate **sorted dedup snapshots** are built lazily and cached,
+  so repeated queries never re-unpack the same columns,
+* cheap selectivity statistics (fact counts, RLE-run distinct estimates,
+  exact constant frequencies once a snapshot exists) feed the query
+  planner without forcing any unfolding.
+
+Everything a query allocates lives above :meth:`ColumnStore.mark` and is
+reclaimed with :meth:`ColumnStore.release` after the answers are
+extracted, so the store does not grow across a query stream.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .metafacts import FactStore
+
+__all__ = ["FrozenFacts"]
+
+
+class FrozenFacts:
+    """Read-only view over a materialised fact store + lazy flat indexes."""
+
+    def __init__(self, facts: FactStore):
+        self.facts = facts
+        self.store = facts.store
+        self.freeze_mark = self.store.mark()
+        # lazy caches --------------------------------------------------- #
+        self._rows: dict[str, np.ndarray] = {}  # sorted unique (n, arity)
+        self._col_order: dict[tuple[str, int], np.ndarray] = {}
+        self._sorted_col: dict[tuple[str, int], np.ndarray] = {}
+        self._n_rows: dict[str, int] = {}
+        # instrumentation: cells unfolded while *building* snapshots —
+        # a one-time warmup cost, reported separately from per-query work.
+        self.snapshot_cells = 0
+
+    # ------------------------------------------------------------------ #
+    # compressed access
+    # ------------------------------------------------------------------ #
+    def predicates(self):
+        return self.facts.predicates()
+
+    def meta_facts(self, pred: str):
+        return self.facts.all(pred)
+
+    def arity(self, pred: str) -> int:
+        mfs = self.facts.all(pred)
+        return mfs[0].arity if mfs else 0
+
+    def n_rows(self, pred: str) -> int:
+        """Represented fact count (with multiplicity) — O(#meta-facts)."""
+        cached = self._n_rows.get(pred)
+        if cached is None:
+            cached = sum(mf.length for mf in self.facts.all(pred))
+            self._n_rows[pred] = cached
+        return cached
+
+    def approx_distinct(self, pred: str, pos: int) -> int:
+        """Upper-bound distinct-value estimate for one argument position:
+        the total RLE run count of that column — no unfolding needed."""
+        total = 0
+        for mf in self.facts.all(pred):
+            total += self.store.n_runs(mf.columns[pos])
+        return max(total, 1)
+
+    # ------------------------------------------------------------------ #
+    # sorted dedup snapshots (lazy, cached)
+    # ------------------------------------------------------------------ #
+    def snapshot(self, pred: str) -> np.ndarray:
+        """Sorted, duplicate-free ``(n, arity)`` rows of a predicate."""
+        rows = self._rows.get(pred)
+        if rows is None:
+            unfolded = self.facts.unfold_pred(pred)
+            self.snapshot_cells += int(unfolded.size)
+            rows = np.unique(unfolded, axis=0)
+            self._rows[pred] = rows
+        return rows
+
+    def has_snapshot(self, pred: str) -> bool:
+        return pred in self._rows
+
+    def col_order(self, pred: str, pos: int) -> np.ndarray:
+        """Stable argsort of the snapshot on column ``pos``."""
+        key = (pred, pos)
+        order = self._col_order.get(key)
+        if order is None:
+            order = np.argsort(self.snapshot(pred)[:, pos], kind="stable")
+            self._col_order[key] = order
+        return order
+
+    def sorted_col(self, pred: str, pos: int) -> np.ndarray:
+        key = (pred, pos)
+        col = self._sorted_col.get(key)
+        if col is None:
+            col = self.snapshot(pred)[:, pos][self.col_order(pred, pos)]
+            self._sorted_col[key] = col
+        return col
+
+    def count_eq(self, pred: str, pos: int, value: int) -> int:
+        """Exact number of snapshot rows with ``col[pos] == value``."""
+        col = self.sorted_col(pred, pos)
+        lo = np.searchsorted(col, value, side="left")
+        hi = np.searchsorted(col, value, side="right")
+        return int(hi - lo)
+
+    def eq_slice(self, pred: str, pos: int, value: int) -> np.ndarray:
+        """Snapshot rows with ``col[pos] == value`` — touches only the
+        matching rows (one binary search + a gather)."""
+        col = self.sorted_col(pred, pos)
+        lo = np.searchsorted(col, value, side="left")
+        hi = np.searchsorted(col, value, side="right")
+        idx = self.col_order(pred, pos)[lo:hi]
+        return self.snapshot(pred)[idx]
+
+    # ------------------------------------------------------------------ #
+    def selectivity(self, pred: str, pos: int, value: int) -> float:
+        """Estimated fraction of rows with ``col[pos] == value``.
+
+        Exact when a snapshot already exists; otherwise the uniform
+        1/distinct estimate over RLE runs (never forces an unfold)."""
+        n = self.n_rows(pred)
+        if n == 0:
+            return 0.0
+        if self.has_snapshot(pred):
+            return self.count_eq(pred, pos, value) / max(
+                self.snapshot(pred).shape[0], 1
+            )
+        return 1.0 / self.approx_distinct(pred, pos)

@@ -1,9 +1,29 @@
 """Pallas TPU kernels for CompMat's hot spots (semi-join membership,
-RLE unfolding, cross-join span location) with pure-jnp oracles."""
+RLE unfolding, cross-join span location) with pure-jnp oracles.
 
-from . import ops, ref
-from .join_bounds import join_bounds
-from .rle_expand import rle_expand
-from .sorted_member import sorted_member
+Public surface: :mod:`ops` (jit'd kernel wrappers), :mod:`ref` (oracles),
+and :func:`in_set` (the numpy/Pallas membership dispatch used by the
+query executor).  The jax-backed submodules load lazily (PEP 562) so
+numpy-only consumers — the host query executor, the serving driver —
+never pay the jax import; the kernel functions themselves live in their
+submodules (``kernels.sorted_member.sorted_member`` etc.) and are
+re-exported through :mod:`ops`.
+"""
 
-__all__ = ["join_bounds", "ops", "ref", "rle_expand", "sorted_member"]
+import importlib
+
+from .lookup import in_set
+
+__all__ = ["in_set", "ops", "ref"]
+
+_LAZY_MODULES = ("join_bounds", "lookup", "ops", "ref", "rle_expand", "sorted_member")
+
+
+def __getattr__(name):
+    if name in _LAZY_MODULES:
+        return importlib.import_module(f".{name}", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(__all__) | set(_LAZY_MODULES))

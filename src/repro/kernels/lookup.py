@@ -1,0 +1,45 @@
+"""Constant-bound lookup filter for the query executor.
+
+Query plans filter candidate rows by constant equality / set membership.
+On the host that is a ``searchsorted`` membership test; on TPU the same
+test is the block-pruned :mod:`sorted_member` Pallas kernel (serial
+binary search does not vectorise, brute-force compare with sorted-block
+pruning does — see that module's header).  ``in_set`` dispatches between
+the two so the executor has a single entry point.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["in_set"]
+
+
+def in_set(
+    values: np.ndarray,
+    constants: np.ndarray,
+    *,
+    use_pallas: bool = False,
+    interpret: bool = True,
+) -> np.ndarray:
+    """Boolean mask ``values[i] in constants``.
+
+    ``use_pallas=True`` routes through the ``sorted_member`` Pallas kernel
+    (``interpret=True`` runs its body on CPU for validation; pass
+    ``interpret=False`` on TPU).  The numpy path is the default for the
+    host-only serving driver.
+    """
+    values = np.asarray(values, dtype=np.int64)
+    constants = np.asarray(constants, dtype=np.int64)
+    if values.shape[0] == 0 or constants.shape[0] == 0:
+        return np.zeros(values.shape[0], dtype=bool)
+    sorted_constants = np.sort(constants)
+    if use_pallas:
+        from .sorted_member import sorted_member as _pallas_member
+
+        return np.asarray(
+            _pallas_member(values, sorted_constants, interpret=interpret)
+        )
+    from ..core.util import sorted_member as _np_member
+
+    return _np_member(values, sorted_constants)

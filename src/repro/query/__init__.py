@@ -1,0 +1,34 @@
+"""Compressed query answering: BGP queries served directly over meta-facts.
+
+The missing request path of the paper's pipeline: materialisation is a
+preprocessing step; this package answers conjunctive (BGP-style) queries
+*on the compressed ``<M, mu>`` representation* without unfolding the
+store (see DESIGN.md §Query):
+
+* :mod:`ast` — query AST + text parser (rule-atom syntax),
+* :mod:`plan` — selectivity-ordered plans over frozen-store statistics,
+* :mod:`exec` — plan execution with the engine's ``match``/``sjoin``/
+  ``xjoin`` primitives plus indexed constant lookups,
+* :mod:`engine` — :class:`QueryEngine`, the cached serving facade,
+* :mod:`ref` — the flat-join correctness oracle.
+"""
+
+from .ast import Query, parse_query
+from .engine import QueryEngine, QueryResult
+from .exec import ExecStats, execute
+from .plan import JoinStep, Plan, ScanStep, plan_query
+from .ref import answer_flat
+
+__all__ = [
+    "ExecStats",
+    "JoinStep",
+    "Plan",
+    "Query",
+    "QueryEngine",
+    "QueryResult",
+    "ScanStep",
+    "answer_flat",
+    "execute",
+    "parse_query",
+    "plan_query",
+]

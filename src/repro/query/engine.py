@@ -1,0 +1,202 @@
+"""QueryEngine: the request path over a materialised compressed KB.
+
+Materialise once (``CMatEngine``), freeze, then answer a stream of
+conjunctive queries::
+
+    qe = QueryEngine(eng, dictionary)
+    res = qe.answer("?s, ?c <- memberOf(?s, \"dept3\"), takesCourse(?s, ?c)")
+    res.answers            # (n, 2) int64, sorted unique
+    print(res.plan)        # inspectable plan
+    res.stats.unfold_fractions()
+
+Serving behaviour:
+
+* **plan cache** (LRU): a query shape is planned once,
+* **result cache** (LRU): repeated queries are answered by lookup,
+* scratch reclamation: every miss evaluates in a released scratch region
+  of the column store, so memory stays flat across millions of requests.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..core.engine import CMatEngine
+from ..core.frozen import FrozenFacts
+from ..core.metafacts import FactStore
+from ..core.terms import Dictionary
+from .ast import Query, parse_query
+from .exec import ExecStats, execute
+from .plan import Plan, plan_query
+
+__all__ = ["QueryEngine", "QueryResult"]
+
+#: sentinel for constants absent from the dictionary: no stored fact can
+#: contain it (term ids are dense and non-negative), so any atom naming
+#: it provably matches nothing
+_UNKNOWN_CONSTANT = -1
+
+
+class _LookupOnlyDict:
+    """Read-only dictionary view for query parsing: unseen constants map
+    to :data:`_UNKNOWN_CONSTANT` instead of being interned, so a stream
+    of queries over unknown terms cannot grow the shared dictionary.
+    (Two distinct unknown constants collide on the sentinel, but every
+    query naming one has a provably empty answer set, so the collision
+    is observationally harmless — including as a cache key.)"""
+
+    def __init__(self, base: Dictionary):
+        self._base = base
+
+    def intern(self, term: str) -> int:
+        if term in self._base:
+            return self._base.id_of(term)
+        return _UNKNOWN_CONSTANT
+
+
+@dataclass
+class QueryResult:
+    query: Query
+    answers: np.ndarray  # (n, len(projection)) int64, sorted unique
+    plan: Plan
+    stats: ExecStats
+    from_cache: bool = False
+
+    @property
+    def n_answers(self) -> int:
+        return int(self.answers.shape[0])
+
+    @property
+    def ask(self) -> bool:
+        """Truth value for ASK queries (any query: 'has answers')."""
+        return self.answers.shape[0] > 0
+
+
+class QueryEngine:
+    """Answers BGP queries directly over the frozen ``<M, mu>`` store."""
+
+    def __init__(
+        self,
+        source: CMatEngine | FactStore | FrozenFacts,
+        dictionary: Dictionary | None = None,
+        *,
+        plan_cache_size: int = 256,
+        result_cache_size: int = 1024,
+        use_pallas: bool = False,
+        interpret: bool = True,
+    ):
+        if isinstance(source, CMatEngine):
+            self.frozen = source.facts.freeze()
+        elif isinstance(source, FactStore):
+            self.frozen = source.freeze()
+        elif isinstance(source, FrozenFacts):
+            self.frozen = source
+        else:
+            raise TypeError(f"cannot build QueryEngine from {type(source)!r}")
+        self.dictionary = dictionary
+        # 'is not None': an empty Dictionary is falsy but still a dictionary
+        self._parse_dict = (
+            _LookupOnlyDict(dictionary) if dictionary is not None else None
+        )
+        self.use_pallas = use_pallas
+        self.interpret = interpret
+        self._plan_cache: OrderedDict[Query, Plan] = OrderedDict()
+        self._result_cache: OrderedDict[Query, QueryResult] = OrderedDict()
+        self._text_cache: OrderedDict[str, Query] = OrderedDict()
+        self._plan_cache_size = plan_cache_size
+        self._result_cache_size = result_cache_size
+        self.plan_hits = self.plan_misses = 0
+        self.result_hits = self.result_misses = 0
+
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def _lru_get(cache: OrderedDict, key):
+        hit = cache.get(key)
+        if hit is not None:
+            cache.move_to_end(key)
+        return hit
+
+    @staticmethod
+    def _lru_put(cache: OrderedDict, key, value, capacity: int) -> None:
+        cache[key] = value
+        if len(cache) > capacity:
+            cache.popitem(last=False)
+
+    def parse(self, text: str) -> Query:
+        """Parse query text (LRU-cached, so repeated requests skip the
+        regex work; never interns new terms into the dictionary)."""
+        query = self._lru_get(self._text_cache, text)
+        if query is None:
+            query = parse_query(text, self._parse_dict)
+            # must not be smaller than the result cache it gates, or hot
+            # result hits beyond its capacity re-parse on every request
+            self._lru_put(
+                self._text_cache,
+                text,
+                query,
+                max(self._plan_cache_size, self._result_cache_size, 1),
+            )
+        return query
+
+    def plan(self, query: Query | str) -> Plan:
+        if isinstance(query, str):
+            query = self.parse(query)
+        plan = self._lru_get(self._plan_cache, query)
+        if plan is not None:
+            self.plan_hits += 1
+            return plan
+        self.plan_misses += 1
+        plan = plan_query(query, self.frozen)
+        self._lru_put(self._plan_cache, query, plan, self._plan_cache_size)
+        return plan
+
+    def explain(self, query: Query | str) -> str:
+        return self.plan(query).explain()
+
+    def answer(self, query: Query | str) -> QueryResult:
+        if isinstance(query, str):
+            query = self.parse(query)
+        if self._result_cache_size > 0:
+            hit = self._lru_get(self._result_cache, query)
+            if hit is not None:
+                self.result_hits += 1
+                return QueryResult(
+                    query, hit.answers, hit.plan, hit.stats, from_cache=True
+                )
+        self.result_misses += 1
+        plan = self.plan(query)
+        answers, stats = execute(
+            plan,
+            self.frozen,
+            use_pallas=self.use_pallas,
+            interpret=self.interpret,
+        )
+        # cached answers are shared across hits: freeze them so a caller
+        # mutating in place cannot poison later responses
+        answers.setflags(write=False)
+        result = QueryResult(query, answers, plan, stats)
+        if self._result_cache_size > 0:
+            self._lru_put(
+                self._result_cache, query, result, self._result_cache_size
+            )
+        return result
+
+    # ------------------------------------------------------------------ #
+    def decode(self, answers: np.ndarray) -> list[tuple[str, ...]]:
+        """Render answer rows back to term strings via the dictionary."""
+        if self.dictionary is None:
+            raise ValueError("no dictionary attached")
+        return [
+            tuple(self.dictionary.term_of(int(v)) for v in row) for row in answers
+        ]
+
+    def cache_stats(self) -> dict:
+        return {
+            "plan_hits": self.plan_hits,
+            "plan_misses": self.plan_misses,
+            "result_hits": self.result_hits,
+            "result_misses": self.result_misses,
+        }

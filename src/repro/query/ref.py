@@ -1,0 +1,42 @@
+"""Flat reference evaluator: answers a query by joining unfolded arrays.
+
+The correctness oracle for the compressed executor (differential tests)
+and the "answer on the flat store" baseline of ``bench_query.py``.  It
+reuses the flat engine's match/join primitives over plain per-predicate
+``(n, arity)`` arrays — i.e. it requires the fully unfolded
+materialisation the compressed path avoids.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.flat import _join, _match_flat
+from .ast import Query
+
+__all__ = ["answer_flat"]
+
+
+def answer_flat(query: Query, facts: dict[str, np.ndarray]) -> np.ndarray:
+    """Sorted unique answers of ``query`` over flat fact arrays."""
+    L = None
+    for atom in query.body:
+        rows = facts.get(atom.predicate)
+        if rows is None or rows.shape[0] == 0:
+            return _empty(query)
+        T = _match_flat(atom, rows)
+        if T is None:
+            return _empty(query)
+        if not T.vars:
+            continue  # all-constant atom: satisfied, adds no bindings
+        L = T if L is None else _join(L, T)
+        if L.rows.shape[0] == 0:
+            return _empty(query)
+    if query.is_ask:
+        return np.zeros((1, 0), dtype=np.int64)
+    idx = [L.vars.index(v) for v in query.projection]
+    return np.unique(L.rows[:, idx], axis=0)
+
+
+def _empty(query: Query) -> np.ndarray:
+    return np.zeros((0, len(query.projection)), dtype=np.int64)

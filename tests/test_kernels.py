@@ -5,6 +5,8 @@ All kernels run in interpret=True mode (CPU container; TPU is the target).
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 from numpy.testing import assert_array_equal

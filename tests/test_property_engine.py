@@ -2,6 +2,9 @@
 ``mat(Pi, E)`` for random programs and datasets (vs the flat oracle)."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 

@@ -1,0 +1,469 @@
+"""Query subsystem tests: parser, planner, differential answering,
+frozen-store snapshots, scratch reclamation, and serving caches."""
+
+import numpy as np
+import pytest
+
+from repro.core import CMatEngine, Dictionary
+from repro.core.generators import (
+    chain,
+    lubm_like,
+    paper_example,
+    random_kb,
+    star,
+)
+from repro.query import (
+    Query,
+    QueryEngine,
+    answer_flat,
+    parse_query,
+    plan_query,
+)
+from repro.query.exec import execute
+from repro.query.plan import SCAN_INDEX, SCAN_SHARE
+
+
+def materialised_engine(gen, **kw):
+    program, dataset, d = gen(**kw)
+    eng = CMatEngine(program)
+    eng.load(dataset)
+    eng.materialise()
+    return eng, d
+
+
+# --------------------------------------------------------------------- #
+# parser
+# --------------------------------------------------------------------- #
+class TestParser:
+    def test_variable_projection(self):
+        q = parse_query("?x, ?y <- P(?x, ?y), R(?x)")
+        assert q.projection == ("x", "y")
+        assert [a.predicate for a in q.body] == ["P", "R"]
+
+    def test_atom_style_head(self):
+        q = parse_query("Q(?x, ?y) <- P(?x, ?y)")
+        assert q.projection == ("x", "y")
+
+    def test_constants_interned(self):
+        d = Dictionary()
+        q = parse_query('?x <- P(?x, "dept3")', d)
+        assert q.body[0].terms[1] == d.id_of("dept3")
+
+    def test_ask_query(self):
+        q = parse_query("<- P(?x, ?y)")
+        assert q.is_ask and q.projection == ()
+
+    def test_unbound_projection_rejected(self):
+        with pytest.raises(ValueError):
+            parse_query("?z <- P(?x, ?y)")
+
+    def test_missing_arrow_rejected(self):
+        with pytest.raises(ValueError):
+            parse_query("P(?x, ?y)")
+
+    def test_empty_body_rejected(self):
+        with pytest.raises(ValueError):
+            parse_query("?x <- ")
+
+    def test_roundtrip_str(self):
+        q = parse_query("?x <- P(?x, ?y), R(?x)")
+        assert parse_query(str(q)) == q
+
+    def test_constant_roundtrip_via_id_literals(self):
+        # str() renders interned constants as numeric id literals, which
+        # parse back as the same int constants — never as variables
+        d = Dictionary()
+        q = parse_query('?x <- P(?x, "dept3")', d)
+        assert parse_query(str(q)) == q
+
+    def test_garbage_term_rejected(self):
+        with pytest.raises(ValueError):
+            parse_query("?x <- P(?x, #4)")
+
+    def test_to_text_roundtrips_constants(self):
+        d = Dictionary()
+        q = parse_query('?x <- P(?x, "dept3"), R(?x)', d)
+        assert parse_query(q.to_text(d), d) == q
+
+
+# --------------------------------------------------------------------- #
+# planner
+# --------------------------------------------------------------------- #
+class TestPlanner:
+    @pytest.fixture(scope="class")
+    def lubm(self):
+        eng, d = materialised_engine(
+            lubm_like, n_dept=6, n_students=100, n_courses=12, seed=1
+        )
+        return eng.facts.freeze(), d
+
+    def test_constant_atom_ordered_first(self, lubm):
+        frozen, d = lubm
+        # takesCourse is much larger than the constant-bound memberOf atom
+        q = parse_query('?s, ?c <- takesCourse(?s, ?c), memberOf(?s, "dept2")', d)
+        plan = plan_query(q, frozen)
+        assert plan.first.atom.predicate == "memberOf"
+        assert plan.first.mode == SCAN_INDEX
+
+    def test_order_is_selectivity_sorted(self, lubm):
+        frozen, d = lubm
+        q = parse_query(
+            "?s, ?p, ?c <- takesCourse(?s, ?c), teacherOf(?p, ?c), advisor(?s, ?p)",
+            d,
+        )
+        plan = plan_query(q, frozen)
+        order = [a.predicate for a in plan.atom_order()]
+        # teacherOf (smallest) first; takesCourse (largest) last
+        assert order[0] == "teacherOf"
+        assert order[-1] == "takesCourse"
+
+    def test_share_scan_for_pure_variable_atom(self, lubm):
+        frozen, d = lubm
+        plan = plan_query(parse_query("?s, ?c <- takesCourse(?s, ?c)", d), frozen)
+        assert plan.first.mode == SCAN_SHARE
+
+    def test_unknown_predicate_gives_empty_plan(self, lubm):
+        frozen, d = lubm
+        plan = plan_query(parse_query("?x <- noSuchPred(?x, ?y)", d), frozen)
+        assert plan.is_empty
+        answers, _ = execute(plan, frozen)
+        assert answers.shape == (0, 1)
+
+    def test_connected_atoms_preferred_over_cartesian(self, lubm):
+        frozen, d = lubm
+        q = parse_query(
+            '?s, ?c, ?p <- Professor(?p), memberOf(?s, "dept1"), takesCourse(?s, ?c)',
+            d,
+        )
+        plan = plan_query(q, frozen)
+        order = [a.predicate for a in plan.atom_order()]
+        # constant-bound memberOf anchors the plan; the disconnected
+        # Professor atom is deferred to the end (cartesian last)
+        assert order[0] == "memberOf"
+        assert order[-1] == "Professor"
+        assert plan.joins[-1].kind == "xjoin"
+        assert plan.joins[-1].key_vars == ()
+
+    def test_explain_is_printable(self, lubm):
+        frozen, d = lubm
+        text = plan_query(
+            parse_query('?s <- memberOf(?s, "dept1")', d), frozen
+        ).explain()
+        assert "scan[index]" in text and "project" in text
+
+
+# --------------------------------------------------------------------- #
+# differential: compressed answers == flat-join reference
+# --------------------------------------------------------------------- #
+LUBM_QUERIES = [
+    '?s, ?c <- memberOf(?s, "dept3"), takesCourse(?s, ?c)',
+    "?s, ?p <- advisor(?s, ?p), GraduateStudent(?s)",
+    "?x, ?u <- memberOf(?x, ?dv), subOrganizationOf(?dv, ?u)",
+    "?s, ?p, ?c <- advisor(?s, ?p), teacherOf(?p, ?c), takesCourse(?s, ?c)",
+    '?s <- takesCourse(?s, "course2"), GraduateStudent(?s)',
+    "?x <- knows(?x, ?x)",
+    '<- Professor("prof1")',
+    "?x, ?y <- GraduateStudent(?x), Course(?y)",  # cartesian
+    "?p <- worksWith(?s, ?p), Faculty(?p)",
+    '?q <- noSuchPred(?q)',
+]
+
+PAPER_QUERIES = [
+    "?x, ?y <- S(?x, ?y)",
+    '?x <- P(?x, "e2")',
+    "?x, ?z <- P(?x, ?y), T(?y, ?z)",
+    '<- S("a2", "d")',
+    "?x <- R(?x), P(?x, ?y)",
+]
+
+CHAIN_QUERIES = [
+    '?y <- path("v000002", ?y)',
+    '?x <- path(?x, "v000030")',
+    "?x, ?z <- edge(?x, ?y), path(?y, ?z)",
+    "?x <- path(?x, ?x)",
+]
+
+STAR_QUERIES = [
+    '?y <- S("s000004", ?y)',
+    "?x, ?z <- S(?x, ?y), T(?y, ?z)",
+    "?x <- P(?x, ?y), R(?x)",
+]
+
+
+class TestDifferential:
+    def _check(self, eng, d, queries):
+        qe = QueryEngine(eng, d)
+        flat = eng.materialisation()
+        for text in queries:
+            query = parse_query(text, d)
+            got = qe.answer(query).answers
+            want = answer_flat(query, flat)
+            np.testing.assert_array_equal(
+                got, want, err_msg=f"query {text!r} diverged"
+            )
+
+    def test_lubm(self):
+        eng, d = materialised_engine(
+            lubm_like, n_dept=6, n_students=100, n_courses=12, seed=1
+        )
+        self._check(eng, d, LUBM_QUERIES)
+
+    def test_paper_example(self):
+        eng, d = materialised_engine(paper_example, n=6, m=4)
+        self._check(eng, d, PAPER_QUERIES)
+
+    def test_chain(self):
+        eng, d = materialised_engine(chain, n=40)
+        self._check(eng, d, CHAIN_QUERIES)
+
+    def test_star(self):
+        eng, d = materialised_engine(star, n_spokes=60, n_hubs=3)
+        self._check(eng, d, STAR_QUERIES)
+
+    def test_random_kbs(self):
+        rng = np.random.default_rng(0)
+        for trial in range(5):
+            program, dataset = random_kb(rng, n_constants=10, n_facts=30)
+            eng = CMatEngine(program)
+            eng.load(dataset)
+            eng.materialise()
+            qe = QueryEngine(eng)
+            flat = eng.materialisation()
+            for text in [
+                "?x, ?y <- P(?x, ?y)",
+                "?x <- P(?x, ?y), Q(?y, ?z)",
+                "?x <- P(?x, ?x)",
+                "?x, ?z <- P(?x, ?y), Q(?x, ?z)",
+            ]:
+                query = parse_query(text)
+                got = qe.answer(query).answers
+                want = answer_flat(query, flat)
+                np.testing.assert_array_equal(
+                    got, want, err_msg=f"trial {trial}, query {text!r}"
+                )
+
+    def test_pallas_lookup_path(self):
+        eng, d = materialised_engine(
+            lubm_like, n_dept=4, n_students=60, n_courses=8, seed=2
+        )
+        qe = QueryEngine(eng, d, use_pallas=True)
+        flat = eng.materialisation()
+        # two constants in ONE atom: the non-anchor constant must filter
+        # through the in_set kernel path (a single-constant atom would be
+        # answered entirely by the index anchor and never reach it)
+        row = flat["takesCourse"][0]
+        s, c = d.term_of(int(row[0])), d.term_of(int(row[1]))
+        query = parse_query(f'<- takesCourse("{s}", "{c}")', d)
+        assert qe.answer(query).ask
+        query = parse_query('?p <- advisor("student3", ?p), teacherOf(?p, "course2")', d)
+        np.testing.assert_array_equal(
+            qe.answer(query).answers, answer_flat(query, flat)
+        )
+
+
+# --------------------------------------------------------------------- #
+# compressed-answering evidence + store hygiene
+# --------------------------------------------------------------------- #
+class TestExecutionStats:
+    def test_multijoin_does_not_fully_unfold_large_predicates(self):
+        eng, d = materialised_engine(
+            lubm_like, n_dept=6, n_students=200, n_courses=16, seed=0
+        )
+        qe = QueryEngine(eng, d, result_cache_size=0)
+        res = qe.answer(
+            parse_query('?s, ?c <- memberOf(?s, "dept2"), takesCourse(?s, ?c)', d)
+        )
+        assert res.n_answers > 0
+        offenders = [
+            p
+            for p in res.stats.fully_unfolded()
+            if res.stats.pred_rows[p] > res.n_answers
+        ]
+        assert offenders == [], f"fully unfolded: {offenders}"
+        # takesCourse enters the semi-join through its key column only:
+        # no whole rows, at most half its cells
+        assert res.stats.rows_scanned.get("takesCourse", 0) == 0
+        assert (
+            res.stats.join_cells["takesCourse"]
+            <= res.stats.pred_cells["takesCourse"] // 2
+        )
+
+    def test_xjoin_inputs_metered_honestly(self):
+        eng, d = materialised_engine(
+            lubm_like, n_dept=6, n_students=200, n_courses=16, seed=0
+        )
+        qe = QueryEngine(eng, d, result_cache_size=0)
+        res = qe.answer(
+            parse_query(
+                "?s, ?p, ?c <- advisor(?s, ?p), teacherOf(?p, ?c), takesCourse(?s, ?c)",
+                d,
+            )
+        )
+        assert res.n_answers > 0
+        # no indexed scan materialises rows wholesale...
+        assert sum(res.stats.rows_scanned.values()) == 0
+        # ...but cross-join inputs are honestly counted as full-column
+        # materialisation rather than hidden from the evidence
+        assert any(v > 0 for v in res.stats.join_cells.values())
+
+    def test_repeated_var_scan_reports_full_unfold(self):
+        eng, d = materialised_engine(
+            lubm_like, n_dept=6, n_students=200, n_courses=16, seed=0
+        )
+        qe = QueryEngine(eng, d, result_cache_size=0)
+        res = qe.answer(parse_query("?x <- knows(?x, ?x)", d))
+        # a repeated-variable-only atom has no index anchor: the whole
+        # snapshot is scanned and the stats must say so
+        assert "knows" in res.stats.fully_unfolded()
+
+    def test_indexed_scan_touches_only_matching_rows(self):
+        eng, d = materialised_engine(
+            lubm_like, n_dept=6, n_students=200, n_courses=16, seed=0
+        )
+        qe = QueryEngine(eng, d, result_cache_size=0)
+        res = qe.answer(parse_query('?s, ?c <- memberOf(?s, "dept2"), takesCourse(?s, ?c)', d))
+        scanned = res.stats.rows_scanned["memberOf"]
+        assert 0 < scanned < res.stats.pred_rows["memberOf"]
+
+    def test_scratch_released_after_query(self):
+        eng, d = materialised_engine(
+            lubm_like, n_dept=4, n_students=80, n_courses=8, seed=1
+        )
+        qe = QueryEngine(eng, d, result_cache_size=0)
+        text = '?s, ?c <- memberOf(?s, "dept1"), takesCourse(?s, ?c)'
+        qe.answer(text)  # builds snapshots
+        n0 = qe.frozen.store.n_nodes()
+        next0 = qe.frozen.store._next_id
+        for _ in range(10):
+            qe.answer(text)
+        assert qe.frozen.store.n_nodes() == n0
+        assert qe.frozen.store._next_id == next0
+
+    def test_snapshot_built_once(self):
+        eng, d = materialised_engine(
+            lubm_like, n_dept=4, n_students=80, n_courses=8, seed=1
+        )
+        qe = QueryEngine(eng, d, result_cache_size=0)
+        text = '?s <- memberOf(?s, "dept1")'
+        qe.answer(text)
+        cells = qe.frozen.snapshot_cells
+        assert cells > 0
+        qe.answer(text)
+        assert qe.frozen.snapshot_cells == cells
+
+
+class TestFrozenFacts:
+    def test_freeze_api(self):
+        eng, _ = materialised_engine(paper_example)
+        frozen = eng.facts.freeze()
+        rows = frozen.snapshot("P")
+        assert rows.shape == np.unique(eng.materialisation()["P"], axis=0).shape
+        assert frozen.n_rows("P") >= rows.shape[0]
+
+    def test_count_eq_matches_snapshot(self):
+        eng, d = materialised_engine(paper_example)
+        frozen = eng.facts.freeze()
+        rows = frozen.snapshot("P")
+        value = int(rows[0, 1])
+        assert frozen.count_eq("P", 1, value) == int(
+            (rows[:, 1] == value).sum()
+        )
+        np.testing.assert_array_equal(
+            np.sort(frozen.eq_slice("P", 1, value), axis=0),
+            np.sort(rows[rows[:, 1] == value], axis=0),
+        )
+
+    def test_release_reclaims_scratch_nodes(self):
+        eng, _ = materialised_engine(paper_example)
+        store = eng.store
+        mark = store.mark()
+        a = store.new_constant(7, 5)
+        b = store.new_leaf(np.arange(4))
+        store.new_concat([a, b])
+        assert store.n_nodes() > mark or store._next_id > mark
+        store.release(mark)
+        assert store._next_id == mark
+        assert all(cid < mark for cid in store._nodes)
+
+
+class TestServingCaches:
+    def test_result_cache_hit_returns_equal_answers(self):
+        eng, d = materialised_engine(
+            lubm_like, n_dept=4, n_students=60, n_courses=8, seed=0
+        )
+        qe = QueryEngine(eng, d)
+        text = '?s, ?c <- memberOf(?s, "dept1"), takesCourse(?s, ?c)'
+        first = qe.answer(text)
+        second = qe.answer(text)
+        assert not first.from_cache and second.from_cache
+        np.testing.assert_array_equal(first.answers, second.answers)
+        assert qe.cache_stats()["result_hits"] == 1
+
+    def test_plan_cache(self):
+        eng, d = materialised_engine(
+            lubm_like, n_dept=4, n_students=60, n_courses=8, seed=0
+        )
+        qe = QueryEngine(eng, d, result_cache_size=0)
+        text = "?s, ?p <- advisor(?s, ?p)"
+        p1 = qe.plan(text)
+        p2 = qe.plan(text)
+        assert p1 is p2
+        assert qe.plan_hits == 1
+
+    def test_cached_answers_immune_to_caller_mutation(self):
+        eng, d = materialised_engine(
+            lubm_like, n_dept=4, n_students=60, n_courses=8, seed=0
+        )
+        qe = QueryEngine(eng, d)
+        text = "?s, ?p <- advisor(?s, ?p)"
+        first = qe.answer(text)
+        with pytest.raises(ValueError):
+            first.answers[:] = -1  # cached arrays are read-only
+        np.testing.assert_array_equal(qe.answer(text).answers, first.answers)
+
+    def test_empty_dictionary_is_still_a_dictionary(self):
+        # an empty Dictionary is falsy; the engine must not mistake it
+        # for 'no dictionary' and lose the unknown-constant sentinel
+        program, dataset = None, None
+        from repro.core.generators import random_kb
+
+        rng = np.random.default_rng(3)
+        program, dataset = random_kb(rng, n_constants=8, n_facts=20)
+        eng = CMatEngine(program)
+        eng.load(dataset)
+        eng.materialise()
+        qe = QueryEngine(eng, Dictionary())
+        res = qe.answer('?x <- P(?x, "unknownTerm")')
+        assert res.n_answers == 0
+
+    def test_unknown_constant_does_not_grow_dictionary(self):
+        eng, d = materialised_engine(
+            lubm_like, n_dept=4, n_students=60, n_courses=8, seed=0
+        )
+        qe = QueryEngine(eng, d)
+        n0 = len(d)
+        for i in range(20):
+            res = qe.answer(f'?s <- memberOf(?s, "nosuch{i}")')
+            assert res.n_answers == 0
+        assert len(d) == n0
+
+    def test_lru_eviction(self):
+        eng, d = materialised_engine(
+            lubm_like, n_dept=4, n_students=60, n_courses=8, seed=0
+        )
+        qe = QueryEngine(eng, d, result_cache_size=2)
+        texts = [f'?s <- memberOf(?s, "dept{i}")' for i in range(3)]
+        for t in texts:
+            qe.answer(t)
+        assert len(qe._result_cache) == 2
+        # oldest entry evicted -> re-answering it is a miss
+        qe.answer(texts[0])
+        assert qe.cache_stats()["result_hits"] == 0
+
+
+class TestAsk:
+    def test_ask_true_false(self):
+        eng, d = materialised_engine(paper_example)
+        qe = QueryEngine(eng, d)
+        assert qe.answer(parse_query('<- S("a2", "d")', d)).ask
+        assert not qe.answer(parse_query('<- S("a1", "d")', d)).ask
