@@ -38,10 +38,10 @@ def vectorised_dedup(new_rows: np.ndarray, m_rows: np.ndarray) -> np.ndarray:
     return not_in_m & first_occurrence_mask(codes_new)
 
 
-def run(csv=True):
+def run(csv=True, smoke=False):
     rng = np.random.default_rng(0)
     rows_out = []
-    for n in (1_000, 10_000, 100_000, 400_000):
+    for n in (1_000, 5_000) if smoke else (1_000, 10_000, 100_000, 400_000):
         m_rows = rng.integers(0, n, size=(n, 2)).astype(np.int64)
         new_rows = rng.integers(0, n, size=(n // 2, 2)).astype(np.int64)
 

@@ -78,8 +78,15 @@ def _bench_kb(kb_name: str, program, dataset, dictionary, query_texts):
         )
 
 
-def run() -> None:
-    program, dataset, d = lubm_like(n_dept=12, n_students=600, n_courses=40, seed=0)
+def run(smoke=False) -> None:
+    if smoke:
+        program, dataset, d = lubm_like(
+            n_dept=4, n_students=60, n_courses=10, seed=0
+        )
+    else:
+        program, dataset, d = lubm_like(
+            n_dept=12, n_students=600, n_courses=40, seed=0
+        )
     _bench_kb(
         "lubm",
         program,
@@ -93,7 +100,7 @@ def run() -> None:
         ],
     )
 
-    program, dataset, d = chain(n=150)
+    program, dataset, d = chain(n=30 if smoke else 150)
     _bench_kb(
         "chain",
         program,

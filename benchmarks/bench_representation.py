@@ -23,6 +23,12 @@ WORKLOADS = [
     ("bipartite", lambda: bipartite(n_left=250, n_right=250)),
 ]
 
+SMOKE_WORKLOADS = [
+    ("paper-example", lambda: paper_example(n=20, m=12)),
+    ("lubm-like", lambda: lubm_like(n_dept=4, n_students=60, n_courses=10)),
+    ("chain-TC", lambda: chain(n=30)),
+]
+
 
 def run_one(name, gen):
     program, dataset, _ = gen()
@@ -58,8 +64,9 @@ def run_one(name, gen):
     }
 
 
-def run(csv=True):
-    rows = [run_one(name, gen) for name, gen in WORKLOADS]
+def run(csv=True, smoke=False):
+    rows = [run_one(name, gen)
+            for name, gen in (SMOKE_WORKLOADS if smoke else WORKLOADS)]
     if csv:
         cols = list(rows[0].keys())
         print(",".join(cols))

@@ -1,13 +1,17 @@
 """Benchmark harness: one module per paper table + system benchmarks.
 
-    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--smoke]
 
-Prints one CSV block per benchmark.
+Prints one CSV block per benchmark.  ``--smoke`` runs tiny sizes for
+benches that support it (CI keeps the drivers from rotting without
+paying real benchmark time); benches without a ``smoke`` parameter run
+at their normal size.
 """
 
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 
@@ -15,6 +19,7 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true")
     args = ap.parse_args()
 
     from . import (
@@ -40,8 +45,11 @@ def main() -> None:
             continue
         print(f"\n=== bench:{name} ===", flush=True)
         t0 = time.time()
+        kwargs = {}
+        if args.smoke and "smoke" in inspect.signature(fn).parameters:
+            kwargs["smoke"] = True
         try:
-            fn()
+            fn(**kwargs)
             print(f"=== bench:{name} done in {time.time()-t0:.1f}s ===")
         except Exception as e:  # noqa: BLE001
             failures += 1

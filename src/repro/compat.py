@@ -1,0 +1,71 @@
+"""Feature-detected shims over the moving parts of the jax API.
+
+The distributed engine, the EP MoE path, and the launch drivers target
+the modern top-level API (``jax.shard_map`` with ``check_vma``,
+``jax.set_mesh``).  Older jax releases (this container ships 0.4.x) only
+have ``jax.experimental.shard_map.shard_map`` (``check_rep``, mandatory
+``mesh``) and no ambient-mesh setter — but ``jax.sharding.Mesh`` is a
+context manager that installs the physical mesh for the thread, which is
+exactly what ``set_mesh`` is used for here.
+
+Routing every call through this module keeps one code path working on
+both API generations, so environment skew cannot mask real regressions.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+__all__ = ["set_mesh", "shard_map", "HAS_NATIVE_SHARD_MAP", "HAS_NATIVE_SET_MESH"]
+
+HAS_NATIVE_SHARD_MAP = hasattr(jax, "shard_map")
+HAS_NATIVE_SET_MESH = hasattr(jax, "set_mesh")
+
+
+def set_mesh(mesh) -> contextlib.AbstractContextManager:
+    """``with set_mesh(mesh):`` — ambient mesh for the enclosed block.
+
+    Uses ``jax.set_mesh`` when present; otherwise ``Mesh`` itself (a
+    context manager on every 0.4.x release) installs the physical mesh.
+    """
+    if HAS_NATIVE_SET_MESH:
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def _ambient_mesh():
+    from jax._src.mesh import thread_resources
+
+    mesh = thread_resources.env.physical_mesh
+    if mesh is None or mesh.empty:
+        raise ValueError(
+            "shard_map called without a mesh and no ambient mesh is set; "
+            "wrap the call in `with repro.compat.set_mesh(mesh):`"
+        )
+    return mesh
+
+
+def shard_map(f, mesh=None, *, in_specs, out_specs, check_vma=None, **kwargs):
+    """``jax.shard_map`` across jax generations.
+
+    * new jax: forwards verbatim (``mesh=None`` resolves to the ambient
+      mesh inside jax; ``check_vma`` passed through when given);
+    * old jax: ``jax.experimental.shard_map.shard_map`` with ``check_vma``
+      translated to its predecessor ``check_rep`` and ``mesh=None``
+      resolved from the thread's ambient mesh at wrap time.
+    """
+    if HAS_NATIVE_SHARD_MAP:
+        if check_vma is not None:
+            kwargs["check_vma"] = check_vma
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    if mesh is None:
+        mesh = _ambient_mesh()
+    if check_vma is not None:
+        kwargs["check_rep"] = bool(check_vma)
+    return _shard_map(f, mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)

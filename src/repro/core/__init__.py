@@ -7,11 +7,13 @@ reference engine and a shard_map-distributed variant.
 """
 
 from .columns import ColumnStore, rle_encode
+from .compile import JoinStep, Plan, PlanCache, ScanStep, compile_body
 from .datalog import Atom, Program, Rule, parse_program, vertical_partition
 from .engine import CMatEngine, MaterialisationStats
 from .flat import FlatEngine, flat_seminaive
 from .frozen import FrozenFacts
 from .metafacts import FactStore, MetaFact, flat_repr_size
+from .program_graph import explain_strata, stratify
 from .terms import Dictionary
 
 __all__ = [
@@ -22,13 +24,20 @@ __all__ = [
     "FactStore",
     "FlatEngine",
     "FrozenFacts",
+    "JoinStep",
     "MaterialisationStats",
     "MetaFact",
+    "Plan",
+    "PlanCache",
     "Program",
     "Rule",
+    "ScanStep",
+    "compile_body",
+    "explain_strata",
     "flat_repr_size",
     "flat_seminaive",
     "parse_program",
     "rle_encode",
+    "stratify",
     "vertical_partition",
 ]

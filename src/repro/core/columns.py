@@ -144,6 +144,20 @@ class ColumnStore:
             node = self._nodes[node.children[0]]
         return int(node.run_values[0])
 
+    def head_values(self, cids: np.ndarray) -> np.ndarray:
+        """Batched :meth:`head_value`: each distinct id is resolved once,
+        then one gather maps the values back onto the input order (the
+        singleton-recompression fast path — length-one columns unfold to
+        exactly their head value)."""
+        cids = np.asarray(cids, dtype=np.int64)
+        if cids.size == 0:
+            return np.zeros(0, dtype=np.int64)
+        uniq, inv = np.unique(cids, return_inverse=True)
+        vals = np.empty(uniq.shape[0], dtype=np.int64)
+        for k, cid in enumerate(uniq):
+            vals[k] = self.head_value(int(cid))
+        return vals[inv]
+
     def depth(self, cid: int) -> int:
         """Meta-constant depth per Appendix B (leaf = 1)."""
         node = self._nodes[cid]

@@ -32,6 +32,8 @@ import numpy as np
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map
+from .compile import ArrayStats, compile_body
 from .datalog import Program
 
 EMPTY = jnp.int32(-1)
@@ -176,6 +178,10 @@ class DistributedEngine:
         self.join_capacity = join_capacity or capacity
         self.n_shards = mesh.shape[axis]
         self._compiled_round = None
+        #: shared-compiler plans per rule (populated by ``materialise``;
+        #: the naive distributed rounds have no delta pivot, so plans are
+        #: compiled with ``pivot=None`` over host-side dataset stats)
+        self._plans: dict = {}
         # TPU device path: dedup membership through the Pallas kernel
         self._member_fn = (
             sorted_member_kernel if use_pallas_kernels else sorted_member_jnp
@@ -277,7 +283,7 @@ class DistributedEngine:
             in_specs.extend([P(axis, None, None), P(axis)])
         out_specs = tuple(in_specs) + (P(), P())
 
-        shmapped = jax.shard_map(
+        shmapped = shard_map(
             body,
             mesh=self.mesh,
             in_specs=tuple(in_specs),
@@ -335,10 +341,18 @@ class DistributedEngine:
     def _eval_rule_local(self, rule, rels, emit, arities):
         """Evaluate one rule on the local shard; returns dropped-row count
         from the join-key re-partitioning (0 when no exchange happens)."""
-        body = rule.body
         head = rule.head
         cap = self.capacity
         zero = jnp.zeros((), jnp.int32)
+        # the shared compiler orders the body (small side anchors); the
+        # dryrun path calls _round_fn without a dataset, where no plan
+        # exists and the textual order is kept
+        plan = self._plans.get(rule)
+        body = (
+            tuple(plan.atom_order())
+            if plan is not None and not plan.is_empty
+            else rule.body
+        )
 
         def rows_valid(pred):
             rel = rels.get(pred)
@@ -425,6 +439,14 @@ class DistributedEngine:
         full = {
             p: dataset.get(p, np.zeros((0, arities[p]), dtype=np.int32))
             for p in preds
+        }
+        # compile each rule body through the shared compiler over the
+        # host-side dataset statistics: for the supported <= 2-atom
+        # bodies this picks which side anchors the local join (a plan
+        # over an initially-empty IDB predicate stays unordered)
+        stats_view = ArrayStats(full)
+        self._plans = {
+            rule: compile_body(rule.body, stats_view) for rule in self.program
         }
         sharded = self.shard_dataset(full)
         flat = []

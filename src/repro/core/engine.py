@@ -5,6 +5,17 @@ small, as in the paper); per-round bulk work (compression, joins, dedup)
 is vectorised column arithmetic — the numpy host path here, with the same
 primitives available as Pallas TPU kernels (``repro.kernels``) and as a
 ``shard_map`` distributed engine (``repro.core.distributed``).
+
+Rule bodies are conjunctive queries: each (rule, delta-pivot) pair is
+compiled through the shared body compiler (:mod:`repro.core.compile`) —
+the delta atom anchors the plan, remaining atoms are ordered by connected
+selectivity, and the sjoin/xjoin kind choice is plan metadata rather than
+an engine-loop dispatch.  Plans are cached per (rule, pivot) and
+re-planned only when a body predicate's cardinality bucket shifts.  The
+fixpoint itself runs stratum-by-stratum over the SCC condensation of the
+predicate dependency graph (:mod:`repro.core.program_graph`), and within
+a round, (rule, pivot) pairs whose pivot predicate received no delta are
+skipped without even a match probe (``rule_applications_skipped``).
 """
 
 from __future__ import annotations
@@ -15,11 +26,13 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from .columns import ColumnStore
+from .compile import FactStoreStats, Plan, PlanCache, compile_body, stats_bucket
 from .compress import compress_rows
 from .datalog import Program, Rule
 from .dedup import elim_dup
 from .joins import SubstSet, match, sjoin, xjoin
 from .metafacts import FactStore, MetaFact, flat_repr_size
+from .program_graph import stratify
 
 __all__ = ["CMatEngine", "MaterialisationStats"]
 
@@ -28,6 +41,10 @@ __all__ = ["CMatEngine", "MaterialisationStats"]
 class MaterialisationStats:
     rounds: int = 0
     n_rule_applications: int = 0
+    #: (rule, pivot) evaluations avoided without a match probe: the pivot
+    #: predicate received no delta, or a body predicate is still empty
+    rule_applications_skipped: int = 0
+    n_strata: int = 0
     n_meta_facts: int = 0
     n_facts: int = 0
     time_compress: float = 0.0
@@ -36,6 +53,8 @@ class MaterialisationStats:
     time_dedup: float = 0.0
     time_total: float = 0.0
     per_round: list[dict] = field(default_factory=list)
+    per_stratum: list[dict] = field(default_factory=list)
+    plan_cache: dict = field(default_factory=dict)
 
     def dominant_phase(self) -> str:
         phases = {
@@ -56,6 +75,9 @@ class CMatEngine:
         inplace_splits: bool = False,
         max_rounds: int = 10_000,
         dedup_index: bool = False,
+        plan_bodies: bool = True,
+        stratify_program: bool = True,
+        plan_cache: PlanCache | None = None,
     ):
         # ``inplace_splits=True`` is the paper's Algorithm 4 accounting
         # (mu(a) := b_in.b_out).  We found it unsound in general: a split
@@ -65,12 +87,20 @@ class CMatEngine:
         # ``P(x,y) -> W(x)``).  The sound default copies the survivors into
         # fresh leaves; fully-novel derivations still share wholesale, so
         # the headline compression results are unaffected (see DESIGN.md).
+        #
+        # ``plan_bodies=False`` keeps the strict left-to-right body order
+        # (the reference evaluation for differential testing);
+        # ``stratify_program=False`` runs every rule in every round.
         self.program = program
         self.store = ColumnStore()
         self.facts = FactStore(self.store)
         self.inplace_splits = inplace_splits
         self.max_rounds = max_rounds
         self.stats = MaterialisationStats()
+        self.plan_bodies = plan_bodies
+        self.stratify_program = stratify_program
+        self.plan_cache = plan_cache if plan_cache is not None else PlanCache()
+        self._stats_view = FactStoreStats(self.facts)
         self._explicit: dict[str, np.ndarray] = {}
         # persistent sorted dedup index (speed for memory — the paper's
         # reported bottleneck is dedup re-unpacking; see DedupIndex)
@@ -96,30 +126,71 @@ class CMatEngine:
 
     # ------------------------------------------------------------------ #
     def materialise(self) -> MaterialisationStats:
-        """Run the semi-naive fixpoint (Alg. 1 lines 6-23)."""
+        """Run the stratified semi-naive fixpoint (Alg. 1 lines 6-23).
+
+        Strata are processed in dependency order; within each stratum the
+        first round evaluates every rule naively over all facts derived
+        so far (none of its rules has ever run), and subsequent rounds
+        are standard delta-restricted semi-naive iterations."""
         t_start = time.perf_counter()
+        strata = (
+            stratify(self.program)
+            if self.stratify_program
+            else [list(self.program)]
+        )
+        self.stats.n_strata = len(strata)
         round_no = 0
-        while round_no < self.max_rounds:
-            self.facts.current_round = round_no
-            if not self.facts.has_delta():
-                break
-            round_no += 1
-            round_stats = self._round(round_no)
-            self.stats.per_round.append(round_stats)
+        for si, stratum in enumerate(strata):
+            naive = True
+            s_rounds = 0
+            s_round0 = len(self.stats.per_round)
+            while round_no < self.max_rounds:
+                self.facts.current_round = round_no
+                if not naive and not self.facts.has_delta():
+                    break
+                round_no += 1
+                s_rounds += 1
+                round_stats = self._round(round_no, stratum, naive=naive)
+                round_stats["stratum"] = si
+                self.stats.per_round.append(round_stats)
+                naive = False
+                if round_stats["new_meta_facts"] == 0:
+                    break
+            self.stats.per_stratum.append(
+                {
+                    "stratum": si,
+                    "rounds": s_rounds,
+                    "rules": len(stratum),
+                    "heads": sorted({r.head.predicate for r in stratum}),
+                    "rule_applications": sum(
+                        r["rule_applications"]
+                        for r in self.stats.per_round[s_round0:]
+                    ),
+                }
+            )
         self.stats.rounds = round_no
         self.stats.n_meta_facts = self.facts.n_meta_facts()
         self.stats.n_facts = self.facts.n_facts()
+        self.stats.plan_cache = self.plan_cache.counters()
         self.stats.time_total = time.perf_counter() - t_start
         return self.stats
 
     # ------------------------------------------------------------------ #
-    def _round(self, round_no: int) -> dict:
+    def _round(self, round_no: int, rules: list[Rule], naive: bool = False) -> dict:
         facts, store = self.facts, self.store
         candidates: dict[str, list[tuple[tuple[int, ...], int]]] = {}
         match_cache: dict = {}
         n_apps = 0
+        n_skipped = 0
+        self._stats_view.refresh()
+        if naive:
+            delta_preds = {p for p in facts.predicates() if facts.all(p)}
+        else:
+            delta_preds = {p for p in facts.predicates() if facts.delta(p)}
 
         def cached_match(atom, which: str) -> SubstSet:
+            # naive-round plans are compiled with pivot=None, so every
+            # scan reads "all" — no delta/old partition ever reaches here
             key = (atom.predicate, atom.terms, which)
             hit = match_cache.get(key)
             if hit is None:
@@ -134,13 +205,26 @@ class CMatEngine:
                 match_cache[key] = hit
             return hit
 
-        for rule in self.program:
-            n = len(rule.body)
-            for i in range(n):
-                # require B_i to match Delta (semi-naive restriction)
-                if cached_match(rule.body[i], "delta").is_empty():
+        for rule in rules:
+            if not rule.body:  # body-less fact rule: nothing to evaluate
+                continue
+            # the naive (first-of-stratum) round evaluates each rule once
+            # over all facts; with an empty ``old`` partition that is
+            # exactly the pivot-0 evaluation, so higher pivots are void
+            pivots = (0,) if naive else range(len(rule.body))
+            for i in pivots:
+                # semi-naive prefilter: no delta on the pivot predicate
+                # means this (rule, pivot) cannot derive anything new —
+                # skip it without even a match probe
+                if rule.body[i].predicate not in delta_preds:
+                    n_skipped += 1
                     continue
-                result = self._eval_body(rule, i, cached_match)
+                plan = self._plan(rule, i, naive)
+                if plan.is_empty:
+                    # a body predicate is still empty: nothing to probe
+                    n_skipped += 1
+                    continue
+                result = self._eval_plan(plan, cached_match)
                 if result is None or result.is_empty():
                     continue
                 n_apps += 1
@@ -159,41 +243,69 @@ class CMatEngine:
         for mf in delta:
             facts.add(mf)
         self.stats.n_rule_applications += n_apps
+        self.stats.rule_applications_skipped += n_skipped
         return {
             "round": round_no,
             "new_meta_facts": len(delta),
             "new_facts": sum(mf.length for mf in delta),
             "rule_applications": n_apps,
+            "rule_applications_skipped": n_skipped,
         }
 
     # ------------------------------------------------------------------ #
-    def _eval_body(self, rule: Rule, i: int, cached_match) -> SubstSet | None:
-        """Evaluate the body left-to-right (Alg. 1 lines 9-19)."""
-        L: SubstSet | None = None
-        V: set[str] = set()
-        for j, atom in enumerate(rule.body):
-            which = "old" if j < i else ("delta" if j == i else "all")
-            R = cached_match(atom, which)
+    def _plan(self, rule: Rule, pivot: int, naive: bool) -> Plan:
+        """Compile (rule, pivot) through the shared body compiler, cached
+        per statistics bucket.  Naive rounds read every atom from ``all``
+        (pivot ``None``) and are cached under their own key."""
+        sv = self._stats_view
+        key = (rule, None if naive else pivot)
+        bucket = stats_bucket(sv, rule.body)
+        return self.plan_cache.get(
+            key,
+            bucket,
+            lambda: compile_body(
+                rule.body,
+                sv,
+                pivot=None if naive else pivot,
+                reorder=self.plan_bodies,
+            ),
+        )
+
+    # ------------------------------------------------------------------ #
+    def _eval_plan(self, plan: Plan, cached_match) -> SubstSet | None:
+        """Evaluate a compiled body plan (Alg. 1 lines 9-19, reordered).
+
+        Scan sources (old/delta/all) and join kind/keys/direction all
+        come from the plan; the engine only drives match/sjoin/xjoin."""
+        L = cached_match(plan.first.atom, plan.first.source)
+        if L.is_empty():
+            return None
+        for step in plan.joins:
+            R = cached_match(step.scan.atom, step.scan.source)
             if R.is_empty():
                 return None
-            atom_vars = set(atom.variables())
             t0 = time.perf_counter()
-            if L is None:
-                L = R
-            elif V <= atom_vars:
-                L = sjoin(L, R, tuple(v for v in R.vars if v in V), self.store,
-                          self.inplace_splits)
-            elif atom_vars <= V:
-                L = sjoin(R, L, tuple(v for v in L.vars if v in atom_vars),
-                          self.store, self.inplace_splits)
+            if step.kind == "sjoin":
+                if step.filter_left:
+                    L = sjoin(R, L, step.key_vars, self.store,
+                              self.inplace_splits)
+                else:
+                    L = sjoin(L, R, step.key_vars, self.store,
+                              self.inplace_splits)
             else:
-                common = tuple(v for v in L.vars if v in atom_vars)
-                L = xjoin(L, R, common, self.store)
+                L = xjoin(L, R, step.key_vars, self.store)
             self.stats.time_join += time.perf_counter() - t0
-            V |= atom_vars
             if L.is_empty():
                 return None
         return L
+
+    # ------------------------------------------------------------------ #
+    def explain(self, rule: Rule, pivot: int = 0) -> str:
+        """Inspectable plan for one (rule, pivot) under current stats."""
+        self._stats_view.refresh()
+        return compile_body(
+            rule.body, self._stats_view, pivot=pivot, reorder=self.plan_bodies
+        ).explain()
 
     # ------------------------------------------------------------------ #
     def _emit_head(self, rule: Rule, L: SubstSet, candidates: dict) -> None:
@@ -226,14 +338,11 @@ class CMatEngine:
             if len(mfs) == 1:
                 keep.append(mfs[0])
                 continue
-            rows = np.stack(
-                [
-                    np.asarray(
-                        [self.store.head_value(c) for c in mf.columns], dtype=np.int64
-                    )
-                    for mf in mfs
-                ]
-            )
+            # one batched head-value gather per predicate (each column of
+            # a length-one meta-fact unfolds to exactly its head value)
+            cids = np.asarray([c for mf in mfs for c in mf.columns],
+                              dtype=np.int64)
+            rows = self.store.head_values(cids).reshape(len(mfs), -1)
             for cols, length in compress_rows(rows, self.store):
                 keep.append(MetaFact(pred, cols, length, round=round_no))
         return keep
@@ -252,6 +361,7 @@ class CMatEngine:
         )
         return {
             "rounds": self.stats.rounds,
+            "n_strata": self.stats.n_strata,
             "n_meta_facts": self.stats.n_meta_facts,
             "n_facts_explicit": int(sum(r.shape[0] for r in self._explicit.values())),
             "n_facts_materialised": int(
@@ -262,6 +372,9 @@ class CMatEngine:
             "compressed_size": self.facts.total_repr_size(),
             "mu_stats": self.facts.mu_stats(),
             "dominant_phase": self.stats.dominant_phase(),
+            "rule_applications": self.stats.n_rule_applications,
+            "rule_applications_skipped": self.stats.rule_applications_skipped,
+            "plan_cache": dict(self.stats.plan_cache),
             "time_total": self.stats.time_total,
             "time_dedup": self.stats.time_dedup,
             "time_join": self.stats.time_join,

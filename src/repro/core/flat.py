@@ -3,6 +3,13 @@
 Facts are plain ``(n, arity)`` int64 arrays per predicate; joins enumerate
 every matching pair.  This is both the correctness oracle for the
 compressed engine and the 'flat' baseline of the paper's Tables 1-4.
+
+Rule bodies go through the same body compiler as the compressed engine
+and the query planner (:mod:`repro.core.compile`): each (rule, pivot)
+pair compiles to a delta-anchored, selectivity-ordered plan, cached per
+statistics bucket.  The flat join is a generic hash equi-join, so only
+the atom order and the old/delta/all source partitions of the plan are
+consumed here — kind metadata drives the compressed engine.
 """
 
 from __future__ import annotations
@@ -12,6 +19,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from .compile import ArrayStats, PlanCache, compile_body, stats_bucket
 from .datalog import Program, Rule
 from .util import factorize_rows, multicol_member
 
@@ -81,9 +89,17 @@ def _join(left: _Table, right: _Table) -> _Table:
 class FlatEngine:
     """Semi-naive materialisation over flat fact arrays."""
 
-    def __init__(self, program: Program, max_rounds: int = 10_000):
+    def __init__(
+        self,
+        program: Program,
+        max_rounds: int = 10_000,
+        plan_bodies: bool = True,
+        plan_cache: PlanCache | None = None,
+    ):
         self.program = program
         self.max_rounds = max_rounds
+        self.plan_bodies = plan_bodies
+        self.plan_cache = plan_cache if plan_cache is not None else PlanCache()
         self.facts: dict[str, np.ndarray] = {}
         self.rounds = 0
         self.time_total = 0.0
@@ -101,10 +117,11 @@ class FlatEngine:
         rounds = 0
         while delta and rounds < self.max_rounds:
             rounds += 1
+            stats_view = ArrayStats(self.facts)
             derived: dict[str, list[np.ndarray]] = {}
             for rule in self.program:
                 for i in range(len(rule.body)):
-                    rows = self._eval(rule, i, delta)
+                    rows = self._eval(rule, i, delta, stats_view)
                     if rows is not None and rows.shape[0]:
                         derived.setdefault(rule.head.predicate, []).append(rows)
             new_delta: dict[str, np.ndarray] = {}
@@ -129,26 +146,37 @@ class FlatEngine:
         self.time_total = time.perf_counter() - t0
         return self.facts
 
-    def _eval(self, rule: Rule, i: int, delta: dict) -> np.ndarray | None:
+    def _source_rows(self, pred: str, source: str, delta: dict) -> np.ndarray | None:
+        """The plan's old/delta/all partitions over flat arrays."""
+        if source == "delta":
+            return delta.get(pred)
+        allr = self.facts.get(pred)
+        if source == "all" or allr is None:
+            return allr
+        # old = M \ Delta: facts minus the delta rows
+        d = delta.get(pred)
+        if d is None or d.shape[0] == 0:
+            return allr
+        return allr[~multicol_member(allr, d)]
+
+    def _eval(
+        self, rule: Rule, i: int, delta: dict, stats_view: ArrayStats
+    ) -> np.ndarray | None:
+        plan = self.plan_cache.get(
+            (rule, i),
+            stats_bucket(stats_view, rule.body),
+            lambda: compile_body(
+                rule.body, stats_view, pivot=i, reorder=self.plan_bodies
+            ),
+        )
+        if plan.is_empty:
+            return None
         L: _Table | None = None
-        for j, atom in enumerate(rule.body):
-            if j == i:
-                source = delta.get(atom.predicate)
-            elif j < i:
-                # M \ Delta: facts minus the delta rows
-                allr = self.facts.get(atom.predicate)
-                d = delta.get(atom.predicate)
-                if allr is None:
-                    source = None
-                elif d is None or d.shape[0] == 0:
-                    source = allr
-                else:
-                    source = allr[~multicol_member(allr, d)]
-            else:
-                source = self.facts.get(atom.predicate)
+        for step in [plan.first] + [j.scan for j in plan.joins]:
+            source = self._source_rows(step.atom.predicate, step.source, delta)
             if source is None or source.shape[0] == 0:
                 return None
-            R = _match_flat(atom, source)
+            R = _match_flat(step.atom, source)
             if R is None:
                 return None
             L = R if L is None else _join(L, R)

@@ -35,8 +35,10 @@ def in_set(
         return np.zeros(values.shape[0], dtype=bool)
     sorted_constants = np.sort(constants)
     if use_pallas:
+        from .ops import _metered
         from .sorted_member import sorted_member as _pallas_member
 
+        _metered("in_set", values.size)
         return np.asarray(
             _pallas_member(values, sorted_constants, interpret=interpret)
         )

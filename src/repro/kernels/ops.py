@@ -14,14 +14,46 @@ from .join_bounds import join_bounds as _join_bounds
 from .rle_expand import rle_expand as _rle_expand
 from .sorted_member import sorted_member as _sorted_member
 
-__all__ = ["member", "anti_join_mask", "expand_rle", "group_spans"]
+__all__ = [
+    "member",
+    "anti_join_mask",
+    "expand_rle",
+    "group_spans",
+    "meter",
+    "meter_reset",
+]
+
+#: kernel-launch metering: {op: [calls, elements]} — cheap host-side
+#: counters so benchmarks and the serving driver can report how much
+#: work the device path absorbed (reset with ``meter_reset``).  Counts
+#: *eager* launches only: inside a jit trace the Python side effect
+#: would fire once per trace, not per execution, so traced calls are
+#: excluded rather than silently underreported.
+_METER: dict[str, list[int]] = {}
+
+
+def _metered(op: str, n, operand=None) -> None:
+    if isinstance(operand, jax.core.Tracer):
+        return
+    cell = _METER.setdefault(op, [0, 0])
+    cell[0] += 1
+    cell[1] += int(n)
+
+
+def meter() -> dict[str, dict[str, int]]:
+    """Snapshot of per-op kernel traffic since the last reset."""
+    return {op: {"calls": c, "elements": e} for op, (c, e) in _METER.items()}
+
+
+def meter_reset() -> None:
+    _METER.clear()
 
 
 def member(a, b_sorted, *, interpret: bool = True, **blocks) -> jax.Array:
     """``out[i] = a[i] in b_sorted`` (semi-join filter)."""
-    return _sorted_member(
-        jnp.asarray(a), jnp.asarray(b_sorted), interpret=interpret, **blocks
-    )
+    a = jnp.asarray(a)
+    _metered("member", a.size, a)
+    return _sorted_member(a, jnp.asarray(b_sorted), interpret=interpret, **blocks)
 
 
 def anti_join_mask(new, old_sorted, *, interpret: bool = True, **blocks):
@@ -33,6 +65,7 @@ def anti_join_mask(new, old_sorted, *, interpret: bool = True, **blocks):
 def expand_rle(run_values, run_counts, total: int, *, interpret: bool = True,
                **blocks):
     """Unfold an RLE leaf meta-constant into ``total`` constants."""
+    _metered("expand_rle", int(total), run_values)
     return _rle_expand(
         jnp.asarray(run_values),
         jnp.asarray(run_counts),
@@ -45,6 +78,8 @@ def expand_rle(run_values, run_counts, total: int, *, interpret: bool = True,
 def group_spans(l_keys, r_sorted, *, interpret: bool = True, **blocks):
     """Per-left-key [lo, hi) spans in the sorted right keys — the
     cross-join group locator of Algorithm 5."""
+    l_keys = jnp.asarray(l_keys)
+    _metered("group_spans", l_keys.size, l_keys)
     return _join_bounds(
-        jnp.asarray(l_keys), jnp.asarray(r_sorted), interpret=interpret, **blocks
+        l_keys, jnp.asarray(r_sorted), interpret=interpret, **blocks
     )

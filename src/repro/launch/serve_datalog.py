@@ -118,8 +118,15 @@ def main(argv=None):
     stats = eng.materialise()
     t_mat = time.perf_counter() - t0
     print(
-        f"[materialise] {stats.rounds} rounds, {stats.n_facts} facts in "
-        f"{stats.n_meta_facts} meta-facts, {t_mat:.2f}s"
+        f"[materialise] {stats.rounds} rounds over {stats.n_strata} strata, "
+        f"{stats.n_facts} facts in {stats.n_meta_facts} meta-facts, {t_mat:.2f}s"
+    )
+    print(
+        f"[fixpoint] {stats.n_rule_applications} rule applications, "
+        f"{stats.rule_applications_skipped} skipped without a probe; "
+        f"plans: {stats.plan_cache.get('plans', 0)} compiled, "
+        f"{stats.plan_cache.get('plan_hits', 0)} hits, "
+        f"{stats.plan_cache.get('plan_replans', 0)} replans"
     )
 
     qe = QueryEngine(
@@ -175,6 +182,14 @@ def main(argv=None):
         f"{qe.frozen.snapshot_cells - warm_cells} after"
     )
     print(f"[store] {qe.frozen.store.n_nodes()} mu-nodes (flat across stream)")
+    if args.pallas:
+        from ..kernels import ops
+
+        traffic = ", ".join(
+            f"{op}: {m['calls']} calls / {m['elements']} elems"
+            for op, m in sorted(ops.meter().items())
+        )
+        print(f"[kernels] {traffic or 'no kernel launches'}")
     return 0
 
 

@@ -1,178 +1,47 @@
-"""Query planner: selectivity-ordered atom schedule + join-kind choice.
+"""Query planner: the shared body compiler applied to BGP queries.
 
-The planner turns a :class:`~repro.query.ast.Query` into an inspectable
-:class:`Plan` — a scan step followed by join steps — using only cheap
-statistics from :class:`~repro.core.frozen.FrozenFacts`:
-
-* per-atom cardinality estimates: represented fact count, scaled by the
-  estimated selectivity of each constant (exact frequency once a
-  snapshot exists, 1/RLE-run-count otherwise) and a fixed discount per
-  repeated variable,
-* greedy ordering: the most selective atom first (constants bound
-  first), then repeatedly the most selective atom *connected* to the
-  bound variables; disconnected atoms (cartesian) are deferred,
-* join kind per step, mirroring the materialisation engine's dispatch:
-  a semi-join when one side's variables cover the other's, the
-  structure-sharing ``xjoin`` otherwise.
+A query body is a conjunction of atoms — the same planning problem as a
+rule body under semi-naive evaluation, so since the one-body-compiler
+refactor all of the actual logic (cardinality estimation, greedy
+connected-selectivity ordering, join-kind/direction selection, the
+``Plan``/``ScanStep``/``JoinStep`` types) lives in
+:mod:`repro.core.compile` and is shared with all three materialisation
+engines.  This module is the request-path entry point: it feeds the
+compiler :class:`~repro.core.frozen.FrozenFacts` statistics (exact
+constant frequencies once a snapshot exists, RLE-run estimates
+otherwise) and attaches the query so plans ``explain()`` with their
+projection.
 
 Plans carry only estimates; the executor (``exec.py``) records actuals.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-
-from ..core.datalog import Atom
+from ..core.compile import (
+    SCAN_INDEX,
+    SCAN_SHARE,
+    JoinStep,
+    Plan,
+    ScanStep,
+    compile_body,
+    estimate_rows,
+)
 from ..core.frozen import FrozenFacts
-from .ast import Query, _atom_str
+from .ast import Query
 
-__all__ = ["ScanStep", "JoinStep", "Plan", "plan_query"]
-
-#: selectivity discount for a repeated variable inside one atom
-_REPEAT_DISCOUNT = 0.1
-
-# scan modes ------------------------------------------------------------- #
-#: share meta-fact columns wholesale (pure-variable atom, zero unfolding)
-SCAN_SHARE = "share"
-#: binary-search the frozen snapshot on the most selective constant
-SCAN_INDEX = "index"
-
-
-@dataclass(frozen=True)
-class ScanStep:
-    atom: Atom
-    mode: str  # SCAN_SHARE | SCAN_INDEX
-    est_rows: float
-
-    def __str__(self) -> str:
-        return (
-            f"scan[{self.mode}] {_atom_str(self.atom, None)} "
-            f"(~{self.est_rows:.0f} rows)"
-        )
-
-
-@dataclass(frozen=True)
-class JoinStep:
-    scan: ScanStep
-    kind: str  # "sjoin" | "xjoin"
-    key_vars: tuple[str, ...]
-    #: semi-join direction: True = the new atom filters the pipeline,
-    #: False = the pipeline filters the new atom
-    filter_left: bool = False
-
-    def __str__(self) -> str:
-        key = ", ".join(self.key_vars) if self.key_vars else "(cartesian)"
-        direction = ""
-        if self.kind == "sjoin":
-            direction = " filter=atom" if self.filter_left else " filter=pipeline"
-        return f"{self.kind} on [{key}]{direction} <- {self.scan}"
-
-
-@dataclass
-class Plan:
-    query: Query
-    first: ScanStep | None  # None => provably empty (unknown predicate)
-    joins: list[JoinStep] = field(default_factory=list)
-
-    @property
-    def is_empty(self) -> bool:
-        return self.first is None
-
-    def atom_order(self) -> list[Atom]:
-        if self.first is None:
-            return []
-        return [self.first.atom] + [j.scan.atom for j in self.joins]
-
-    def explain(self) -> str:
-        lines = [f"plan for: {self.query}"]
-        if self.first is None:
-            lines.append("  <empty: body atom over an unknown predicate>")
-            return "\n".join(lines)
-        lines.append(f"  1. {self.first}")
-        for i, j in enumerate(self.joins, start=2):
-            lines.append(f"  {i}. {j}")
-        lines.append(f"  {len(self.joins) + 2}. project [" +
-                     ", ".join(self.query.projection) + "]")
-        return "\n".join(lines)
-
-    def __str__(self) -> str:
-        return self.explain()
-
-
-def estimate_rows(frozen: FrozenFacts, atom: Atom) -> float:
-    """Estimated matching rows for one atom (0 if the predicate is absent
-    or its stored arity disagrees with the atom's)."""
-    n = frozen.n_rows(atom.predicate)
-    if n == 0 or frozen.arity(atom.predicate) != atom.arity:
-        return 0.0
-    est = float(n)
-    vars_seen: set[str] = set()
-    for pos, t in enumerate(atom.terms):
-        if isinstance(t, int):
-            est *= frozen.selectivity(atom.predicate, pos, t)
-        elif t in vars_seen:
-            est *= _REPEAT_DISCOUNT
-        else:
-            vars_seen.add(t)
-    return est
-
-
-def _scan_step(frozen: FrozenFacts, atom: Atom, est: float) -> ScanStep:
-    constrained = any(isinstance(t, int) for t in atom.terms) or len(
-        set(atom.variables())
-    ) != len(atom.terms)
-    mode = SCAN_INDEX if constrained else SCAN_SHARE
-    return ScanStep(atom, mode, est)
+__all__ = [
+    "ScanStep",
+    "JoinStep",
+    "Plan",
+    "plan_query",
+    "estimate_rows",
+    "SCAN_SHARE",
+    "SCAN_INDEX",
+]
 
 
 def plan_query(query: Query, frozen: FrozenFacts) -> Plan:
     """Greedy selectivity-ordered plan (constants bound first)."""
-    remaining = list(enumerate(query.body))
-    estimates = {i: estimate_rows(frozen, a) for i, a in remaining}
-    if any(frozen.arity(a.predicate) != a.arity or not frozen.meta_facts(a.predicate)
-           for _, a in remaining):
-        return Plan(query, None)
-
-    # first atom: constant-bound atoms outrank pure-variable ones (an
-    # indexed scan touches only matching rows whatever the predicate
-    # size), then most selective first (ties by body position)
-    def _anchor_key(ia):
-        i, a = ia
-        has_const = any(isinstance(t, int) for t in a.terms)
-        return (0 if has_const else 1, estimates[i], i)
-
-    remaining.sort(key=_anchor_key)
-    first_idx, first_atom = remaining.pop(0)
-    plan = Plan(query, _scan_step(frozen, first_atom, estimates[first_idx]))
-    bound: set[str] = set(first_atom.variables())
-
-    while remaining:
-        connected = [
-            (i, a) for i, a in remaining if bound & set(a.variables())
-        ]
-        pool = connected if connected else remaining
-        pool.sort(key=lambda ia: (estimates[ia[0]], ia[0]))
-        idx, atom = pool[0]
-        remaining.remove((idx, atom))
-
-        atom_vars = set(atom.variables())
-        shared = tuple(v for v in atom.variables() if v in bound)
-        if bound <= atom_vars:
-            # the pipeline's vars are all in the new atom: pipeline
-            # filters the atom's substitutions (semi-join keeps the atom side)
-            kind, filter_left = "sjoin", False
-        elif atom_vars <= bound:
-            # the new atom only restricts existing bindings
-            kind, filter_left = "sjoin", True
-        else:
-            kind, filter_left = "xjoin", False
-        plan.joins.append(
-            JoinStep(
-                _scan_step(frozen, atom, estimates[idx]),
-                kind,
-                shared,
-                filter_left,
-            )
-        )
-        bound |= atom_vars
-    return plan
+    return compile_body(
+        query.body, frozen, projection=query.projection, query=query
+    )

@@ -1,0 +1,229 @@
+"""Differential property tests for the shared body compiler.
+
+The invariants the one-body-compiler refactor must hold:
+
+* planner-ordered, stratified rule evaluation produces exactly the same
+  materialisation as the strict left-to-right reference and as the flat
+  engine, on random programs/KBs;
+* a plan-cache hit cannot change results (a warm cache driven through a
+  second engine reproduces the cold run bit-for-bit);
+* the delta pivot anchors the plan and fixes the old/delta/all sources;
+* stratification is a topologically-ordered partition of the rules.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import CMatEngine, FlatEngine
+from repro.core.compile import (
+    SRC_ALL,
+    SRC_DELTA,
+    SRC_OLD,
+    ArrayStats,
+    PlanCache,
+    compile_body,
+    stats_bucket,
+)
+from repro.core.datalog import parse_program
+from repro.core.generators import lubm_like, paper_example, random_kb
+from repro.core.program_graph import condensation, explain_strata, stratify
+
+
+def _materialise_cmat(program, dataset, **kwargs):
+    eng = CMatEngine(program, **kwargs)
+    eng.load(dataset)
+    eng.materialise()
+    return eng
+
+
+def _assert_same_materialisation(a, b, context=""):
+    assert set(a) == set(b), f"{context}: predicate sets differ"
+    for pred in a:
+        assert np.array_equal(a[pred], b[pred]), f"{context}: {pred} differs"
+
+
+# --------------------------------------------------------------------- #
+# differential: planner+strata == left-to-right reference == flat
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("seed", range(15))
+def test_random_programs_planner_matches_reference_and_flat(seed):
+    rng = np.random.default_rng(seed)
+    program, dataset = random_kb(rng)
+    planned = _materialise_cmat(program, dataset)
+    reference = _materialise_cmat(
+        program, dataset, plan_bodies=False, stratify_program=False
+    )
+    flat = FlatEngine(program)
+    flat.load(dataset)
+    flat_mat = {p: np.unique(r, axis=0) for p, r in flat.materialise().items()}
+
+    _assert_same_materialisation(
+        planned.materialisation(), reference.materialisation(),
+        f"seed={seed} planned vs reference",
+    )
+    _assert_same_materialisation(
+        planned.materialisation(), flat_mat, f"seed={seed} planned vs flat"
+    )
+
+
+@pytest.mark.parametrize("stratify_program", [True, False])
+@pytest.mark.parametrize("plan_bodies", [True, False])
+def test_lubm_all_engine_modes_agree(plan_bodies, stratify_program):
+    program, dataset, _ = lubm_like(n_dept=4, n_students=50, n_courses=8)
+    eng = _materialise_cmat(
+        program, dataset,
+        plan_bodies=plan_bodies, stratify_program=stratify_program,
+    )
+    flat = FlatEngine(program)
+    flat.load(dataset)
+    flat_mat = {p: np.unique(r, axis=0) for p, r in flat.materialise().items()}
+    _assert_same_materialisation(eng.materialisation(), flat_mat)
+
+
+def test_lubm_skips_rule_applications_without_probes():
+    program, dataset, _ = lubm_like(n_dept=4, n_students=50, n_courses=8)
+    eng = _materialise_cmat(program, dataset)
+    assert eng.stats.rule_applications_skipped > 0
+    assert eng.stats.n_strata > 1
+    assert sum(s["rounds"] for s in eng.stats.per_stratum) == eng.stats.rounds
+
+
+# --------------------------------------------------------------------- #
+# plan cache
+# --------------------------------------------------------------------- #
+def test_plan_cache_hit_does_not_change_results():
+    program, dataset, _ = paper_example(n=20, m=12)
+    shared = PlanCache()
+    cold = _materialise_cmat(program, dataset, plan_cache=shared)
+    hits_before = shared.hits
+    warm = _materialise_cmat(program, dataset, plan_cache=shared)
+    assert shared.hits > hits_before, "second run must hit the warm cache"
+    _assert_same_materialisation(
+        cold.materialisation(), warm.materialisation(), "cold vs warm cache"
+    )
+
+
+def test_plan_cache_replans_on_bucket_shift():
+    program = parse_program("P(x, y), Q(y, z) -> R(x, z)")
+    (rule,) = program.rules
+    small = ArrayStats({"P": np.zeros((4, 2), np.int64),
+                        "Q": np.zeros((4, 2), np.int64)})
+    big = ArrayStats({"P": np.zeros((4, 2), np.int64),
+                      "Q": np.zeros((4096, 2), np.int64)})
+    cache = PlanCache()
+    build = 0
+
+    def make(stats):
+        nonlocal build
+        build += 1
+        return compile_body(rule.body, stats, pivot=0)
+
+    p1 = cache.get((rule, 0), stats_bucket(small, rule.body), lambda: make(small))
+    p2 = cache.get((rule, 0), stats_bucket(small, rule.body), lambda: make(small))
+    assert p1 is p2 and build == 1 and cache.hits == 1
+    cache.get((rule, 0), stats_bucket(big, rule.body), lambda: make(big))
+    assert build == 2 and cache.replans == 1
+
+
+def test_flat_engine_shares_plan_cache_type():
+    program, dataset, _ = paper_example(n=10, m=6)
+    shared = PlanCache()
+    f1 = FlatEngine(program, plan_cache=shared)
+    f1.load(dataset)
+    m1 = f1.materialise()
+    f2 = FlatEngine(program, plan_cache=shared)
+    f2.load(dataset)
+    m2 = f2.materialise()
+    assert shared.hits > 0
+    _assert_same_materialisation(m1, m2, "flat warm cache")
+
+
+# --------------------------------------------------------------------- #
+# plan shape: pivot anchoring + sources
+# --------------------------------------------------------------------- #
+def test_pivot_anchors_plan_and_sets_sources():
+    program = parse_program("P(x, y), Q(y, z), R(z, w) -> S(x, w)")
+    (rule,) = program.rules
+    stats = ArrayStats({
+        "P": np.zeros((100, 2), np.int64),
+        "Q": np.zeros((1000, 2), np.int64),
+        "R": np.zeros((10, 2), np.int64),
+    })
+    for pivot in range(3):
+        plan = compile_body(rule.body, stats, pivot=pivot)
+        assert plan.first.atom == rule.body[pivot]
+        assert plan.first.source == SRC_DELTA
+        sources = {s.body_index: s.source
+                   for s in [plan.first] + [j.scan for j in plan.joins]}
+        for j in range(3):
+            expected = (SRC_DELTA if j == pivot
+                        else SRC_OLD if j < pivot else SRC_ALL)
+            assert sources[j] == expected, (pivot, j)
+
+
+def test_left_to_right_mode_keeps_body_order():
+    program = parse_program("P(x, y), Q(y, z), R(z, w) -> S(x, w)")
+    (rule,) = program.rules
+    stats = ArrayStats({
+        "P": np.zeros((1000, 2), np.int64),
+        "Q": np.zeros((10, 2), np.int64),
+        "R": np.zeros((1, 2), np.int64),
+    })
+    plan = compile_body(rule.body, stats, pivot=1, reorder=False)
+    assert tuple(plan.atom_order()) == rule.body
+
+
+def test_empty_body_rule_is_a_noop():
+    """Fact rules with no body parse fine and must not crash the
+    (naive-round) pivot loop — they simply derive nothing."""
+    from repro.core.datalog import Atom, Program, Rule
+
+    program = Program([Rule((), Atom("P", (1, 2)))])
+    for kwargs in ({}, {"plan_bodies": False, "stratify_program": False}):
+        eng = CMatEngine(program, **kwargs)
+        eng.load({"Q": np.asarray([[1, 2]], dtype=np.int64)})
+        eng.materialise()
+        assert "P" not in eng.materialisation()
+    assert compile_body((), ArrayStats({})).is_empty
+
+
+def test_rule_plan_explain_is_printable():
+    program = parse_program("P(x, y), Q(y, z) -> R(x, z)")
+    (rule,) = program.rules
+    stats = ArrayStats({"P": np.zeros((10, 2), np.int64),
+                        "Q": np.zeros((10, 2), np.int64)})
+    text = compile_body(rule.body, stats, pivot=1).explain()
+    assert "pivot=1" in text and "delta" in text and "scan[" in text
+
+
+# --------------------------------------------------------------------- #
+# stratification
+# --------------------------------------------------------------------- #
+def test_stratify_partitions_rules_topologically():
+    program = parse_program(
+        """
+        E(x, y) -> P(x, y)
+        P(x, y), P(y, z) -> P(x, z)
+        P(x, y) -> Q(x)
+        Q(x), R(x) -> T(x)
+        """
+    )
+    strata = stratify(program)
+    flat = [r for s in strata for r in s]
+    assert sorted(map(str, flat)) == sorted(map(str, program.rules))
+    comps = condensation(program)
+    order = {p: k for k, comp in enumerate(comps) for p in comp}
+    # every rule's body predicates live in components no later than its head
+    for rules in strata:
+        for rule in rules:
+            for atom in rule.body:
+                assert order[atom.predicate] <= order[rule.head.predicate]
+    # the mutually recursive P-rules share a stratum; Q after P, T after Q
+    def stratum_of(head):
+        return next(
+            k for k, rules in enumerate(strata)
+            if any(r.head.predicate == head for r in rules)
+        )
+
+    assert stratum_of("P") < stratum_of("Q") < stratum_of("T")
+    assert "recursive" in explain_strata(program)
