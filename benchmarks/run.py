@@ -1,17 +1,21 @@
 """Benchmark harness: one module per paper table + system benchmarks.
 
-    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--smoke]
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--smoke] \
+        [--json PATH]
 
 Prints one CSV block per benchmark.  ``--smoke`` runs tiny sizes for
 benches that support it (CI keeps the drivers from rotting without
 paying real benchmark time); benches without a ``smoke`` parameter run
-at their normal size.
+at their normal size.  ``--json PATH`` writes a machine-readable result
+file — per-bench status, wall time, and whatever structured rows the
+bench returns — which CI uploads as a build artifact.
 """
 
 from __future__ import annotations
 
 import argparse
 import inspect
+import json
 import sys
 import time
 
@@ -20,10 +24,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write per-bench results as JSON")
     args = ap.parse_args()
 
     from . import (
         bench_dedup,
+        bench_incremental,
         bench_kernels,
         bench_query,
         bench_representation,
@@ -38,8 +45,10 @@ def main() -> None:
         "kernels": bench_kernels.run,                # Pallas microbench
         "roofline": bench_roofline.run,              # deliverable (g)
         "query": bench_query.run,                    # compressed vs flat answering
+        "incremental": bench_incremental.run,        # update vs rematerialise
     }
     failures = 0
+    results: dict[str, dict] = {}
     for name, fn in benches.items():
         if args.only and name != args.only:
             continue
@@ -49,11 +58,29 @@ def main() -> None:
         if args.smoke and "smoke" in inspect.signature(fn).parameters:
             kwargs["smoke"] = True
         try:
-            fn(**kwargs)
-            print(f"=== bench:{name} done in {time.time()-t0:.1f}s ===")
+            rows = fn(**kwargs)
+            dt = time.time() - t0
+            print(f"=== bench:{name} done in {dt:.1f}s ===")
+            results[name] = {"status": "ok", "seconds": round(dt, 2)}
+            if isinstance(rows, (list, dict)):
+                results[name]["rows"] = rows
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"=== bench:{name} FAILED: {type(e).__name__}: {e} ===")
+            results[name] = {
+                "status": "failed",
+                "seconds": round(time.time() - t0, 2),
+                "error": f"{type(e).__name__}: {e}",
+            }
+    if args.json:
+        payload = {
+            "smoke": bool(args.smoke),
+            "failures": failures,
+            "benches": results,
+        }
+        with open(args.json, "w") as fh:
+            json.dump(payload, fh, indent=2, default=str)
+        print(f"[json] wrote {args.json}")
     if failures:
         sys.exit(1)
 

@@ -1,8 +1,10 @@
 """CompMat-JAX: Datalog reasoning over compressed RDF knowledge bases
 (Hu, Urbani, Motik, Horrocks — CIKM 2019) as a production JAX framework.
 
-Subpackages: ``core`` (the paper's engine), ``kernels`` (Pallas hot
-spots), ``models``/``configs`` (the 10 assigned architectures),
+Subpackages: ``core`` (the paper's engine), ``query`` (BGP answering
+over the frozen store), ``incremental`` (DRed/counting maintenance
+under live updates), ``kernels`` (Pallas hot spots),
+``models``/``configs`` (the 10 assigned architectures),
 ``data``/``optim``/``train`` (training substrate), ``launch`` (meshes,
 sharding, dry-run, drivers), ``roofline`` (HLO cost analysis).
 """

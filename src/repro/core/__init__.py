@@ -11,9 +11,9 @@ from .compile import JoinStep, Plan, PlanCache, ScanStep, compile_body
 from .datalog import Atom, Program, Rule, parse_program, vertical_partition
 from .engine import CMatEngine, MaterialisationStats
 from .flat import FlatEngine, flat_seminaive
-from .frozen import FrozenFacts
+from .frozen import FrozenFacts, SortedRows
 from .metafacts import FactStore, MetaFact, flat_repr_size
-from .program_graph import explain_strata, stratify
+from .program_graph import explain_strata, is_recursive, stratify
 from .terms import Dictionary
 
 __all__ = [
@@ -32,10 +32,12 @@ __all__ = [
     "Program",
     "Rule",
     "ScanStep",
+    "SortedRows",
     "compile_body",
     "explain_strata",
     "flat_repr_size",
     "flat_seminaive",
+    "is_recursive",
     "parse_program",
     "rle_encode",
     "stratify",

@@ -302,6 +302,11 @@ def stats_bucket(stats, atoms) -> tuple[int, ...]:
     return tuple(int(stats.n_rows(a.predicate)).bit_length() for a in atoms)
 
 
+#: estimated-vs-actual cardinality ratio beyond which a cached plan is
+#: recalibrated (dropped, so the next ``get`` re-plans with fresh stats)
+_FEEDBACK_RATIO = 4.0
+
+
 class PlanCache:
     """Plans keyed by (rule, pivot), guarded by a statistics bucket.
 
@@ -309,13 +314,26 @@ class PlanCache:
     bucket re-plans in place (counted as ``replans``).  Shareable across
     engines — the differential tests drive a warm cache through a second
     engine to prove cache hits cannot change results.
+
+    **Feedback recalibration.**  Executors report per-plan actuals via
+    :meth:`note_actual` (today: the first scan's matched substitutions
+    against its ``est_rows``).  When the estimate is off by more than
+    ``_FEEDBACK_RATIO`` in either direction, the entry is dropped so the
+    next ``get`` re-plans against current statistics — catching drift
+    *within* a power-of-two bucket, which the bucket guard cannot see.
+    Each key recalibrates at most once per bucket (re-planning with
+    unchanged stats reproduces the estimate, so repeating would thrash);
+    the observed log2 ratio is kept in ``est_log2_ratio`` for reporting.
     """
 
     def __init__(self):
         self._plans: dict = {}
+        self._calibrated: dict = {}  # key -> bucket already recalibrated
+        self.est_log2_ratio: dict = {}  # key -> last observed log2 ratio
         self.hits = 0
         self.misses = 0
         self.replans = 0
+        self.feedback_replans = 0
 
     def get(self, key, bucket: tuple[int, ...], build) -> Plan:
         entry = self._plans.get(key)
@@ -330,6 +348,24 @@ class PlanCache:
         self._plans[key] = (bucket, plan)
         return plan
 
+    def note_actual(self, key, est_rows: float, actual_rows: int) -> None:
+        """Record a plan's estimated-vs-actual first-scan cardinality;
+        drop the cached entry when the estimate is off by more than
+        ``_FEEDBACK_RATIO`` (once per statistics bucket)."""
+        entry = self._plans.get(key)
+        if entry is None:
+            return
+        ratio = max(float(actual_rows), 1.0) / max(float(est_rows), 1.0)
+        self.est_log2_ratio[key] = float(np.log2(ratio))
+        if 1.0 / _FEEDBACK_RATIO <= ratio <= _FEEDBACK_RATIO:
+            return
+        bucket = entry[0]
+        if self._calibrated.get(key) == bucket:
+            return  # already recalibrated in this bucket; don't thrash
+        self._calibrated[key] = bucket
+        del self._plans[key]
+        self.feedback_replans += 1
+
     def __len__(self) -> int:
         return len(self._plans)
 
@@ -338,6 +374,7 @@ class PlanCache:
             "plan_hits": self.hits,
             "plan_misses": self.misses,
             "plan_replans": self.replans,
+            "plan_feedback_replans": self.feedback_replans,
             "plans": len(self._plans),
         }
 

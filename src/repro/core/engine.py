@@ -30,11 +30,62 @@ from .compile import FactStoreStats, Plan, PlanCache, compile_body, stats_bucket
 from .compress import compress_rows
 from .datalog import Program, Rule
 from .dedup import elim_dup
+from .frozen import SortedRows
 from .joins import SubstSet, match, sjoin, xjoin
 from .metafacts import FactStore, MetaFact, flat_repr_size
 from .program_graph import stratify
 
 __all__ = ["CMatEngine", "MaterialisationStats"]
+
+#: below this many represented facts a constant-bound ``old`` scan just
+#: re-matches the meta-fact lists; above it the sorted snapshot pays off
+_OLD_SNAPSHOT_MIN_ROWS = 256
+
+
+class _OldPartitionSnapshots:
+    """Sorted flat snapshots of per-predicate ``old`` partitions.
+
+    In late semi-naive rounds the ``old`` partition is large and changes
+    by one small delta per round; re-matching its meta-fact list on a
+    constant-bound (or repeated-variable) atom unfolds and masks the
+    whole partition every time.  This cache keeps a
+    :class:`~repro.core.frozen.SortedRows` per predicate and *merges in*
+    only the rounds that entered ``old`` since the last request, so a
+    scan is one binary search + gather (ROADMAP: snapshot-backed rule
+    evaluation).  Built lazily — predicates never scanned this way cost
+    nothing.
+    """
+
+    def __init__(self, store: ColumnStore):
+        self.store = store
+        self._snap: dict[str, SortedRows] = {}
+        self._upto: dict[str, int] = {}  # rounds < upto are merged
+
+    def get(self, facts: FactStore, pred: str) -> SortedRows:
+        r = facts.current_round
+        sr = self._snap.get(pred)
+        upto = self._upto.get(pred, 0)
+        if sr is None:
+            rows = facts.unfold_pred(pred, "old")
+            sr = SortedRows(np.unique(rows, axis=0))
+        elif upto < r:
+            fresh = [
+                mf for mf in facts.all(pred) if upto <= mf.round < r
+            ]
+            if fresh:
+                cols = [
+                    np.concatenate(
+                        [self.store.unfold(mf.columns[j]) for mf in fresh]
+                    )
+                    for j in range(fresh[0].arity)
+                ]
+                merged = np.concatenate(
+                    [sr.rows, np.stack(cols, axis=1)]
+                )
+                sr = SortedRows(np.unique(merged, axis=0))
+        self._snap[pred] = sr
+        self._upto[pred] = r
+        return sr
 
 
 @dataclass
@@ -47,6 +98,9 @@ class MaterialisationStats:
     n_strata: int = 0
     n_meta_facts: int = 0
     n_facts: int = 0
+    #: constant-bound ``old`` scans served from sorted snapshots instead
+    #: of re-matching the partition's meta-fact list
+    old_snapshot_scans: int = 0
     time_compress: float = 0.0
     time_match: float = 0.0
     time_join: float = 0.0
@@ -78,6 +132,7 @@ class CMatEngine:
         plan_bodies: bool = True,
         stratify_program: bool = True,
         plan_cache: PlanCache | None = None,
+        snapshot_old_scans: bool = True,
     ):
         # ``inplace_splits=True`` is the paper's Algorithm 4 accounting
         # (mu(a) := b_in.b_out).  We found it unsound in general: a split
@@ -101,6 +156,14 @@ class CMatEngine:
         self.stratify_program = stratify_program
         self.plan_cache = plan_cache if plan_cache is not None else PlanCache()
         self._stats_view = FactStoreStats(self.facts)
+        # snapshots record unfolding *values*; in-place shuffle splits
+        # redefine node orderings mid-round, so the cache is only sound
+        # in the copy-mode default
+        self._old_snaps = (
+            _OldPartitionSnapshots(self.store)
+            if snapshot_old_scans and not inplace_splits
+            else None
+        )
         self._explicit: dict[str, np.ndarray] = {}
         # persistent sorted dedup index (speed for memory — the paper's
         # reported bottleneck is dedup re-unpacking; see DedupIndex)
@@ -195,12 +258,14 @@ class CMatEngine:
             hit = match_cache.get(key)
             if hit is None:
                 t0 = time.perf_counter()
-                hit = match(
-                    atom,
-                    getattr(facts, which)(atom.predicate),
-                    store,
-                    self.inplace_splits,
-                )
+                hit = self._snapshot_old_match(atom) if which == "old" else None
+                if hit is None:
+                    hit = match(
+                        atom,
+                        getattr(facts, which)(atom.predicate),
+                        store,
+                        self.inplace_splits,
+                    )
                 self.stats.time_match += time.perf_counter() - t0
                 match_cache[key] = hit
             return hit
@@ -224,7 +289,9 @@ class CMatEngine:
                     # a body predicate is still empty: nothing to probe
                     n_skipped += 1
                     continue
-                result = self._eval_plan(plan, cached_match)
+                result = self._eval_plan(
+                    plan, cached_match, (rule, None if naive else i)
+                )
                 if result is None or result.is_empty():
                     continue
                 n_apps += 1
@@ -272,7 +339,38 @@ class CMatEngine:
         )
 
     # ------------------------------------------------------------------ #
-    def _eval_plan(self, plan: Plan, cached_match) -> SubstSet | None:
+    def _snapshot_old_match(self, atom) -> SubstSet | None:
+        """Serve a constrained ``old``-partition scan from the sorted
+        snapshot cache (``None``: take the meta-fact-list path)."""
+        if self._old_snaps is None:
+            return None
+        vars_ = atom.variables()
+        constrained = any(isinstance(t, int) for t in atom.terms) or len(
+            vars_
+        ) != len(atom.terms)
+        if not constrained:
+            return None  # pure-variable scans share columns for free
+        pred = atom.predicate
+        old = self.facts.old(pred)
+        if not old or old[0].arity != len(atom.terms):
+            return None
+        if sum(mf.length for mf in old) < _OLD_SNAPSHOT_MIN_ROWS:
+            return None
+        rows = self._old_snaps.get(self.facts, pred).match_atom(atom)
+        self.stats.old_snapshot_scans += 1
+        if not vars_:
+            items = [((), int(rows.shape[0]))] if rows.shape[0] else []
+            return SubstSet((), items)
+        first_pos = {v: atom.terms.index(v) for v in vars_}
+        cols = rows[:, [first_pos[v] for v in vars_]]
+        if cols.shape[0] == 0:
+            return SubstSet(vars_)
+        return SubstSet(vars_, compress_rows(cols, self.store))
+
+    # ------------------------------------------------------------------ #
+    def _eval_plan(
+        self, plan: Plan, cached_match, plan_key=None
+    ) -> SubstSet | None:
         """Evaluate a compiled body plan (Alg. 1 lines 9-19, reordered).
 
         Scan sources (old/delta/all) and join kind/keys/direction all
@@ -280,6 +378,12 @@ class CMatEngine:
         L = cached_match(plan.first.atom, plan.first.source)
         if L.is_empty():
             return None
+        if plan_key is not None:
+            # estimated-vs-actual feedback: a badly-missed first-scan
+            # estimate recalibrates the cached plan (see PlanCache)
+            self.plan_cache.note_actual(
+                plan_key, plan.first.est_rows, L.n_substitutions()
+            )
         for step in plan.joins:
             R = cached_match(step.scan.atom, step.scan.source)
             if R.is_empty():
@@ -374,6 +478,7 @@ class CMatEngine:
             "dominant_phase": self.stats.dominant_phase(),
             "rule_applications": self.stats.n_rule_applications,
             "rule_applications_skipped": self.stats.rule_applications_skipped,
+            "old_snapshot_scans": self.stats.old_snapshot_scans,
             "plan_cache": dict(self.stats.plan_cache),
             "time_total": self.stats.time_total,
             "time_dedup": self.stats.time_dedup,

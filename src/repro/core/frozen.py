@@ -16,6 +16,13 @@ is frozen and
 Everything a query allocates lives above :meth:`ColumnStore.mark` and is
 reclaimed with :meth:`ColumnStore.release` after the answers are
 extracted, so the store does not grow across a query stream.
+
+:class:`SortedRows` is the reusable core of a snapshot — sorted unique
+rows plus lazy per-column sort orders with binary-searched equality
+slices.  Besides backing :class:`FrozenFacts` it serves the engines'
+``old``-partition scans (late semi-naive rounds re-read a large, slowly
+changing partition; see ``CMatEngine``) and the incremental subsystem's
+rederivation probes.
 """
 
 from __future__ import annotations
@@ -24,24 +31,102 @@ import numpy as np
 
 from .metafacts import FactStore
 
-__all__ = ["FrozenFacts"]
+__all__ = ["FrozenFacts", "SortedRows"]
+
+
+class SortedRows:
+    """Sorted, duplicate-free ``(n, arity)`` rows + lazy per-column
+    sort orders for binary-searched equality slices."""
+
+    def __init__(self, rows: np.ndarray):
+        self.rows = rows
+        self._col_order: dict[int, np.ndarray] = {}
+        self._sorted_col: dict[int, np.ndarray] = {}
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.rows.shape[0])
+
+    def col_order(self, pos: int) -> np.ndarray:
+        """Stable argsort of the rows on column ``pos``."""
+        order = self._col_order.get(pos)
+        if order is None:
+            order = np.argsort(self.rows[:, pos], kind="stable")
+            self._col_order[pos] = order
+        return order
+
+    def sorted_col(self, pos: int) -> np.ndarray:
+        col = self._sorted_col.get(pos)
+        if col is None:
+            col = self.rows[:, pos][self.col_order(pos)]
+            self._sorted_col[pos] = col
+        return col
+
+    def count_eq(self, pos: int, value: int) -> int:
+        """Exact number of rows with ``col[pos] == value``."""
+        col = self.sorted_col(pos)
+        lo = np.searchsorted(col, value, side="left")
+        hi = np.searchsorted(col, value, side="right")
+        return int(hi - lo)
+
+    def eq_slice(self, pos: int, value: int) -> np.ndarray:
+        """Rows with ``col[pos] == value`` — touches only the matching
+        rows (one binary search + a gather)."""
+        col = self.sorted_col(pos)
+        lo = np.searchsorted(col, value, side="left")
+        hi = np.searchsorted(col, value, side="right")
+        idx = self.col_order(pos)[lo:hi]
+        return self.rows[idx]
+
+    def match_atom(self, atom) -> np.ndarray:
+        """Rows matching an atom's constants / repeated variables,
+        anchored on the most selective constant (binary search); residual
+        constraints filter the candidate slice only."""
+        const_pos = [
+            (pos, t) for pos, t in enumerate(atom.terms) if isinstance(t, int)
+        ]
+        if const_pos:
+            best_pos, best_val = min(
+                const_pos, key=lambda pt: self.count_eq(pt[0], pt[1])
+            )
+            rows = self.eq_slice(best_pos, best_val)
+        else:
+            best_pos = -1
+            rows = self.rows
+        mask = np.ones(rows.shape[0], dtype=bool)
+        for pos, value in const_pos:
+            if pos != best_pos:
+                mask &= rows[:, pos] == value
+        vars_ = atom.variables()
+        first_pos = {v: atom.terms.index(v) for v in vars_}
+        for pos, t in enumerate(atom.terms):
+            if isinstance(t, str) and pos != first_pos[t]:
+                mask &= rows[:, pos] == rows[:, first_pos[t]]
+        return rows if mask.all() else rows[mask]
 
 
 class FrozenFacts:
     """Read-only view over a materialised fact store + lazy flat indexes."""
 
-    def __init__(self, facts: FactStore):
+    def __init__(
+        self,
+        facts: FactStore,
+        seed_rows: dict[str, np.ndarray] | None = None,
+    ):
         self.facts = facts
         self.store = facts.store
         self.freeze_mark = self.store.mark()
         # lazy caches --------------------------------------------------- #
-        self._rows: dict[str, np.ndarray] = {}  # sorted unique (n, arity)
-        self._col_order: dict[tuple[str, int], np.ndarray] = {}
-        self._sorted_col: dict[tuple[str, int], np.ndarray] = {}
+        self._sorted: dict[str, SortedRows] = {}
         self._n_rows: dict[str, int] = {}
         # instrumentation: cells unfolded while *building* snapshots —
         # a one-time warmup cost, reported separately from per-query work.
         self.snapshot_cells = 0
+        if seed_rows:
+            # pre-built snapshots (the incremental store maintains sorted
+            # unique rows across epochs — freezing then costs nothing)
+            for pred, rows in seed_rows.items():
+                self._sorted[pred] = SortedRows(rows)
 
     # ------------------------------------------------------------------ #
     # compressed access
@@ -75,51 +160,37 @@ class FrozenFacts:
     # ------------------------------------------------------------------ #
     # sorted dedup snapshots (lazy, cached)
     # ------------------------------------------------------------------ #
-    def snapshot(self, pred: str) -> np.ndarray:
-        """Sorted, duplicate-free ``(n, arity)`` rows of a predicate."""
-        rows = self._rows.get(pred)
-        if rows is None:
+    def sorted_rows(self, pred: str) -> SortedRows:
+        sr = self._sorted.get(pred)
+        if sr is None:
             unfolded = self.facts.unfold_pred(pred)
             self.snapshot_cells += int(unfolded.size)
-            rows = np.unique(unfolded, axis=0)
-            self._rows[pred] = rows
-        return rows
+            sr = SortedRows(np.unique(unfolded, axis=0))
+            self._sorted[pred] = sr
+        return sr
+
+    def snapshot(self, pred: str) -> np.ndarray:
+        """Sorted, duplicate-free ``(n, arity)`` rows of a predicate."""
+        return self.sorted_rows(pred).rows
 
     def has_snapshot(self, pred: str) -> bool:
-        return pred in self._rows
+        return pred in self._sorted
 
     def col_order(self, pred: str, pos: int) -> np.ndarray:
         """Stable argsort of the snapshot on column ``pos``."""
-        key = (pred, pos)
-        order = self._col_order.get(key)
-        if order is None:
-            order = np.argsort(self.snapshot(pred)[:, pos], kind="stable")
-            self._col_order[key] = order
-        return order
+        return self.sorted_rows(pred).col_order(pos)
 
     def sorted_col(self, pred: str, pos: int) -> np.ndarray:
-        key = (pred, pos)
-        col = self._sorted_col.get(key)
-        if col is None:
-            col = self.snapshot(pred)[:, pos][self.col_order(pred, pos)]
-            self._sorted_col[key] = col
-        return col
+        return self.sorted_rows(pred).sorted_col(pos)
 
     def count_eq(self, pred: str, pos: int, value: int) -> int:
         """Exact number of snapshot rows with ``col[pos] == value``."""
-        col = self.sorted_col(pred, pos)
-        lo = np.searchsorted(col, value, side="left")
-        hi = np.searchsorted(col, value, side="right")
-        return int(hi - lo)
+        return self.sorted_rows(pred).count_eq(pos, value)
 
     def eq_slice(self, pred: str, pos: int, value: int) -> np.ndarray:
         """Snapshot rows with ``col[pos] == value`` — touches only the
         matching rows (one binary search + a gather)."""
-        col = self.sorted_col(pred, pos)
-        lo = np.searchsorted(col, value, side="left")
-        hi = np.searchsorted(col, value, side="right")
-        idx = self.col_order(pred, pos)[lo:hi]
-        return self.snapshot(pred)[idx]
+        return self.sorted_rows(pred).eq_slice(pos, value)
 
     # ------------------------------------------------------------------ #
     def selectivity(self, pred: str, pos: int, value: int) -> float:

@@ -18,7 +18,13 @@ from __future__ import annotations
 
 from .datalog import Program, Rule
 
-__all__ = ["dependency_graph", "condensation", "stratify", "explain_strata"]
+__all__ = [
+    "dependency_graph",
+    "condensation",
+    "stratify",
+    "explain_strata",
+    "is_recursive",
+]
 
 
 def dependency_graph(program: Program) -> dict[str, set[str]]:
@@ -120,13 +126,18 @@ def explain_strata(program: Program) -> str:
     lines = [f"{len(strata)} strata over {len(program)} rules"]
     for k, rules in enumerate(strata):
         heads = sorted({r.head.predicate for r in rules})
-        tag = " (recursive)" if _is_recursive(rules) else ""
+        tag = " (recursive)" if is_recursive(rules) else ""
         lines.append(
             f"  stratum {k}: {len(rules)} rule(s), heads [{', '.join(heads)}]{tag}"
         )
     return "\n".join(lines)
 
 
-def _is_recursive(rules: list[Rule]) -> bool:
+def is_recursive(rules: list[Rule]) -> bool:
+    """True iff a stratum's rules feed their own heads (mutual recursion).
+
+    Non-recursive strata reach fixpoint in one round, and — used by the
+    incremental subsystem — admit *exact* derivation-count maintenance;
+    recursive strata fall back to Delete/Rederive."""
     heads = {r.head.predicate for r in rules}
     return any(a.predicate in heads for r in rules for a in r.body)

@@ -27,8 +27,14 @@ def sorted_member(a: np.ndarray, b_sorted: np.ndarray) -> np.ndarray:
 
 
 def factorize_rows(*row_sets: np.ndarray) -> list[np.ndarray]:
-    """Jointly factorize several ``(n_i, k)`` row sets into dense int codes
-    such that two rows (from any set) get equal codes iff they are equal."""
+    """Jointly factorize several ``(n_i, k)`` row sets into int codes
+    such that two rows (from any set) get equal codes iff they are equal
+    (codes are order-consistent with row order, not necessarily dense).
+
+    Pairs of dictionary-range ids (the dominant RDF case after vertical
+    partitioning) take a packing fast path — ``(a << 32) | b`` preserves
+    equality and lexicographic order and skips the O(n log n)
+    ``np.unique(axis=0)`` void-view sort entirely."""
     k = row_sets[0].shape[1] if row_sets[0].ndim == 2 else 1
     splits = np.cumsum([r.shape[0] for r in row_sets])[:-1]
     stacked = np.concatenate([np.atleast_2d(r.reshape(r.shape[0], -1)) for r in row_sets])
@@ -37,7 +43,9 @@ def factorize_rows(*row_sets: np.ndarray) -> list[np.ndarray]:
     if k == 0:
         codes = np.zeros(stacked.shape[0], dtype=np.int64)
     elif k == 1:
-        _, codes = np.unique(stacked[:, 0], return_inverse=True)
+        codes = stacked[:, 0]
+    elif k == 2 and stacked.min() >= 0 and stacked.max() < 2**31:
+        codes = (stacked[:, 0] << 32) | stacked[:, 1]
     else:
         _, codes = np.unique(stacked, axis=0, return_inverse=True)
     codes = codes.astype(np.int64)

@@ -1,0 +1,16 @@
+"""Incremental maintenance over the compressed store.
+
+The fourth engine subsystem: keeps ``mat(Pi, E)`` up to date in place
+under explicit insert/delete batches instead of re-running the fixpoint
+from scratch.  Recursive strata run Delete/Rederive with a
+backward/forward rederivation check (:mod:`repro.incremental.dred`);
+non-recursive strata maintain exact derivation counts
+(:mod:`repro.incremental.store`).  Everything compiles through the
+shared body compiler and operates on meta-facts — a meta-fact covering
+many triples is probed, split, or restored once.
+"""
+
+from .index import RowIndex
+from .store import IncrementalStats, IncrementalStore
+
+__all__ = ["IncrementalStore", "IncrementalStats", "RowIndex"]

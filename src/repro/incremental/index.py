@@ -1,0 +1,111 @@
+"""Maintained flat row index over the materialisation.
+
+The incremental store keeps, per predicate, the **sorted unique flat
+rows** of the current materialisation.  This is the same O(|I|)
+speed-for-memory trade the engine's ``DedupIndex`` makes, promoted to a
+first-class structure because every maintenance phase needs it:
+
+* membership probes (is an overdelete candidate actually materialised?
+  is a derived candidate fresh?) are one vectorised ``multicol_member``,
+* derivation-count columns align positionally with the rows, so count
+  scatter-updates are ``np.add.at`` over looked-up positions,
+* :meth:`rows` seeds :class:`~repro.core.frozen.FrozenFacts` snapshots
+  at freeze time, making per-epoch freezes O(1) instead of re-unfolding
+  the store.
+
+Mutations return the alignment information (sort permutation on insert,
+keep mask on remove) so callers can permute/mask parallel columns.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.util import factorize_rows, multicol_member
+
+__all__ = ["RowIndex", "merge_rows", "setdiff_rows"]
+
+_EMPTY = np.zeros((0, 1), dtype=np.int64)
+
+
+def merge_rows(a: np.ndarray | None, b: np.ndarray) -> np.ndarray:
+    """Sorted-unique union of two row sets (``a`` may be absent)."""
+    if a is None or a.shape[0] == 0:
+        return b
+    return np.unique(np.concatenate([a, b]), axis=0)
+
+
+def setdiff_rows(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Rows of ``a`` not occurring in ``b``."""
+    if a.shape[0] == 0 or b.shape[0] == 0:
+        return a
+    return a[~multicol_member(a, b)]
+
+
+def _lexsort_rows(rows: np.ndarray) -> np.ndarray:
+    """Permutation sorting rows lexicographically (first column primary —
+    the ``np.unique(axis=0)`` order)."""
+    keys = tuple(rows[:, j] for j in reversed(range(rows.shape[1])))
+    return np.lexsort(keys)
+
+
+class RowIndex:
+    """Per-predicate sorted unique ``(n, arity)`` row arrays."""
+
+    def __init__(self) -> None:
+        self._rows: dict[str, np.ndarray] = {}
+
+    def seed(self, pred: str, rows: np.ndarray) -> None:
+        self._rows[pred] = np.unique(
+            np.asarray(rows, dtype=np.int64), axis=0
+        )
+
+    def predicates(self):
+        return self._rows.keys()
+
+    def rows(self, pred: str) -> np.ndarray:
+        return self._rows.get(pred, _EMPTY)
+
+    def n_rows(self, pred: str) -> int:
+        return int(self.rows(pred).shape[0])
+
+    def member_mask(self, pred: str, q: np.ndarray) -> np.ndarray:
+        """Which rows of ``q`` are present."""
+        return multicol_member(q, self.rows(pred))
+
+    def positions(self, pred: str, q: np.ndarray) -> np.ndarray:
+        """Index of each row of ``q`` in the stored array.  Every row of
+        ``q`` must be present (probe with :meth:`member_mask` first)."""
+        rows = self.rows(pred)
+        codes_r, codes_q = factorize_rows(rows, q)
+        order = np.argsort(codes_r)  # stored rows are unique -> injective
+        pos = order[
+            np.searchsorted(codes_r[order], codes_q)
+        ]
+        return pos
+
+    def add(self, pred: str, q: np.ndarray) -> np.ndarray:
+        """Insert rows (must be unique and absent).  Returns the sort
+        permutation of ``concat(old_rows, q)`` so aligned columns can be
+        permuted identically."""
+        q = np.asarray(q, dtype=np.int64)
+        old = self._rows.get(pred)
+        merged = q if old is None or old.shape[0] == 0 else np.concatenate(
+            [old, q]
+        )
+        perm = _lexsort_rows(merged)
+        self._rows[pred] = merged[perm]
+        return perm
+
+    def remove(self, pred: str, q: np.ndarray) -> np.ndarray:
+        """Remove rows.  Returns the keep mask over the *previous* stored
+        array so aligned columns can be masked identically."""
+        rows = self.rows(pred)
+        keep = ~multicol_member(rows, q)
+        self._rows[pred] = rows[keep]
+        return keep
+
+    def to_dict(self) -> dict[str, np.ndarray]:
+        return {
+            p: r.copy() for p, r in self._rows.items() if r.shape[0]
+        }

@@ -1,0 +1,633 @@
+"""IncrementalStore: a live, updatable compressed materialisation.
+
+The paper materialises once; a serving system takes inserts and deletes
+continuously.  ``IncrementalStore`` wraps the compressed store built by
+:class:`~repro.core.engine.CMatEngine` and maintains ``mat(Pi, E)`` in
+place under explicit-fact update batches::
+
+    inc = IncrementalStore(program)
+    inc.load(dataset)                       # initial fixpoint (CMatEngine)
+    stats = inc.apply(additions, deletions) # incremental maintenance
+    frozen = inc.freeze()                   # epoch snapshot for queries
+
+``apply`` runs a **deletion sweep** then an **insertion sweep**, each
+stratum-by-stratum in the SCC topological order
+(:mod:`repro.core.program_graph`), so every stratum sees final deltas
+from the strata below it.  Per stratum the cheapest sound algorithm is
+chosen:
+
+* **non-recursive strata** (one fixpoint round; most of an RDFS/OWL RL
+  taxonomy) maintain exact per-fact **derivation counts**: the
+  telescoping identity ``old^n − new^n = Σ_i new^{<i} Δ_i old^{>i}``
+  counts every lost/gained rule instantiation exactly once, counts are
+  scatter-updated in one pass, and facts whose count reaches zero (and
+  are not explicit) are deleted — no overdeletion, no rederivation.
+* **recursive strata** fall back to Delete/Rederive with the
+  backward/forward rederivation check (:mod:`repro.incremental.dred`).
+
+Derivation counts are flat int64 columns aligned with the maintained
+:class:`~repro.incremental.index.RowIndex` rows; all phase evaluation
+runs inside :meth:`ColumnStore.mark`/``release`` scratch regions, so the
+mu-store grows only by what the update actually changes (split
+survivors + newly derived meta-facts), never by probe intermediates.
+
+Every batch appends to :attr:`journal` and bumps :attr:`epoch` — the
+serving layer version-stamps its query caches with the epoch and
+invalidates on change (``launch/serve_datalog.py --live``).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core.compile import SRC_DELTA, SRC_OLD, PlanCache
+from ..core.datalog import Program
+from ..core.engine import CMatEngine, MaterialisationStats
+from ..core.frozen import FrozenFacts
+from ..core.metafacts import MetaFact
+from ..core.program_graph import is_recursive, stratify
+from ..core.util import multicol_member
+from .dred import dred_stratum
+from .eval import (
+    PhaseStats,
+    evaluate_rule,
+    project_head,
+    rows_to_metafacts,
+)
+from .index import RowIndex, merge_rows
+
+__all__ = ["IncrementalStore", "IncrementalStats"]
+
+
+@dataclass
+class IncrementalStats(MaterialisationStats):
+    """Per-``apply`` maintenance statistics (extends the engine stats)."""
+
+    epoch: int = 0
+    n_del_explicit: int = 0  # explicit facts removed from E
+    n_add_explicit: int = 0  # explicit facts added to E
+    n_overdeleted: int = 0   # facts entering the DRed overdeletion set
+    n_rederived: int = 0     # overdeleted facts restored
+    n_deleted: int = 0       # net facts removed from the materialisation
+    n_inserted: int = 0      # net facts added to the materialisation
+    n_count_updates: int = 0  # derivation-count entries scatter-updated
+    counting_strata: int = 0  # strata maintained by exact count deltas
+    dred_strata: int = 0      # strata maintained by Delete/Rederive
+    time_overdelete: float = 0.0
+    time_delete: float = 0.0
+    time_rederive: float = 0.0
+    time_counting: float = 0.0
+    time_insert: float = 0.0
+
+
+def _normalise(batch) -> dict[str, np.ndarray]:
+    out: dict[str, np.ndarray] = {}
+    for pred, rows in (batch or {}).items():
+        rows = np.asarray(rows, dtype=np.int64)
+        if rows.ndim == 1:
+            rows = rows.reshape(-1, 1)
+        if rows.shape[0]:
+            out[pred] = np.unique(rows, axis=0)
+    return out
+
+
+class IncrementalStore:
+    """Journalled insert/delete maintenance over the compressed store."""
+
+    def __init__(
+        self,
+        program: Program,
+        *,
+        counting: bool = True,
+        plan_cache: PlanCache | None = None,
+    ):
+        self.program = program
+        self.strata = stratify(program)
+        self.engine = CMatEngine(program)
+        self.facts = self.engine.facts
+        self.store = self.engine.store
+        self.rows = RowIndex()
+        self.explicit: dict[str, np.ndarray] = {}
+        self.counting = counting
+        #: derivation-count columns, aligned with ``rows`` (heads of
+        #: non-recursive strata only; count = #one-step derivations
+        #: from the current materialisation + 1 if explicit)
+        self.counts: dict[str, np.ndarray] = {}
+        self.plan_cache = plan_cache if plan_cache is not None else PlanCache()
+        self.epoch = 0
+        self.journal: list[dict] = []
+        self._round = 0
+        self._head_preds = {r.head.predicate for r in program}
+        self._counting_preds: set[str] = set()
+        if counting:
+            for stratum in self.strata:
+                if not is_recursive(stratum):
+                    self._counting_preds.update(
+                        r.head.predicate for r in stratum
+                    )
+            # aligned-from-empty so apply() works on a never-loaded store
+            self.counts = {
+                p: np.zeros(0, dtype=np.int64) for p in self._counting_preds
+            }
+        self.arities: dict[str, int] = {}
+        for rule in program:
+            for atom in (rule.head, *rule.body):
+                self.arities.setdefault(atom.predicate, atom.arity)
+        self.stats_view = PhaseStats(self.facts, self.arities)
+        # per-apply pre-update meta-fact snapshots (read by the phases)
+        self.pre_mfs: dict[str, list] = {}
+
+    # ------------------------------------------------------------------ #
+    # initial build
+    # ------------------------------------------------------------------ #
+    def load(self, dataset: dict[str, np.ndarray]) -> MaterialisationStats:
+        """Compress + materialise the initial KB and build the row index
+        and derivation-count columns."""
+        dataset = _normalise(dataset)
+        for pred, rows in dataset.items():
+            self.explicit[pred] = rows
+            self.arities.setdefault(pred, int(rows.shape[1]))
+        self.engine.load(dataset)
+        stats = self.engine.materialise()
+        self._round = stats.rounds + 1
+        for pred, rows in self.facts.to_dict().items():
+            self.rows.seed(pred, rows)
+        if self.counting:
+            self._build_counts()
+        return stats
+
+    def _build_counts(self) -> None:
+        """Support counts for heads of non-recursive strata: one bounded
+        naive evaluation per rule over the final materialisation."""
+        computed = self.recompute_counts()
+        self.counts = computed
+
+    def recompute_counts(self) -> dict[str, np.ndarray]:
+        """Derivation counts from scratch (also the test oracle for the
+        maintained ones)."""
+        self.stats_view.refresh()
+        counts = {
+            p: np.zeros(self.rows.n_rows(p), dtype=np.int64)
+            for p in self._counting_preds
+        }
+
+        def current(pred: str, src: str) -> list:
+            return self.facts.all(pred)
+
+        for stratum in self.strata:
+            if is_recursive(stratum) or not self.counting:
+                continue
+            for rule in stratum:
+                if not rule.body:
+                    continue
+                mark = self.store.mark()
+                L = evaluate_rule(
+                    rule, None, current, self.store, self.stats_view,
+                    self.plan_cache,
+                )
+                if L is None:
+                    self.store.release(mark)
+                    continue
+                rows, cnts = project_head(
+                    rule.head, L, self.store, multiplicity=True
+                )
+                self.store.release(mark)
+                pred = rule.head.predicate
+                np.add.at(counts[pred], self.rows.positions(pred, rows), cnts)
+        for pred in self._counting_preds:
+            explicit = self.explicit.get(pred)
+            if explicit is not None and explicit.shape[0]:
+                present = explicit[self.rows.member_mask(pred, explicit)]
+                if present.shape[0]:
+                    counts[pred][self.rows.positions(pred, present)] += 1
+        return counts
+
+    # ------------------------------------------------------------------ #
+    # store mutation primitives (shared by all phases)
+    # ------------------------------------------------------------------ #
+    def delete_rows(self, pred: str, rows: np.ndarray) -> None:
+        """Remove flat rows from the compressed store: one vectorised
+        membership pass over the whole predicate (unfolds come from the
+        cache), then per-meta-fact mask slices; disjoint meta-facts stay
+        shared, partially-hit ones split copy-mode (one split per
+        distinct column, not per expanded triple)."""
+        mfs = self.facts.all(pred)
+        if mfs:
+            arity = mfs[0].arity
+            all_rows = np.stack(
+                [
+                    np.concatenate(
+                        [self.store.unfold(mf.columns[j]) for mf in mfs]
+                    )
+                    for j in range(arity)
+                ],
+                axis=1,
+            )
+            keep_all = ~multicol_member(all_rows, rows)
+            new_list = []
+            off = 0
+            for mf in mfs:
+                keep = keep_all[off : off + mf.length]
+                off += mf.length
+                if keep.all():
+                    new_list.append(mf)
+                elif keep.any():
+                    split_of = {
+                        c: self.store.split(c, keep, inplace=False)
+                        for c in dict.fromkeys(mf.columns)
+                    }
+                    new_list.append(
+                        MetaFact(
+                            pred,
+                            tuple(split_of[c] for c in mf.columns),
+                            int(keep.sum()),
+                            mf.round,
+                        )
+                    )
+            self.facts.replace(pred, new_list)
+        keep_mask = self.rows.remove(pred, rows)
+        if pred in self.counts:
+            self.counts[pred] = self.counts[pred][keep_mask]
+
+    def add_rows(
+        self,
+        pred: str,
+        rows: np.ndarray,
+        counts: np.ndarray | None = None,
+    ) -> list[MetaFact]:
+        """Compress fresh rows into meta-facts, append them, and keep the
+        row index (and count column, if any) aligned."""
+        self._round += 1
+        mfs = rows_to_metafacts(pred, rows, self.store, self._round)
+        for mf in mfs:
+            self.facts.add(mf)
+        perm = self.rows.add(pred, rows)
+        if pred in self.counts:
+            new_counts = (
+                counts
+                if counts is not None
+                else np.ones(rows.shape[0], dtype=np.int64)
+            )
+            self.counts[pred] = np.concatenate(
+                [self.counts[pred], new_counts]
+            )[perm]
+        return mfs
+
+    # ------------------------------------------------------------------ #
+    # the update entry point
+    # ------------------------------------------------------------------ #
+    def apply(
+        self,
+        additions: dict[str, np.ndarray] | None = None,
+        deletions: dict[str, np.ndarray] | None = None,
+    ) -> IncrementalStats:
+        """Maintain ``mat(Pi, E)`` for ``E' = (E \\ deletions) ∪
+        additions``; returns per-batch maintenance statistics.
+
+        Deletions of non-explicit facts and additions of already-explicit
+        facts are ignored (idempotent batches)."""
+        t_start = time.perf_counter()
+        st = IncrementalStats()
+        adds = _normalise(additions)
+        dels = _normalise(deletions)
+
+        # effective explicit deletions (E := E \ D)
+        eff_dels: dict[str, np.ndarray] = {}
+        for pred, rows in dels.items():
+            explicit = self.explicit.get(pred)
+            if explicit is None or explicit.shape[0] == 0:
+                continue
+            rows = rows[multicol_member(rows, explicit)]
+            if rows.shape[0]:
+                eff_dels[pred] = rows
+                self.explicit[pred] = explicit[
+                    ~multicol_member(explicit, rows)
+                ]
+                st.n_del_explicit += int(rows.shape[0])
+        if eff_dels:
+            self.stats_view.refresh()
+            self._deletion_sweep(eff_dels, st)
+
+        # effective explicit additions (E := E ∪ A)
+        eff_adds: dict[str, np.ndarray] = {}
+        for pred, rows in adds.items():
+            self.arities.setdefault(pred, int(rows.shape[1]))
+            explicit = self.explicit.get(pred)
+            if explicit is not None and explicit.shape[0]:
+                rows = rows[~multicol_member(rows, explicit)]
+            if rows.shape[0]:
+                eff_adds[pred] = rows
+                self.explicit[pred] = merge_rows(explicit, rows)
+                st.n_add_explicit += int(rows.shape[0])
+        if eff_adds:
+            self.stats_view.refresh()
+            self._insertion_sweep(eff_adds, st)
+
+        self.epoch += 1
+        st.epoch = self.epoch
+        st.n_strata = len(self.strata)
+        st.n_meta_facts = self.facts.n_meta_facts()
+        st.n_facts = self.facts.n_facts()
+        st.plan_cache = self.plan_cache.counters()
+        st.time_total = time.perf_counter() - t_start
+        self.journal.append(
+            {
+                "epoch": self.epoch,
+                "del_explicit": st.n_del_explicit,
+                "add_explicit": st.n_add_explicit,
+                "overdeleted": st.n_overdeleted,
+                "rederived": st.n_rederived,
+                "deleted": st.n_deleted,
+                "inserted": st.n_inserted,
+                "counting_strata": st.counting_strata,
+                "dred_strata": st.dred_strata,
+                "time_s": st.time_total,
+            }
+        )
+        return st
+
+    # ------------------------------------------------------------------ #
+    # deletion sweep
+    # ------------------------------------------------------------------ #
+    def _deletion_sweep(self, dels: dict[str, np.ndarray], st) -> None:
+        # pre-deletion view: list snapshots are stable because deletion
+        # splits copy (the original meta-facts keep their columns)
+        self.pre_mfs = {
+            p: list(self.facts.all(p)) for p in list(self.facts.predicates())
+        }
+        removed: dict[str, np.ndarray] = {}
+        t0 = time.perf_counter()
+        for pred, rows in dels.items():
+            if pred in self._head_preds:
+                continue  # handled by the predicate's stratum
+            rows = rows[self.rows.member_mask(pred, rows)]
+            if rows.shape[0]:
+                self.delete_rows(pred, rows)
+                removed[pred] = rows
+                st.n_deleted += int(rows.shape[0])
+        st.time_delete += time.perf_counter() - t0
+
+        for stratum in self.strata:
+            body_preds = {a.predicate for r in stratum for a in r.body}
+            stratum_heads = {r.head.predicate for r in stratum}
+            seeds = {
+                p: removed[p] for p in body_preds if p in removed
+            }
+            head_dels = {
+                p: dels[p] for p in stratum_heads if p in dels
+            }
+            if not seeds and not head_dels:
+                continue
+            self.stats_view.refresh()
+            if self.counting and not is_recursive(stratum):
+                net = self._counting_delete(stratum, seeds, head_dels, st)
+                st.counting_strata += 1
+            else:
+                net = dred_stratum(self, stratum, seeds, head_dels, st)
+                st.dred_strata += 1
+            for pred, rows in net.items():
+                removed[pred] = merge_rows(removed.get(pred), rows)
+
+    def _delta_derivation_counts(self, stratum, seeds, st):
+        """Per-head-predicate ``(rows, counts)`` blocks for the rule
+        instantiations a delta gains or loses, via the telescoping
+        identity: pivot → the delta, atoms before the pivot → the
+        *post-update* view, atoms after → the *pre-update* snapshot —
+        each changed instantiation is counted exactly once (shared by
+        the deletion and insertion counting sweeps)."""
+        acc: dict[str, list[tuple[np.ndarray, np.ndarray]]] = {}
+        if not seeds:
+            return acc
+        mark = self.store.mark()
+        delta_mfs = {
+            p: rows_to_metafacts(p, r, self.store) for p, r in seeds.items()
+        }
+
+        def sources(pred: str, src: str) -> list:
+            if src == SRC_DELTA:
+                return delta_mfs.get(pred, [])
+            if src == SRC_OLD:  # atoms before the pivot: new view
+                return self.facts.all(pred)
+            return self.pre_mfs.get(pred, [])  # after: old view
+
+        match_cache: dict = {}
+        for rule in stratum:
+            if not rule.body:
+                continue
+            for i, atom in enumerate(rule.body):
+                if atom.predicate not in delta_mfs:
+                    continue
+                L = evaluate_rule(
+                    rule, i, sources, self.store, self.stats_view,
+                    self.plan_cache, match_cache=match_cache,
+                )
+                st.n_rule_applications += 1
+                if L is None:
+                    continue
+                rows, cnts = project_head(
+                    rule.head, L, self.store, multiplicity=True
+                )
+                acc.setdefault(rule.head.predicate, []).append((rows, cnts))
+        self.store.release(mark)
+        return acc
+
+    def _counting_delete(self, stratum, seeds, head_dels, st):
+        """Exact count-decrement maintenance for a non-recursive stratum:
+        decrement by the lost derivations, delete facts reaching zero."""
+        t0 = time.perf_counter()
+        acc = self._delta_derivation_counts(stratum, seeds, st)
+        for pred, rows in head_dels.items():
+            rows = rows[self.rows.member_mask(pred, rows)]
+            if rows.shape[0]:  # the fact loses its explicit support
+                acc.setdefault(pred, []).append(
+                    (rows, np.ones(rows.shape[0], dtype=np.int64))
+                )
+
+        net: dict[str, np.ndarray] = {}
+        for pred, blocks in acc.items():
+            all_rows = np.concatenate([r for r, _ in blocks])
+            all_cnts = np.concatenate([c for _, c in blocks])
+            uniq, inv = np.unique(all_rows, axis=0, return_inverse=True)
+            lost = np.bincount(inv, weights=all_cnts).astype(np.int64)
+            pos = self.rows.positions(pred, uniq)
+            np.subtract.at(self.counts[pred], pos, lost)
+            st.n_count_updates += int(uniq.shape[0])
+            dead = uniq[self.counts[pred][pos] <= 0]
+            if dead.shape[0]:
+                self.delete_rows(pred, dead)
+                net[pred] = dead
+                st.n_deleted += int(dead.shape[0])
+        st.time_counting += time.perf_counter() - t0
+        return net
+
+    # ------------------------------------------------------------------ #
+    # insertion sweep
+    # ------------------------------------------------------------------ #
+    def _insertion_sweep(self, adds: dict[str, np.ndarray], st) -> None:
+        t_sweep = time.perf_counter()
+        self.pre_mfs = {
+            p: list(self.facts.all(p)) for p in list(self.facts.predicates())
+        }
+        added_mfs: dict[str, list] = {}
+        added: dict[str, np.ndarray] = {}
+
+        def note_added(pred, rows, mfs):
+            added[pred] = merge_rows(added.get(pred), rows)
+            added_mfs.setdefault(pred, []).extend(mfs)
+            st.n_inserted += int(rows.shape[0])
+
+        for pred, rows in adds.items():
+            if pred in self._head_preds:
+                continue  # handled by the predicate's stratum
+            note_added(pred, rows, self.add_rows(pred, rows))
+
+        for stratum in self.strata:
+            body_preds = {a.predicate for r in stratum for a in r.body}
+            stratum_heads = {r.head.predicate for r in stratum}
+            seeds = {
+                p: added_mfs[p] for p in body_preds if p in added_mfs
+            }
+            seed_rows = {p: added[p] for p in body_preds if p in added}
+            head_adds = {
+                p: adds[p] for p in stratum_heads if p in adds
+            }
+            if not seeds and not head_adds:
+                continue
+            self.stats_view.refresh()
+            if self.counting and not is_recursive(stratum):
+                self._counting_insert(
+                    stratum, seed_rows, head_adds, st, note_added
+                )
+                st.counting_strata += 1
+            else:
+                self._seminaive_insert(
+                    stratum, seeds, head_adds, st, note_added
+                )
+                st.dred_strata += 1
+        st.time_insert += time.perf_counter() - t_sweep
+
+    def _counting_insert(self, stratum, seeds, head_adds, st, note_added):
+        """Count-increment maintenance (mirror of :meth:`_counting_delete`
+        with the roles of old/new swapped); facts whose count becomes
+        positive enter the materialisation."""
+        t0 = time.perf_counter()
+        acc = self._delta_derivation_counts(stratum, seeds, st)
+        for pred, rows in head_adds.items():
+            acc.setdefault(pred, []).append(
+                (rows, np.ones(rows.shape[0], dtype=np.int64))
+            )
+
+        for pred, blocks in acc.items():
+            all_rows = np.concatenate([r for r, _ in blocks])
+            all_cnts = np.concatenate([c for _, c in blocks])
+            uniq, inv = np.unique(all_rows, axis=0, return_inverse=True)
+            gained = np.bincount(inv, weights=all_cnts).astype(np.int64)
+            present = self.rows.member_mask(pred, uniq)
+            if present.any():
+                pos = self.rows.positions(pred, uniq[present])
+                np.add.at(self.counts[pred], pos, gained[present])
+            st.n_count_updates += int(uniq.shape[0])
+            fresh = uniq[~present]
+            if fresh.shape[0]:
+                mfs = self.add_rows(pred, fresh, counts=gained[~present])
+                note_added(pred, fresh, mfs)
+        st.time_counting += time.perf_counter() - t0
+
+    def _seminaive_insert(self, stratum, seeds, head_adds, st, note_added):
+        """Standard semi-naive insertion for a recursive stratum: the
+        added meta-facts are the delta; candidates are deduplicated
+        against the row index."""
+        delta_mfs: dict[str, list] = {p: list(m) for p, m in seeds.items()}
+        for pred, rows in head_adds.items():
+            fresh = rows[~self.rows.member_mask(pred, rows)]
+            if fresh.shape[0]:
+                mfs = self.add_rows(pred, fresh)
+                delta_mfs.setdefault(pred, []).extend(mfs)
+                note_added(pred, fresh, mfs)
+
+        while delta_mfs:
+            delta_ids = {
+                id(mf) for lst in delta_mfs.values() for mf in lst
+            }
+            cur_delta = delta_mfs
+
+            def sources(pred: str, src: str) -> list:
+                if src == SRC_DELTA:
+                    return cur_delta.get(pred, [])
+                if src == SRC_OLD:
+                    return [
+                        mf
+                        for mf in self.facts.all(pred)
+                        if id(mf) not in delta_ids
+                    ]
+                return self.facts.all(pred)
+
+            mark = self.store.mark()
+            match_cache: dict = {}
+            derived: dict[str, list[np.ndarray]] = {}
+            for rule in stratum:
+                if not rule.body:
+                    continue
+                for i, atom in enumerate(rule.body):
+                    if atom.predicate not in delta_mfs:
+                        continue
+                    L = evaluate_rule(
+                        rule, i, sources, self.store, self.stats_view,
+                        self.plan_cache, match_cache=match_cache,
+                    )
+                    st.n_rule_applications += 1
+                    if L is None:
+                        continue
+                    rows, _ = project_head(rule.head, L, self.store)
+                    derived.setdefault(rule.head.predicate, []).append(rows)
+            self.store.release(mark)
+
+            new_delta: dict[str, list] = {}
+            for pred, blocks in derived.items():
+                cand = np.unique(np.concatenate(blocks), axis=0)
+                fresh = cand[~self.rows.member_mask(pred, cand)]
+                if fresh.shape[0]:
+                    mfs = self.add_rows(pred, fresh)
+                    new_delta[pred] = mfs
+                    note_added(pred, fresh, mfs)
+            delta_mfs = new_delta
+
+    # ------------------------------------------------------------------ #
+    # read side
+    # ------------------------------------------------------------------ #
+    def freeze(self) -> FrozenFacts:
+        """Epoch snapshot for query answering — the maintained row index
+        seeds the sorted snapshots, so freezing is O(1) per epoch."""
+        return FrozenFacts(self.facts, seed_rows=self.rows.to_dict())
+
+    def to_dict(self) -> dict[str, np.ndarray]:
+        """Flat per-predicate materialisation (sorted unique rows)."""
+        return self.rows.to_dict()
+
+    def check_integrity(self) -> None:
+        """Test/debug invariants: the row index matches the unfolded
+        store, and maintained counts match a from-scratch recount."""
+        unfolded = self.facts.to_dict()
+        index = self.to_dict()
+        preds = {p for p, r in unfolded.items() if r.shape[0]} | set(index)
+        for pred in preds:
+            a = unfolded.get(pred)
+            b = index.get(pred)
+            a = a if a is not None else np.zeros((0, 1), dtype=np.int64)
+            b = b if b is not None else np.zeros((0, 1), dtype=np.int64)
+            if a.shape != b.shape or not np.array_equal(a, b):
+                raise AssertionError(f"row index diverged for {pred!r}")
+        if self.counting:
+            expect = self.recompute_counts()
+            for pred, want in expect.items():
+                got = self.counts.get(
+                    pred, np.zeros(0, dtype=np.int64)
+                )
+                if not np.array_equal(got, want):
+                    raise AssertionError(
+                        f"derivation counts diverged for {pred!r}: "
+                        f"{got.tolist()} != {want.tolist()}"
+                    )

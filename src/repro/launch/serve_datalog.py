@@ -14,6 +14,16 @@ Query streams are drawn from per-KB templates with Zipf-distributed
 constants — a serving-realistic skew where popular entities repeat and
 the result cache pays off.  ``--no-result-cache`` measures pure
 evaluation throughput instead.
+
+``--live`` turns the driver into an *update-serving* loop: the KB is
+held in an :class:`repro.incremental.IncrementalStore`, and every
+``--update-every`` queries a batch of ``--update-size`` explicit facts
+is deleted (and the batch deleted one update earlier re-inserted, so the
+KB churns without draining).  Each applied batch bumps the query
+engine's epoch, invalidating the version-stamped plan/result caches;
+the report adds apply-latency percentiles, per-epoch stale evictions,
+and — with ``--live-verify`` — a final differential check against a
+from-scratch materialisation of the ending fact set.
 """
 
 from __future__ import annotations
@@ -25,6 +35,7 @@ import numpy as np
 
 from ..core import CMatEngine
 from ..core.generators import chain, lubm_like, paper_example, star
+from ..incremental import IncrementalStore
 from ..query import QueryEngine
 
 
@@ -95,6 +106,36 @@ def make_stream(name: str, scale: int, n_queries: int, zipf: float, seed: int):
     return out
 
 
+def _rows_by_pred(items):
+    out: dict[str, list] = {}
+    for pred, row in items:
+        out.setdefault(pred, []).append(row)
+    return {p: np.asarray(r, dtype=np.int64) for p, r in out.items()}
+
+
+def make_update_batches(dataset, n_updates: int, size: int, seed: int):
+    """Rotating explicit-fact update batches: each batch deletes ``size``
+    facts from a shuffled pool and re-inserts the batch deleted one
+    update earlier (the KB churns but never drains)."""
+    rng = np.random.default_rng(seed + 1)
+    pool = [
+        (pred, tuple(int(v) for v in row))
+        for pred, rows in dataset.items()
+        for row in np.asarray(rows).reshape(len(rows), -1)
+    ]
+    rng.shuffle(pool)
+    batches = []
+    prev: list = []
+    off = 0
+    for _ in range(n_updates):
+        cur = [pool[(off + j) % len(pool)] for j in range(size)]
+        off += size
+        # (deletions, additions)
+        batches.append((_rows_by_pred(cur), _rows_by_pred(prev)))
+        prev = cur
+    return batches
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--kb", default="lubm", choices=["lubm", "chain", "star", "paper"])
@@ -106,16 +147,33 @@ def main(argv=None):
     ap.add_argument("--pallas", action="store_true",
                     help="route constant lookups through the Pallas kernel "
                          "(interpret mode off-TPU)")
+    ap.add_argument("--live", action="store_true",
+                    help="serve updates interleaved with queries through "
+                         "the incremental maintenance subsystem")
+    ap.add_argument("--update-every", type=int, default=200,
+                    help="apply an update batch every N queries (--live)")
+    ap.add_argument("--update-size", type=int, default=8,
+                    help="explicit facts deleted (and re-inserted) per batch")
+    ap.add_argument("--live-verify", action="store_true",
+                    help="differentially check the final store against a "
+                         "from-scratch materialisation (--live)")
     args = ap.parse_args(argv)
 
     program, dataset, dictionary = build_kb(args.kb, args.scale)
     n_explicit = sum(np.asarray(r).shape[0] for r in dataset.values())
     print(f"[kb:{args.kb}] {n_explicit} explicit facts, {len(program)} rules")
 
-    eng = CMatEngine(program, dedup_index=True)
-    eng.load(dataset)
     t0 = time.perf_counter()
-    stats = eng.materialise()
+    if args.live:
+        inc = IncrementalStore(program)
+        stats = inc.load(dataset)
+        source = inc
+    else:
+        inc = None
+        eng = CMatEngine(program, dedup_index=True)
+        eng.load(dataset)
+        stats = eng.materialise()
+        source = eng
     t_mat = time.perf_counter() - t0
     print(
         f"[materialise] {stats.rounds} rounds over {stats.n_strata} strata, "
@@ -130,7 +188,7 @@ def main(argv=None):
     )
 
     qe = QueryEngine(
-        eng,
+        source,
         dictionary,
         result_cache_size=0 if args.no_result_cache else 1024,
         use_pallas=args.pallas,
@@ -140,6 +198,15 @@ def main(argv=None):
         print("[serve] empty query stream (--n-queries 0); nothing to do")
         return 0
 
+    update_at = max(args.update_every, 1)
+    batches = (
+        make_update_batches(
+            dataset, len(stream) // update_at + 1, args.update_size, args.seed
+        )
+        if args.live
+        else []
+    )
+
     # warmup: build snapshots + plans off the measured path
     for text in dict.fromkeys(stream[: min(50, len(stream))]):
         qe.answer(text)
@@ -147,9 +214,18 @@ def main(argv=None):
     warm_cache = qe.cache_stats()
 
     latencies = np.zeros(len(stream))
+    apply_lat: list[float] = []
     n_answers = 0
+    next_batch = 0
     t_serve0 = time.perf_counter()
     for i, text in enumerate(stream):
+        if args.live and i and i % update_at == 0 and next_batch < len(batches):
+            deletions, additions = batches[next_batch]
+            next_batch += 1
+            t0 = time.perf_counter()
+            inc.apply(additions=additions, deletions=deletions)
+            qe.bump_epoch(inc)
+            apply_lat.append(time.perf_counter() - t0)
         t0 = time.perf_counter()
         res = qe.answer(text)
         latencies[i] = time.perf_counter() - t0
@@ -182,6 +258,34 @@ def main(argv=None):
         f"{qe.frozen.snapshot_cells - warm_cells} after"
     )
     print(f"[store] {qe.frozen.store.n_nodes()} mu-nodes (flat across stream)")
+    if args.live:
+        ap_ms = np.asarray(apply_lat) * 1e3 if apply_lat else np.zeros(1)
+        total_journal = inc.journal
+        print(
+            f"[live] {len(apply_lat)} update batches applied "
+            f"(epoch {inc.epoch}), apply p50={np.percentile(ap_ms, 50):.2f}ms "
+            f"p99={np.percentile(ap_ms, 99):.2f}ms; "
+            f"{sum(j['deleted'] for j in total_journal)} deleted / "
+            f"{sum(j['inserted'] for j in total_journal)} inserted facts, "
+            f"{sum(j['rederived'] for j in total_journal)} rederived; "
+            f"{qe.stale_evictions} stale cache entries evicted"
+        )
+        if args.live_verify:
+            from ..core import flat_seminaive
+
+            want = {
+                p: r
+                for p, r in flat_seminaive(program, inc.explicit).items()
+                if r.shape[0]
+            }
+            got = inc.to_dict()
+            ok = set(want) == set(got) and all(
+                np.array_equal(want[p], got[p]) for p in want
+            )
+            print(f"[live-verify] {'OK' if ok else 'MISMATCH'} "
+                  f"({sum(r.shape[0] for r in want.values())} facts)")
+            if not ok:
+                return 1
     if args.pallas:
         from ..kernels import ops
 

@@ -14,7 +14,13 @@ Serving behaviour:
 * **plan cache** (LRU): a query shape is planned once,
 * **result cache** (LRU): repeated queries are answered by lookup,
 * scratch reclamation: every miss evaluates in a released scratch region
-  of the column store, so memory stays flat across millions of requests.
+  of the column store, so memory stays flat across millions of requests,
+* **epoch stamping**: plan and result entries are stamped with the KB
+  epoch they were computed at; :meth:`QueryEngine.bump_epoch` (called by
+  the live-update serving loop after every applied batch) makes stale
+  entries miss and evict lazily, so a mutated store can never serve
+  pre-update answers — and a pre-update *plan*, whose emptiness shortcut
+  and scan modes were derived from stale statistics, is re-planned too.
 """
 
 from __future__ import annotations
@@ -88,14 +94,7 @@ class QueryEngine:
         use_pallas: bool = False,
         interpret: bool = True,
     ):
-        if isinstance(source, CMatEngine):
-            self.frozen = source.facts.freeze()
-        elif isinstance(source, FactStore):
-            self.frozen = source.freeze()
-        elif isinstance(source, FrozenFacts):
-            self.frozen = source
-        else:
-            raise TypeError(f"cannot build QueryEngine from {type(source)!r}")
+        self.frozen = self._resolve_frozen(source)
         self.dictionary = dictionary
         # 'is not None': an empty Dictionary is falsy but still a dictionary
         self._parse_dict = (
@@ -110,6 +109,31 @@ class QueryEngine:
         self._result_cache_size = result_cache_size
         self.plan_hits = self.plan_misses = 0
         self.result_hits = self.result_misses = 0
+        #: KB version: entries cached at an older epoch are stale
+        self.epoch = 0
+        self.stale_evictions = 0
+
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def _resolve_frozen(source) -> FrozenFacts:
+        if isinstance(source, FrozenFacts):
+            return source
+        if isinstance(source, CMatEngine):
+            return source.facts.freeze()
+        if isinstance(source, FactStore):
+            return source.freeze()
+        if hasattr(source, "freeze"):  # e.g. incremental.IncrementalStore
+            return source.freeze()
+        raise TypeError(f"cannot build QueryEngine from {type(source)!r}")
+
+    def bump_epoch(self, source) -> None:
+        """Switch to a new KB snapshot after an applied update batch.
+
+        Every plan/result entry cached before this call is version-
+        stamped with the previous epoch and will miss (and be evicted)
+        on its next lookup."""
+        self.frozen = self._resolve_frozen(source)
+        self.epoch += 1
 
     # ------------------------------------------------------------------ #
     @staticmethod
@@ -122,6 +146,25 @@ class QueryEngine:
     @staticmethod
     def _lru_put(cache: OrderedDict, key, value, capacity: int) -> None:
         cache[key] = value
+        if len(cache) > capacity:
+            cache.popitem(last=False)
+
+    def _stamped_get(self, cache: OrderedDict, key):
+        """Epoch-checked LRU lookup: entries stamped with an older epoch
+        are evicted and reported as misses."""
+        hit = cache.get(key)
+        if hit is None:
+            return None
+        entry_epoch, value = hit
+        if entry_epoch != self.epoch:
+            del cache[key]
+            self.stale_evictions += 1
+            return None
+        cache.move_to_end(key)
+        return value
+
+    def _stamped_put(self, cache: OrderedDict, key, value, capacity: int) -> None:
+        cache[key] = (self.epoch, value)
         if len(cache) > capacity:
             cache.popitem(last=False)
 
@@ -144,13 +187,13 @@ class QueryEngine:
     def plan(self, query: Query | str) -> Plan:
         if isinstance(query, str):
             query = self.parse(query)
-        plan = self._lru_get(self._plan_cache, query)
+        plan = self._stamped_get(self._plan_cache, query)
         if plan is not None:
             self.plan_hits += 1
             return plan
         self.plan_misses += 1
         plan = plan_query(query, self.frozen)
-        self._lru_put(self._plan_cache, query, plan, self._plan_cache_size)
+        self._stamped_put(self._plan_cache, query, plan, self._plan_cache_size)
         return plan
 
     def explain(self, query: Query | str) -> str:
@@ -160,7 +203,7 @@ class QueryEngine:
         if isinstance(query, str):
             query = self.parse(query)
         if self._result_cache_size > 0:
-            hit = self._lru_get(self._result_cache, query)
+            hit = self._stamped_get(self._result_cache, query)
             if hit is not None:
                 self.result_hits += 1
                 return QueryResult(
@@ -179,7 +222,7 @@ class QueryEngine:
         answers.setflags(write=False)
         result = QueryResult(query, answers, plan, stats)
         if self._result_cache_size > 0:
-            self._lru_put(
+            self._stamped_put(
                 self._result_cache, query, result, self._result_cache_size
             )
         return result
@@ -199,4 +242,5 @@ class QueryEngine:
             "plan_misses": self.plan_misses,
             "result_hits": self.result_hits,
             "result_misses": self.result_misses,
+            "stale_evictions": self.stale_evictions,
         }

@@ -1,0 +1,498 @@
+"""Incremental maintenance subsystem: differential parity, round-trip
+properties, derivation-count invariants, epoch-stamped query caches, and
+the satellite engine/plan-cache behaviours that ride with it."""
+
+import numpy as np
+import pytest
+
+from repro.core import CMatEngine, flat_seminaive, parse_program
+from repro.core.compile import PlanCache, compile_body
+from repro.core.generators import chain, lubm_like, paper_example, random_kb
+from repro.incremental import IncrementalStore
+from repro.query import QueryEngine
+
+
+def as_sets(facts):
+    return {
+        p: frozenset(map(tuple, np.asarray(r).tolist()))
+        for p, r in facts.items()
+        if len(r)
+    }
+
+
+def subtract(dataset, dels):
+    out = {}
+    for pred, rows in dataset.items():
+        rows = np.asarray(rows, dtype=np.int64).reshape(len(rows), -1)
+        drop = {
+            tuple(r)
+            for r in np.asarray(dels.get(pred, np.zeros((0, rows.shape[1]))))
+            .astype(np.int64)
+            .reshape(-1, rows.shape[1])
+            .tolist()
+        }
+        keep = [r for r in rows.tolist() if tuple(r) not in drop]
+        if keep:
+            out[pred] = np.asarray(keep, dtype=np.int64)
+    return out
+
+
+def union(dataset, adds):
+    out = {p: np.asarray(r, dtype=np.int64) for p, r in dataset.items()}
+    for pred, rows in adds.items():
+        rows = np.asarray(rows, dtype=np.int64).reshape(len(rows), -1)
+        prev = out.get(pred)
+        merged = rows if prev is None else np.concatenate([prev, rows])
+        out[pred] = np.unique(merged, axis=0)
+    return out
+
+
+def pick_batch(dataset, k, seed=0):
+    rng = np.random.default_rng(seed)
+    pool = [
+        (p, tuple(int(v) for v in row))
+        for p, rows in dataset.items()
+        for row in np.asarray(rows).reshape(len(rows), -1)
+    ]
+    rng.shuffle(pool)
+    out: dict[str, list] = {}
+    for p, row in pool[:k]:
+        out.setdefault(p, []).append(row)
+    return {p: np.asarray(r, dtype=np.int64) for p, r in out.items()}
+
+
+KBS = [
+    ("paper", lambda: paper_example(4, 3)),
+    ("chain", lambda: chain(18)),
+    ("lubm", lambda: lubm_like(n_dept=3, n_students=40, n_courses=6, seed=0)),
+]
+
+
+# --------------------------------------------------------------------- #
+# differential parity
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("name,gen", KBS)
+def test_apply_deletions_matches_scratch(name, gen):
+    program, dataset, _ = gen()
+    inc = IncrementalStore(program)
+    inc.load(dataset)
+    assert as_sets(inc.to_dict()) == as_sets(flat_seminaive(program, dataset))
+
+    dels = pick_batch(dataset, 5, seed=1)
+    st = inc.apply(deletions=dels)
+    inc.check_integrity()
+    want = as_sets(flat_seminaive(program, subtract(dataset, dels)))
+    assert as_sets(inc.to_dict()) == want
+    assert st.epoch == 1 and inc.journal[-1]["epoch"] == 1
+
+
+@pytest.mark.parametrize("name,gen", KBS)
+def test_apply_round_trips(name, gen):
+    """apply(adds, dels) then apply(dels, adds) restores the original
+    materialisation bit for bit (adds fresh, dels ⊆ E, disjoint)."""
+    program, dataset, _ = gen()
+    inc = IncrementalStore(program)
+    inc.load(dataset)
+    original = inc.to_dict()
+
+    dels = pick_batch(dataset, 4, seed=2)
+    arity_of = {p: np.asarray(r).reshape(len(r), -1).shape[1] for p, r in dataset.items()}
+    adds = {
+        p: (np.arange(2 * arity_of[p]).reshape(2, arity_of[p]) + 10_000).astype(
+            np.int64
+        )
+        for p in list(dataset)[:2]
+    }
+    inc.apply(additions=adds, deletions=dels)
+    inc.check_integrity()
+    want_mid = as_sets(
+        flat_seminaive(program, union(subtract(dataset, dels), adds))
+    )
+    assert as_sets(inc.to_dict()) == want_mid
+
+    inc.apply(additions=dels, deletions=adds)
+    inc.check_integrity()
+    got = inc.to_dict()
+    assert set(got) == set(original)
+    for pred in original:
+        assert np.array_equal(got[pred], original[pred]), pred
+    assert inc.epoch == 2
+
+
+@pytest.mark.parametrize("name,gen", KBS)
+def test_delete_all_equals_empty_kb(name, gen):
+    program, dataset, _ = gen()
+    inc = IncrementalStore(program)
+    inc.load(dataset)
+    inc.apply(deletions=dataset)
+    inc.check_integrity()
+    assert as_sets(inc.to_dict()) == {}
+    assert inc.facts.n_facts() == 0
+    # and back: inserting everything from empty equals a fresh build
+    inc.apply(additions=dataset)
+    inc.check_integrity()
+    assert as_sets(inc.to_dict()) == as_sets(
+        flat_seminaive(program, dataset)
+    )
+
+
+def test_apply_from_never_loaded_store():
+    """A store built purely through apply() (no load) equals a fresh
+    materialisation — the start-empty serving bootstrap."""
+    program, dataset, _ = paper_example(4, 3)
+    inc = IncrementalStore(program)
+    inc.apply(additions=dataset)
+    inc.check_integrity()
+    assert as_sets(inc.to_dict()) == as_sets(
+        flat_seminaive(program, dataset)
+    )
+
+
+def test_parity_across_engines():
+    """Incremental maintenance lands on the same fact set the flat and
+    compressed engines compute from scratch on the updated EDB."""
+    program, dataset, _ = paper_example(5, 3)
+    inc = IncrementalStore(program)
+    inc.load(dataset)
+    dels = pick_batch(dataset, 3, seed=3)
+    inc.apply(deletions=dels)
+    updated = subtract(dataset, dels)
+
+    want_flat = as_sets(flat_seminaive(program, updated))
+    eng = CMatEngine(program)
+    eng.load(updated)
+    eng.materialise()
+    want_cmat = as_sets(eng.materialisation())
+
+    got = as_sets(inc.to_dict())
+    assert got == want_flat == want_cmat
+
+
+def test_parity_distributed_engine():
+    """The distributed engine (1-shard mesh, <=2-atom bodies) agrees with
+    the incrementally maintained store on the updated EDB."""
+    jax = pytest.importorskip("jax")
+    from jax.sharding import Mesh
+
+    from repro.core.distributed import DistributedEngine
+
+    program, dataset, _ = paper_example(4, 3)
+    inc = IncrementalStore(program)
+    inc.load(dataset)
+    dels = pick_batch(dataset, 2, seed=4)
+    inc.apply(deletions=dels)
+
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    eng = DistributedEngine(program, mesh, capacity=1 << 11)
+    got_dist = {
+        p: rows
+        for p, rows in eng.materialise(subtract(dataset, dels)).items()
+        if rows.shape[0]
+    }
+    assert as_sets(got_dist) == as_sets(inc.to_dict())
+
+
+def test_counting_disabled_matches_counting():
+    """Pure-DRed mode (counting=False) and the counting hybrid agree."""
+    program, dataset, _ = lubm_like(n_dept=3, n_students=30, n_courses=5, seed=1)
+    dels = pick_batch(dataset, 6, seed=5)
+    results = []
+    for counting in (True, False):
+        inc = IncrementalStore(program, counting=counting)
+        inc.load(dataset)
+        st = inc.apply(deletions=dels)
+        results.append(as_sets(inc.to_dict()))
+        if counting:
+            assert st.counting_strata > 0
+        else:
+            assert st.counting_strata == 0 and st.dred_strata > 0
+    assert results[0] == results[1]
+
+
+# --------------------------------------------------------------------- #
+# property-based (hypothesis)
+# --------------------------------------------------------------------- #
+def test_random_kbs_differential():
+    """Random programs/datasets/batches: apply() == from-scratch, counts
+    and row index stay consistent, delete-all drains the store."""
+    rng = np.random.default_rng(42)
+    for trial in range(25):
+        program, dataset = random_kb(
+            rng,
+            n_constants=int(rng.integers(2, 9)),
+            n_facts=int(rng.integers(1, 22)),
+            n_rules=int(rng.integers(1, 5)),
+        )
+        if not len(program.rules):
+            continue
+        inc = IncrementalStore(program)
+        inc.load(dataset)
+        dels = {
+            p: rows[rng.choice(rows.shape[0], size=int(rng.integers(1, rows.shape[0] + 1)), replace=False)]
+            for p, rows in dataset.items()
+            if rows.shape[0] and rng.random() < 0.8
+        }
+        adds = {
+            p: rng.integers(20, 24, size=(int(rng.integers(1, 3)), rows.shape[1])).astype(np.int64)
+            for p, rows in dataset.items()
+            if rng.random() < 0.5
+        }
+        inc.apply(additions=adds, deletions=dels)
+        inc.check_integrity()
+        want = as_sets(
+            flat_seminaive(program, union(subtract(dataset, dels), adds))
+        )
+        assert as_sets(inc.to_dict()) == want, f"trial {trial}"
+
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as hst
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - hypothesis is in requirements-dev
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    from repro.core.datalog import Atom, Program, Rule
+
+    PREDS = [("P", 2), ("Q", 2), ("R", 1)]
+    VARS = ["x", "y", "z"]
+
+    @hst.composite
+    def hyp_rules(draw):
+        body = []
+        for _ in range(draw(hst.integers(min_value=1, max_value=3))):
+            name, arity = draw(hst.sampled_from(PREDS))
+            body.append(
+                Atom(name, tuple(draw(hst.sampled_from(VARS)) for _ in range(arity)))
+            )
+        body_vars = [v for a in body for v in a.variables()]
+        name, arity = draw(hst.sampled_from(PREDS))
+        head = Atom(
+            name, tuple(draw(hst.sampled_from(body_vars)) for _ in range(arity))
+        )
+        return Rule(tuple(body), head)
+
+    @hst.composite
+    def hyp_programs(draw):
+        return Program(draw(hst.lists(hyp_rules(), min_size=1, max_size=4)))
+
+    @hst.composite
+    def hyp_datasets(draw):
+        out = {}
+        for name, arity in PREDS:
+            n = draw(hst.integers(min_value=0, max_value=10))
+            if n == 0:
+                continue
+            rows = draw(
+                hst.lists(
+                    hst.tuples(*[hst.integers(min_value=0, max_value=6)] * arity),
+                    min_size=n,
+                    max_size=n,
+                )
+            )
+            out[name] = np.unique(np.asarray(rows, dtype=np.int64), axis=0)
+        return out
+
+    @hst.composite
+    def hyp_updates(draw, dataset):
+        """(adds, dels): dels ⊆ E, adds fresh (value range disjoint from E
+        and from dels), so the round-trip identity holds exactly."""
+        dels = {}
+        for pred, rows in dataset.items():
+            k = draw(hst.integers(min_value=0, max_value=rows.shape[0]))
+            if k:
+                idx = draw(
+                    hst.permutations(list(range(rows.shape[0])))
+                )[:k]
+                dels[pred] = rows[sorted(idx)]
+        adds = {}
+        for pred, arity in PREDS:
+            n = draw(hst.integers(min_value=0, max_value=3))
+            if n == 0:
+                continue
+            rows = draw(
+                hst.lists(
+                    hst.tuples(
+                        *[hst.integers(min_value=100, max_value=104)] * arity
+                    ),
+                    min_size=n,
+                    max_size=n,
+                )
+            )
+            adds[pred] = np.unique(np.asarray(rows, dtype=np.int64), axis=0)
+        return adds, dels
+
+    @settings(
+        max_examples=40,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    @given(data=hst.data(), program=hyp_programs(), dataset=hyp_datasets())
+    def test_hypothesis_apply_round_trip(data, program, dataset):
+        """apply(adds, dels); apply(dels, adds) round-trips bit-identically,
+        the intermediate state matches from-scratch materialisation, and
+        delete-all equals the empty KB — for random programs/batches."""
+        if not dataset:
+            return
+        adds, dels = data.draw(hyp_updates(dataset))
+        inc = IncrementalStore(program)
+        inc.load(dataset)
+        original = inc.to_dict()
+
+        inc.apply(additions=adds, deletions=dels)
+        inc.check_integrity()
+        want_mid = as_sets(
+            flat_seminaive(program, union(subtract(dataset, dels), adds))
+        )
+        assert as_sets(inc.to_dict()) == want_mid
+
+        inc.apply(additions=dels, deletions=adds)
+        inc.check_integrity()
+        got = inc.to_dict()
+        assert set(got) == set(original)
+        for pred in original:
+            assert np.array_equal(got[pred], original[pred]), pred
+
+        inc.apply(deletions=inc.explicit)
+        assert as_sets(inc.to_dict()) == {}
+
+
+# --------------------------------------------------------------------- #
+# epoch-stamped query caches (satellite, tested in isolation)
+# --------------------------------------------------------------------- #
+def test_query_cache_epoch_invalidation():
+    program, dataset, dictionary = paper_example(4, 3)
+    inc = IncrementalStore(program)
+    inc.load(dataset)
+    qe = QueryEngine(inc, dictionary)
+
+    res0 = qe.answer("?x, ?y <- S(x, y)")
+    assert res0.n_answers > 0
+    assert qe.answer("?x, ?y <- S(x, y)").from_cache  # warm hit, same epoch
+
+    # delete every R fact: rule (5) loses all its derivations
+    inc.apply(deletions={"R": dataset["R"]})
+    # without a bump the stale entry would still be served — that is the
+    # bug the version stamp fixes; bump and observe eviction + fresh answers
+    qe.bump_epoch(inc)
+    res1 = qe.answer("?x, ?y <- S(x, y)")
+    assert not res1.from_cache
+    assert res1.n_answers == 0
+    assert qe.epoch == 1
+    assert qe.stale_evictions >= 1
+    assert qe.cache_stats()["stale_evictions"] == qe.stale_evictions
+
+
+def test_query_plan_cache_invalidated_on_epoch():
+    """A plan compiled against an *empty* predicate shortcuts to the
+    empty plan; after an insertion epoch it must be re-planned, not
+    served stale."""
+    program, dataset, dictionary = paper_example(4, 3)
+    inc = IncrementalStore(program)
+    inc.load({"P": dataset["P"], "T": dataset["T"]})  # no R facts at all
+    qe = QueryEngine(inc, dictionary)
+    assert qe.answer("?x <- R(x)").n_answers == 0
+    assert qe.plan("?x <- R(x)").is_empty
+
+    inc.apply(additions={"R": dataset["R"]})
+    qe.bump_epoch(inc)
+    assert not qe.plan("?x <- R(x)").is_empty
+    assert qe.answer("?x <- R(x)").n_answers == dataset["R"].shape[0]
+
+
+# --------------------------------------------------------------------- #
+# plan-cache feedback recalibration (satellite)
+# --------------------------------------------------------------------- #
+def test_plan_cache_feedback_recalibrates_once_per_bucket():
+    program = parse_program("P(x, y), Q(y, z) -> S(x, z)")
+    rule = program.rules[0]
+
+    class Stats:
+        def n_rows(self, pred):
+            return 100
+
+        def arity(self, pred):
+            return 2
+
+        def selectivity(self, pred, pos, value):
+            return 0.1
+
+    cache = PlanCache()
+    build = lambda: compile_body(rule.body, Stats())  # noqa: E731
+    plan = cache.get((rule, 0), (7, 7), build)
+    assert cache.misses == 1
+
+    # estimate within 4x: no recalibration
+    cache.note_actual((rule, 0), plan.first.est_rows, int(plan.first.est_rows * 2))
+    assert cache.feedback_replans == 0
+    assert cache.get((rule, 0), (7, 7), build) is plan
+    assert cache.hits == 1
+
+    # off by >4x: entry dropped, replanned on next get — once per bucket
+    cache.note_actual((rule, 0), plan.first.est_rows, int(plan.first.est_rows * 100))
+    assert cache.feedback_replans == 1
+    assert (rule, 0) in cache.est_log2_ratio
+    replanned = cache.get((rule, 0), (7, 7), build)
+    assert replanned is not plan
+    cache.note_actual((rule, 0), replanned.first.est_rows, 10_000_000)
+    assert cache.feedback_replans == 1  # same bucket: no thrash
+    # a bucket shift re-arms the feedback
+    cache.get((rule, 0), (9, 9), build)
+    cache.note_actual((rule, 0), 1.0, 10_000)
+    assert cache.feedback_replans == 2
+
+
+# --------------------------------------------------------------------- #
+# snapshot-backed old-partition scans (satellite)
+# --------------------------------------------------------------------- #
+def test_old_snapshot_scans_preserve_materialisation():
+    program = parse_program(
+        """
+        edge(x, y) -> path(x, y)
+        path(x, y), edge(y, z) -> path(x, z)
+        path(x, 5), path(5, z) -> path(x, z)
+        path(x, x) -> loop(x)
+        """
+    )
+    n = 40
+    edge = np.stack([np.arange(n), np.arange(1, n + 1)], axis=1)
+    edge = np.concatenate([edge, [[n, 0]]]).astype(np.int64)
+    dataset = {"edge": edge}
+    want = as_sets(flat_seminaive(program, dataset))
+
+    snap = CMatEngine(program, snapshot_old_scans=True)
+    snap.load(dataset)
+    snap.materialise()
+    assert as_sets(snap.materialisation()) == want
+    assert snap.stats.old_snapshot_scans > 0
+    assert snap.report()["old_snapshot_scans"] == snap.stats.old_snapshot_scans
+
+    plain = CMatEngine(program, snapshot_old_scans=False)
+    plain.load(dataset)
+    plain.materialise()
+    assert as_sets(plain.materialisation()) == want
+    assert plain.stats.old_snapshot_scans == 0
+
+
+# --------------------------------------------------------------------- #
+# journal / stats surface
+# --------------------------------------------------------------------- #
+def test_journal_records_batches():
+    program, dataset, _ = lubm_like(n_dept=2, n_students=20, n_courses=4, seed=2)
+    inc = IncrementalStore(program)
+    inc.load(dataset)
+    dels = pick_batch(dataset, 3, seed=6)
+    st1 = inc.apply(deletions=dels)
+    st2 = inc.apply(additions=dels)
+    assert [j["epoch"] for j in inc.journal] == [1, 2]
+    assert inc.journal[0]["del_explicit"] == st1.n_del_explicit > 0
+    assert inc.journal[1]["add_explicit"] == st2.n_add_explicit > 0
+    assert st1.time_total > 0 and st2.time_total > 0
+    assert st1.plan_cache["plans"] > 0
+    # freezing seeds snapshots from the maintained index: no unfold cost
+    frozen = inc.freeze()
+    for pred in inc.rows.predicates():
+        assert frozen.has_snapshot(pred)
+    assert frozen.snapshot_cells == 0
