@@ -8,7 +8,9 @@ benches that support it (CI keeps the drivers from rotting without
 paying real benchmark time); benches without a ``smoke`` parameter run
 at their normal size.  ``--json PATH`` writes a machine-readable result
 file — per-bench status, wall time, and whatever structured rows the
-bench returns — which CI uploads as a build artifact.
+bench returns — which CI uploads as a build artifact, and validates it
+against the flat-rows-of-scalars schema (:func:`check_schema`) so
+artifacts stay diffable across PRs.
 """
 
 from __future__ import annotations
@@ -18,6 +20,59 @@ import inspect
 import json
 import sys
 import time
+
+_SCALAR = (str, int, float, bool, type(None))
+
+
+def check_schema(payload: dict) -> list[str]:
+    """Violations of the bench-artifact contract.
+
+    CI uploads ``--json`` output as a build artifact and diffs runs
+    across PRs; that only works while every bench keeps emitting the
+    same machine-comparable shape — flat rows of scalars.  Run with the
+    check so a bench that starts returning nested objects (or a status
+    typo) fails the build instead of silently breaking comparability.
+    """
+    errs: list[str] = []
+    if set(payload) != {"smoke", "failures", "benches"}:
+        errs.append(f"top-level keys {sorted(payload)}")
+        return errs
+    if not isinstance(payload["smoke"], bool):
+        errs.append("'smoke' must be a bool")
+    if not isinstance(payload["failures"], int):
+        errs.append("'failures' must be an int")
+    for name, bench in payload["benches"].items():
+        if bench.get("status") not in ("ok", "failed"):
+            errs.append(f"{name}: status {bench.get('status')!r}")
+        if not isinstance(bench.get("seconds"), (int, float)):
+            errs.append(f"{name}: 'seconds' missing or non-numeric")
+        extra = set(bench) - {"status", "seconds", "rows", "error"}
+        if extra:
+            errs.append(f"{name}: unexpected keys {sorted(extra)}")
+        if bench.get("status") == "failed" and not isinstance(
+            bench.get("error"), str
+        ):
+            errs.append(f"{name}: failed bench without an 'error' string")
+        rows = bench.get("rows")
+        if rows is None:
+            continue
+        if isinstance(rows, dict):
+            rows = [rows]
+        if not isinstance(rows, list):
+            errs.append(f"{name}: rows must be a list or dict")
+            continue
+        for i, row in enumerate(rows):
+            if not isinstance(row, dict):
+                errs.append(f"{name}: rows[{i}] is not a dict")
+                continue
+            bad = {
+                k: type(v).__name__
+                for k, v in row.items()
+                if not isinstance(k, str) or not isinstance(v, _SCALAR)
+            }
+            if bad:
+                errs.append(f"{name}: rows[{i}] non-scalar cells {bad}")
+    return errs
 
 
 def main() -> None:
@@ -36,6 +91,7 @@ def main() -> None:
         bench_representation,
         bench_roofline,
         bench_runtime,
+        bench_storage,
     )
 
     benches = {
@@ -46,6 +102,7 @@ def main() -> None:
         "roofline": bench_roofline.run,              # deliverable (g)
         "query": bench_query.run,                    # compressed vs flat answering
         "incremental": bench_incremental.run,        # update vs rematerialise
+        "storage": bench_storage.run,                # cold vs restore, compaction
     }
     failures = 0
     results: dict[str, dict] = {}
@@ -81,6 +138,14 @@ def main() -> None:
         with open(args.json, "w") as fh:
             json.dump(payload, fh, indent=2, default=str)
         print(f"[json] wrote {args.json}")
+        # round-trip through JSON so the check sees what a consumer sees
+        schema_errs = check_schema(json.loads(json.dumps(payload, default=str)))
+        if schema_errs:
+            failures += 1
+            print("[json] SCHEMA VIOLATIONS (bench artifacts must stay "
+                  "machine-comparable across PRs):")
+            for err in schema_errs:
+                print(f"  - {err}")
     if failures:
         sys.exit(1)
 

@@ -206,6 +206,60 @@ class ColumnStore:
                 stack.extend(node.children)
         return seen
 
+    def topo_order(self, roots) -> list[int]:
+        """Reachable node ids, children before parents — the traversal
+        order snapshot export and compaction need to rebuild the DAG
+        bottom-up (a node is emitted only after all of its children)."""
+        order: list[int] = []
+        seen: set[int] = set()
+        # iterative post-order; (cid, expanded) frames avoid recursion
+        # limits on deep Concat chains
+        stack: list[tuple[int, bool]] = [(cid, False) for cid in roots]
+        while stack:
+            cid, expanded = stack.pop()
+            if expanded:
+                order.append(cid)
+                continue
+            if cid in seen:
+                continue
+            seen.add(cid)
+            stack.append((cid, True))
+            node = self._nodes[cid]
+            if isinstance(node, _Concat):
+                stack.extend(
+                    (c, False) for c in node.children if c not in seen
+                )
+        return order
+
+    def leaf_payload(self, cid: int) -> tuple[np.ndarray, np.ndarray]:
+        """RLE payload ``(run_values, run_counts)`` of a leaf — the unit
+        of content-hash deduplication in snapshots and compaction."""
+        node = self._nodes[cid]
+        assert isinstance(node, _Leaf)
+        return node.run_values, node.run_counts
+
+    def children(self, cid: int) -> list[int]:
+        node = self._nodes[cid]
+        return list(node.children) if isinstance(node, _Concat) else []
+
+    def node_nbytes(self, cid: int) -> int:
+        """Resident bytes of one node's structural payload (RLE arrays
+        for leaves, the child-id vector for composites)."""
+        node = self._nodes[cid]
+        if isinstance(node, _Leaf):
+            return int(node.run_values.nbytes + node.run_counts.nbytes)
+        return 8 * len(node.children)
+
+    def total_nbytes(self) -> int:
+        """Resident bytes across *all* live nodes (reachable or not) —
+        together with :meth:`reachable` this yields the dead-node
+        accounting that drives compaction epochs."""
+        return sum(self.node_nbytes(cid) for cid in self._nodes)
+
+    def live_ids(self):
+        """Ids of all live nodes (view; do not mutate while iterating)."""
+        return self._nodes.keys()
+
     # ------------------------------------------------------------------ #
     # unfolding
     # ------------------------------------------------------------------ #

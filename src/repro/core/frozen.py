@@ -47,6 +47,15 @@ class SortedRows:
     def n_rows(self) -> int:
         return int(self.rows.shape[0])
 
+    @property
+    def nbytes(self) -> int:
+        """Resident bytes: rows plus any lazily built per-column orders
+        (what a snapshot-backed restore avoids re-deriving)."""
+        total = int(self.rows.nbytes)
+        total += sum(a.nbytes for a in self._col_order.values())
+        total += sum(a.nbytes for a in self._sorted_col.values())
+        return total
+
     def col_order(self, pos: int) -> np.ndarray:
         """Stable argsort of the rows on column ``pos``."""
         order = self._col_order.get(pos)
@@ -175,6 +184,10 @@ class FrozenFacts:
 
     def has_snapshot(self, pred: str) -> bool:
         return pred in self._sorted
+
+    def snapshot_resident_bytes(self) -> int:
+        """Bytes held by the sorted snapshots built so far."""
+        return sum(sr.nbytes for sr in self._sorted.values())
 
     def col_order(self, pred: str, pos: int) -> np.ndarray:
         """Stable argsort of the snapshot on column ``pos``."""

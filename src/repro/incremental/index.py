@@ -60,6 +60,12 @@ class RowIndex:
             np.asarray(rows, dtype=np.int64), axis=0
         )
 
+    def seed_sorted(self, pred: str, rows: np.ndarray) -> None:
+        """Adopt rows that are *already* sorted-unique — the snapshot
+        restore path, where the rows were written from :meth:`to_dict`
+        and re-sorting would only burn the warm-start budget."""
+        self._rows[pred] = np.asarray(rows, dtype=np.int64)
+
     def predicates(self):
         return self._rows.keys()
 

@@ -31,14 +31,19 @@ runs inside :meth:`ColumnStore.mark`/``release`` scratch regions, so the
 mu-store grows only by what the update actually changes (split
 survivors + newly derived meta-facts), never by probe intermediates.
 
-Every batch appends to :attr:`journal` and bumps :attr:`epoch` — the
-serving layer version-stamps its query caches with the epoch and
-invalidates on change (``launch/serve_datalog.py --live``).
+Every batch appends to :attr:`journal` (bounded; the durable history is
+the optional write-ahead log, :meth:`attach_wal`) and bumps
+:attr:`epoch` — the serving layer version-stamps its query caches with
+the epoch and invalidates on change (``launch/serve_datalog.py
+--live``).  The :mod:`repro.storage` layer adds snapshots, recovery,
+and GC/compaction epochs on top (:meth:`maybe_compact`).
 """
 
 from __future__ import annotations
 
+import json
 import time
+from collections import deque
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -81,6 +86,7 @@ class IncrementalStats(MaterialisationStats):
     time_rederive: float = 0.0
     time_counting: float = 0.0
     time_insert: float = 0.0
+    journal_bytes: int = 0    # resident bytes of the (capped) journal
 
 
 def _normalise(batch) -> dict[str, np.ndarray]:
@@ -103,6 +109,7 @@ class IncrementalStore:
         *,
         counting: bool = True,
         plan_cache: PlanCache | None = None,
+        journal_max: int = 1024,
     ):
         self.program = program
         self.strata = stratify(program)
@@ -118,7 +125,16 @@ class IncrementalStore:
         self.counts: dict[str, np.ndarray] = {}
         self.plan_cache = plan_cache if plan_cache is not None else PlanCache()
         self.epoch = 0
-        self.journal: list[dict] = []
+        #: bounded per-batch maintenance record (the durable history is
+        #: the WAL, not this; see :meth:`attach_wal`)
+        self.journal: deque[dict] = deque(maxlen=max(journal_max, 1))
+        self._journal_sizes: deque[int] = deque(maxlen=max(journal_max, 1))
+        self._journal_nbytes = 0
+        #: optional write-ahead log: batches are logged *before* the
+        #: store mutates, so snapshot + replay reproduces this store
+        self.wal = None
+        #: (n_nodes, MuUsage) of the last GC probe (see maybe_compact)
+        self._gc_usage: tuple[int, object] | None = None
         self._round = 0
         self._head_preds = {r.head.predicate for r in program}
         self._counting_preds: set[str] = set()
@@ -293,6 +309,10 @@ class IncrementalStore:
         st = IncrementalStats()
         adds = _normalise(additions)
         dels = _normalise(deletions)
+        if self.wal is not None:
+            # write-ahead: the record is durable before any mutation, so
+            # a crash mid-apply recovers to the post-batch state
+            self.wal.append(self.epoch + 1, adds, dels)
 
         # effective explicit deletions (E := E \ D)
         eff_dels: dict[str, np.ndarray] = {}
@@ -333,7 +353,7 @@ class IncrementalStore:
         st.n_facts = self.facts.n_facts()
         st.plan_cache = self.plan_cache.counters()
         st.time_total = time.perf_counter() - t_start
-        self.journal.append(
+        self._journal_append(
             {
                 "epoch": self.epoch,
                 "del_explicit": st.n_del_explicit,
@@ -347,6 +367,7 @@ class IncrementalStore:
                 "time_s": st.time_total,
             }
         )
+        st.journal_bytes = self.journal_bytes()
         return st
 
     # ------------------------------------------------------------------ #
@@ -594,6 +615,89 @@ class IncrementalStore:
                     new_delta[pred] = mfs
                     note_added(pred, fresh, mfs)
             delta_mfs = new_delta
+
+    # ------------------------------------------------------------------ #
+    # durability hooks (repro.storage)
+    # ------------------------------------------------------------------ #
+    def attach_wal(self, wal) -> None:
+        """Log every subsequent ``apply`` batch to ``wal`` before the
+        store mutates (recovery = snapshot + replay; DESIGN.md
+        §Storage).  Attach only *after* any replay, or the replay would
+        re-log itself."""
+        self.wal = wal
+
+    def _journal_append(self, entry: dict) -> None:
+        """Bounded append with a running byte count (re-serialising the
+        whole journal per batch would tax the apply hot path)."""
+        nbytes = len(json.dumps(entry))
+        if (
+            self.journal.maxlen is not None
+            and len(self.journal) == self.journal.maxlen
+        ):
+            self._journal_nbytes -= self._journal_sizes[0]
+        self.journal.append(entry)
+        self._journal_sizes.append(nbytes)
+        self._journal_nbytes += nbytes
+
+    def truncate_journal(self) -> None:
+        """Drop the in-memory journal — called once a checkpoint makes
+        its entries redundant (the WAL keeps the durable history)."""
+        self.journal.clear()
+        self._journal_sizes.clear()
+        self._journal_nbytes = 0
+
+    def journal_bytes(self) -> int:
+        """Resident bytes of the journal (JSON size of the scalar
+        records, maintained incrementally; cap is ``journal_max``)."""
+        return self._journal_nbytes
+
+    def mu_usage(self):
+        """Dead-node accounting over the mu-store (deletion splits
+        strand unreachable nodes; see :meth:`maybe_compact`)."""
+        from ..storage.compact import mu_usage
+
+        return mu_usage(self.facts)
+
+    def compact(self):
+        """Rebuild the reachable mu-DAG (hash-consing identical runs)
+        and swap it in; answers and row indexes are unchanged."""
+        from ..storage.compact import compact_store
+
+        self._gc_usage = None
+        return compact_store(self)
+
+    def maybe_compact(
+        self,
+        threshold: float = 0.5,
+        min_nodes: int = 256,
+        growth: float = 1.1,
+    ):
+        """Run a compaction epoch when the dead-node fraction crosses
+        ``threshold`` (and the store is big enough to matter).  Returns
+        the :class:`CompactionStats` or ``None``.
+
+        Cheap to call per batch: the O(store) reachability probe only
+        reruns once the node count has grown by ``growth`` since the
+        last below-threshold probe.  The count only grows between
+        compactions, so this is a sound staleness signal up to one
+        corner: dropping a whole meta-fact strands nodes without adding
+        any, which the *next* growth-triggered probe accounts for — a
+        GC trigger may lag, never fire spuriously."""
+        if threshold <= 0:
+            return None
+        n = self.store.n_nodes()
+        if n < min_nodes:
+            return None
+        if self._gc_usage is not None and self._gc_usage[0] == n:
+            usage = self._gc_usage[1]
+        elif self._gc_usage is not None and n < growth * self._gc_usage[0]:
+            return None  # barely grew since the last clean probe
+        else:
+            usage = self.mu_usage()
+            self._gc_usage = (n, usage)
+        if usage.dead_fraction < threshold:
+            return None
+        return self.compact()
 
     # ------------------------------------------------------------------ #
     # read side

@@ -24,11 +24,22 @@ engine's epoch, invalidating the version-stamped plan/result caches;
 the report adds apply-latency percentiles, per-epoch stale evictions,
 and — with ``--live-verify`` — a final differential check against a
 from-scratch materialisation of the ending fact set.
+
+``--checkpoint-dir`` makes the store durable (DESIGN.md §Storage):
+update batches are write-ahead logged, a snapshot is checkpointed every
+``--checkpoint-every`` batches, and ``--restore`` warm-starts from the
+latest snapshot + WAL replay instead of re-materialising (recovery
+timing lands in the report).  In live mode ``--compact-threshold``
+triggers a GC/compaction epoch whenever deletion churn strands more
+than that fraction of mu-nodes.  Without ``--live``, the checkpoint dir
+holds a single frozen snapshot of the static materialisation and
+``--restore`` serves straight from it.
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import numpy as np
@@ -37,6 +48,7 @@ from ..core import CMatEngine
 from ..core.generators import chain, lubm_like, paper_example, star
 from ..incremental import IncrementalStore
 from ..query import QueryEngine
+from ..storage import CheckpointManager, load_frozen, write_snapshot
 
 
 def build_kb(name: str, scale: int):
@@ -157,35 +169,93 @@ def main(argv=None):
     ap.add_argument("--live-verify", action="store_true",
                     help="differentially check the final store against a "
                          "from-scratch materialisation (--live)")
+    ap.add_argument("--checkpoint-dir", default=None, metavar="DIR",
+                    help="durable storage root: WAL + periodic snapshots")
+    ap.add_argument("--checkpoint-every", type=int, default=5,
+                    help="checkpoint every N applied update batches "
+                         "(--live; a final checkpoint always runs)")
+    ap.add_argument("--restore", action="store_true",
+                    help="warm-start from the latest snapshot (+ WAL "
+                         "replay in --live mode) instead of materialising")
+    ap.add_argument("--compact-threshold", type=float, default=0.5,
+                    help="dead mu-node fraction that triggers a "
+                         "compaction epoch (--live; 0 disables)")
     args = ap.parse_args(argv)
 
     program, dataset, dictionary = build_kb(args.kb, args.scale)
     n_explicit = sum(np.asarray(r).shape[0] for r in dataset.values())
     print(f"[kb:{args.kb}] {n_explicit} explicit facts, {len(program)} rules")
 
+    kb_label = f"{args.kb}:scale{args.scale}"
+    ckpt = (
+        CheckpointManager(args.checkpoint_dir, label=kb_label)
+        if args.checkpoint_dir
+        else None
+    )
+    static_snap = (
+        os.path.join(args.checkpoint_dir, "frozen")
+        if args.checkpoint_dir
+        else None
+    )
+
     t0 = time.perf_counter()
+    inc = None
+    recovery = None
+    stats = None
     if args.live:
-        inc = IncrementalStore(program)
-        stats = inc.load(dataset)
+        if ckpt is not None and args.restore and ckpt.has_snapshot():
+            inc, recovery = ckpt.restore(program)
+        else:
+            inc = IncrementalStore(program)
+            stats = inc.load(dataset)
+            if ckpt is not None:
+                # cold start owns the directory: stale snapshots/WAL from
+                # a previous run must not interleave with fresh epochs
+                ckpt.reset()
+                inc.attach_wal(ckpt.wal)
         source = inc
+    elif (
+        args.restore
+        and static_snap is not None
+        and os.path.exists(os.path.join(static_snap, "manifest.json"))
+    ):
+        source = load_frozen(static_snap, expected_label=kb_label)
     else:
-        inc = None
         eng = CMatEngine(program, dedup_index=True)
         eng.load(dataset)
         stats = eng.materialise()
         source = eng
+        if static_snap is not None:
+            frozen = eng.facts.freeze()
+            rows = {p: frozen.snapshot(p) for p in frozen.predicates()}
+            write_snapshot(
+                static_snap, eng.facts, kind="frozen",
+                label=kb_label, rows=rows,
+            )
     t_mat = time.perf_counter() - t0
-    print(
-        f"[materialise] {stats.rounds} rounds over {stats.n_strata} strata, "
-        f"{stats.n_facts} facts in {stats.n_meta_facts} meta-facts, {t_mat:.2f}s"
-    )
-    print(
-        f"[fixpoint] {stats.n_rule_applications} rule applications, "
-        f"{stats.rule_applications_skipped} skipped without a probe; "
-        f"plans: {stats.plan_cache.get('plans', 0)} compiled, "
-        f"{stats.plan_cache.get('plan_hits', 0)} hits, "
-        f"{stats.plan_cache.get('plan_replans', 0)} replans"
-    )
+    if stats is not None:
+        print(
+            f"[materialise] {stats.rounds} rounds over {stats.n_strata} strata, "
+            f"{stats.n_facts} facts in {stats.n_meta_facts} meta-facts, {t_mat:.2f}s"
+        )
+        print(
+            f"[fixpoint] {stats.n_rule_applications} rule applications, "
+            f"{stats.rule_applications_skipped} skipped without a probe; "
+            f"plans: {stats.plan_cache.get('plans', 0)} compiled, "
+            f"{stats.plan_cache.get('plan_hits', 0)} hits, "
+            f"{stats.plan_cache.get('plan_replans', 0)} replans"
+        )
+    elif recovery is not None:
+        print(
+            f"[restore] warm start from {recovery.snapshot}: snapshot "
+            f"{recovery.t_snapshot_s:.3f}s + {recovery.wal_batches} WAL "
+            f"batches {recovery.t_replay_s:.3f}s (epoch "
+            f"{recovery.snapshot_epoch} -> {recovery.final_epoch}), "
+            f"{inc.facts.n_facts()} facts in "
+            f"{inc.facts.n_meta_facts()} meta-facts; total {t_mat:.3f}s"
+        )
+    else:
+        print(f"[restore] frozen snapshot served from {static_snap}, {t_mat:.3f}s")
 
     qe = QueryEngine(
         source,
@@ -215,22 +285,38 @@ def main(argv=None):
 
     latencies = np.zeros(len(stream))
     apply_lat: list[float] = []
-    n_answers = 0
+    apply_tot: list = []  # per-batch stats (the journal is truncated
+    n_answers = 0         # by checkpoints, so sums come from here)
     next_batch = 0
+    n_checkpoints = 0
+    compactions = []
     t_serve0 = time.perf_counter()
     for i, text in enumerate(stream):
         if args.live and i and i % update_at == 0 and next_batch < len(batches):
             deletions, additions = batches[next_batch]
             next_batch += 1
             t0 = time.perf_counter()
-            inc.apply(additions=additions, deletions=deletions)
+            apply_tot.append(inc.apply(additions=additions, deletions=deletions))
+            cs = inc.maybe_compact(args.compact_threshold)
+            if cs is not None:
+                compactions.append(cs)
             qe.bump_epoch(inc)
             apply_lat.append(time.perf_counter() - t0)
+            if (
+                ckpt is not None
+                and args.checkpoint_every > 0
+                and next_batch % args.checkpoint_every == 0
+            ):
+                ckpt.checkpoint(inc)
+                n_checkpoints += 1
         t0 = time.perf_counter()
         res = qe.answer(text)
         latencies[i] = time.perf_counter() - t0
         n_answers += res.n_answers
     t_serve = time.perf_counter() - t_serve0
+    if args.live and ckpt is not None:
+        ckpt.checkpoint(inc)  # final durable state for the next restore
+        n_checkpoints += 1
 
     lat_ms = latencies * 1e3
     # measured-window counters only (warmup answered queries too)
@@ -260,16 +346,36 @@ def main(argv=None):
     print(f"[store] {qe.frozen.store.n_nodes()} mu-nodes (flat across stream)")
     if args.live:
         ap_ms = np.asarray(apply_lat) * 1e3 if apply_lat else np.zeros(1)
-        total_journal = inc.journal
         print(
             f"[live] {len(apply_lat)} update batches applied "
             f"(epoch {inc.epoch}), apply p50={np.percentile(ap_ms, 50):.2f}ms "
             f"p99={np.percentile(ap_ms, 99):.2f}ms; "
-            f"{sum(j['deleted'] for j in total_journal)} deleted / "
-            f"{sum(j['inserted'] for j in total_journal)} inserted facts, "
-            f"{sum(j['rederived'] for j in total_journal)} rederived; "
+            f"{sum(s.n_deleted for s in apply_tot)} deleted / "
+            f"{sum(s.n_inserted for s in apply_tot)} inserted facts, "
+            f"{sum(s.n_rederived for s in apply_tot)} rederived; "
             f"{qe.stale_evictions} stale cache entries evicted"
         )
+        usage = inc.mu_usage()
+        compact_note = (
+            f"{len(compactions)} compaction epochs "
+            f"(-{sum(c.nodes_before - c.nodes_after for c in compactions)} "
+            f"nodes, {sum(c.reshared_leaves for c in compactions)} leaves "
+            f"re-shared)"
+            if compactions
+            else "no compactions"
+        )
+        print(
+            f"[mu-gc] {usage.n_nodes} nodes "
+            f"({usage.dead_fraction:.1%} dead, "
+            f"{usage.total_bytes / 1024:.1f}KiB resident); {compact_note}"
+        )
+        if ckpt is not None:
+            print(
+                f"[storage] {n_checkpoints} checkpoints under "
+                f"{args.checkpoint_dir} ({ckpt.disk_nbytes() / 1024:.1f}KiB "
+                f"on disk, WAL {ckpt.wal.nbytes()}B), "
+                f"journal {inc.journal_bytes()}B resident"
+            )
         if args.live_verify:
             from ..core import flat_seminaive
 

@@ -1,0 +1,163 @@
+"""GC/compaction epochs for the mu-store.
+
+Incremental deletion never rewrites shared structure in place: a
+partially-hit meta-fact is replaced by a copy-mode split, leaving the
+original columns (and the split's ``b_out`` halves) in the store with
+nothing pointing at them.  Under sustained churn the dead fraction
+climbs without bound — this module is the reclaim path ROADMAP calls
+"mu-store compaction under churn".
+
+:func:`mu_usage` measures it: nodes and resident bytes, total vs
+reachable from the live meta-facts.  :func:`compact_store` rebuilds the
+reachable DAG into a fresh node table and **hash-conses while doing
+so** — leaves with identical RLE payloads collapse to one node even if
+they were distinct in the source store (runs that only became identical
+through earlier split epochs are re-shared), and identical Concat child
+vectors collapse the same way.  The rebuild happens entirely off to the
+side; only then is the live store redirected to the compacted state, in
+a short reference-assignment section.  That lets the single-threaded
+serving loop run compaction between requests with no pause beyond the
+rebuild itself — but it is **not** safe against a concurrent reader: a
+``MetaFact`` captured before the swap holds node ids from the old
+table (background compaction off the serving thread is a ROADMAP
+follow-on and would need a generation handle, not this swap).  What is
+guaranteed: the fact set is identical before and after — row indexes,
+count columns, and answers are untouched, and the compaction
+differential tests pin ``to_dict()`` and query answers across the swap.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import time
+from dataclasses import dataclass
+
+from ..core.columns import ColumnStore
+from ..core.metafacts import FactStore, MetaFact
+
+__all__ = ["MuUsage", "CompactionStats", "mu_usage", "compact_store"]
+
+
+@dataclass
+class MuUsage:
+    n_nodes: int
+    n_reachable: int
+    total_bytes: int
+    reachable_bytes: int
+
+    @property
+    def n_dead(self) -> int:
+        return self.n_nodes - self.n_reachable
+
+    @property
+    def dead_fraction(self) -> float:
+        return self.n_dead / self.n_nodes if self.n_nodes else 0.0
+
+    @property
+    def dead_bytes(self) -> int:
+        return self.total_bytes - self.reachable_bytes
+
+
+@dataclass
+class CompactionStats:
+    nodes_before: int
+    nodes_after: int
+    bytes_before: int
+    bytes_after: int
+    dead_fraction_before: float
+    reshared_leaves: int  # distinct source leaves merged by hash-consing
+    time_s: float
+
+
+def mu_usage(facts: FactStore) -> MuUsage:
+    """Dead-node accounting over the store backing ``facts``."""
+    store = facts.store
+    roots = [
+        c
+        for lst in (facts.all(p) for p in facts.predicates())
+        for mf in lst
+        for c in mf.columns
+    ]
+    reach = store.reachable(roots)
+    reachable_bytes = sum(store.node_nbytes(c) for c in reach)
+    return MuUsage(
+        n_nodes=store.n_nodes(),
+        n_reachable=len(reach),
+        total_bytes=store.total_nbytes(),
+        reachable_bytes=reachable_bytes,
+    )
+
+
+def _leaf_key(store: ColumnStore, cid: int) -> bytes:
+    rv, rc = store.leaf_payload(cid)
+    return hashlib.sha256(rv.tobytes() + b"\x00" + rc.tobytes()).digest()
+
+
+def compact_store(inc) -> CompactionStats:
+    """Rebuild the reachable mu-DAG of an incremental store and swap it
+    in (between requests — see the module docstring for the exact
+    concurrency contract).  The swapped-in state represents the
+    identical fact set: rows, counts, and query answers are unchanged."""
+    t0 = time.perf_counter()
+    store: ColumnStore = inc.store
+    facts: FactStore = inc.facts
+    before = mu_usage(facts)
+
+    fresh = ColumnStore()
+    old_to_new: dict[int, int] = {}
+    leaf_cons: dict[bytes, int] = {}
+    concat_cons: dict[tuple[int, ...], int] = {}
+    reshared = 0
+
+    preds = list(facts.predicates())
+    roots = [c for p in preds for mf in facts.all(p) for c in mf.columns]
+    for cid in store.topo_order(roots):
+        if store.is_leaf(cid):
+            key = _leaf_key(store, cid)
+            hit = leaf_cons.get(key)
+            if hit is None:
+                rv, rc = store.leaf_payload(cid)
+                hit = fresh.new_leaf_rle(rv.copy(), rc.copy())
+                leaf_cons[key] = hit
+            else:
+                reshared += 1
+            old_to_new[cid] = hit
+        else:
+            kids = tuple(old_to_new[c] for c in store.children(cid))
+            hit = concat_cons.get(kids)
+            if hit is None:
+                hit = fresh.new_concat(list(kids))
+                concat_cons[kids] = hit
+            old_to_new[cid] = hit
+
+    new_facts: dict[str, list[MetaFact]] = {}
+    for pred in preds:
+        new_facts[pred] = [
+            MetaFact(
+                pred,
+                tuple(old_to_new[c] for c in mf.columns),
+                mf.length,
+                mf.round,
+            )
+            for mf in facts.all(pred)
+        ]
+
+    # -- the swap (between requests; not concurrent-reader safe) ------- #
+    store._nodes = fresh._nodes
+    store._parents = fresh._parents
+    store._unfold_cache = fresh._unfold_cache
+    store._next_id = fresh._next_id
+    facts._facts = new_facts
+    inc.pre_mfs = {}
+    inc.stats_view.refresh()
+
+    after = mu_usage(facts)
+    return CompactionStats(
+        nodes_before=before.n_nodes,
+        nodes_after=after.n_nodes,
+        bytes_before=before.total_bytes,
+        bytes_after=after.total_bytes,
+        dead_fraction_before=before.dead_fraction,
+        reshared_leaves=reshared,
+        time_s=time.perf_counter() - t0,
+    )

@@ -1,0 +1,204 @@
+"""Checkpoint orchestration: snapshot directories + the WAL + GC.
+
+Directory layout under one checkpoint root::
+
+    ckpt/
+      LATEST              name of the newest complete snapshot
+      snap-00000004/      one snapshot per checkpoint epoch
+      snap-00000019/
+      wal.jsonl           update batches since the newest snapshot
+
+Protocol (crash-safe at every step):
+
+1. ``checkpoint(inc)`` writes ``snap-<epoch>.tmp`` fully (manifest
+   last), renames it to ``snap-<epoch>``, then atomically rewrites
+   ``LATEST`` — a crash anywhere leaves either the old or the new
+   snapshot current, never a torn one.
+2. Only then is the WAL truncated (records ``<= epoch`` are redundant)
+   and the in-memory journal cleared; old snapshots beyond ``keep``
+   are pruned.
+3. ``restore(program)`` loads the snapshot named by ``LATEST``, replays
+   newer WAL records through ``IncrementalStore.apply``, and only then
+   attaches the WAL for subsequent logging.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import time
+from dataclasses import dataclass
+
+from .format import (
+    SnapshotError,
+    _fsync_dir,
+    read_manifest,
+    restore_incremental,
+    snapshot_nbytes,
+    write_snapshot,
+)
+from .wal import WriteAheadLog
+
+__all__ = ["CheckpointManager", "RecoveryStats"]
+
+_LATEST = "LATEST"
+_WAL = "wal.jsonl"
+
+
+@dataclass
+class RecoveryStats:
+    snapshot: str
+    snapshot_epoch: int
+    final_epoch: int
+    wal_batches: int
+    wal_dropped: int
+    t_snapshot_s: float
+    t_replay_s: float
+    verified: bool
+
+
+class CheckpointManager:
+    def __init__(self, root: str, *, keep: int = 2, label: str = ""):
+        self.root = root
+        self.keep = max(keep, 1)
+        #: provenance tag stamped into manifests and checked on restore
+        #: (a labelled manager refuses a differently-labelled snapshot)
+        self.label = label
+        os.makedirs(root, exist_ok=True)
+        self.wal = WriteAheadLog(os.path.join(root, _WAL))
+
+    def reset(self) -> None:
+        """Wipe the checkpoint root: all snapshots, the LATEST pointer,
+        and the WAL.  A *cold* (non-restore) run over a reused directory
+        must call this before logging — otherwise its fresh epochs
+        interleave with a previous run's WAL records and snapshots, and
+        a later restore would stitch the two histories together."""
+        for name in self.snapshots():
+            shutil.rmtree(os.path.join(self.root, name))
+        for name in os.listdir(self.root):
+            path = os.path.join(self.root, name)
+            if name.endswith(".tmp"):
+                shutil.rmtree(path) if os.path.isdir(path) else os.remove(path)
+        ptr = os.path.join(self.root, _LATEST)
+        if os.path.exists(ptr):
+            os.remove(ptr)
+        self.wal.truncate()
+
+    # ------------------------------------------------------------------ #
+    def _snap_name(self, epoch: int) -> str:
+        return f"snap-{epoch:08d}"
+
+    def snapshots(self) -> list[str]:
+        """Complete snapshot names, oldest first."""
+        out = []
+        for name in sorted(os.listdir(self.root)):
+            path = os.path.join(self.root, name)
+            if (
+                name.startswith("snap-")
+                and not name.endswith(".tmp")
+                and os.path.isdir(path)
+                and os.path.exists(os.path.join(path, "manifest.json"))
+            ):
+                out.append(name)
+        return out
+
+    def latest(self) -> str | None:
+        """Path of the current snapshot (via LATEST, falling back to the
+        newest complete directory if the pointer is missing)."""
+        ptr = os.path.join(self.root, _LATEST)
+        if os.path.exists(ptr):
+            with open(ptr) as fh:
+                name = fh.read().strip()
+            path = os.path.join(self.root, name)
+            if os.path.exists(os.path.join(path, "manifest.json")):
+                return path
+        snaps = self.snapshots()
+        return os.path.join(self.root, snaps[-1]) if snaps else None
+
+    def has_snapshot(self) -> bool:
+        return self.latest() is not None
+
+    # ------------------------------------------------------------------ #
+    def checkpoint(self, inc) -> dict:
+        """Write a snapshot of the incremental store's current epoch,
+        publish it, and drop the now-redundant WAL/journal prefix."""
+        name = self._snap_name(inc.epoch)
+        final = os.path.join(self.root, name)
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        manifest = write_snapshot(
+            tmp,
+            inc.facts,
+            kind="incremental",
+            label=self.label,
+            epoch=inc.epoch,
+            round_tag=inc._round,
+            rows=inc.rows.to_dict(),
+            counts={p: c for p, c in inc.counts.items() if c.size},
+            explicit={p: r for p, r in inc.explicit.items() if r.size},
+            arities=inc.arities,
+        )
+        if os.path.exists(final):  # re-checkpoint at an unchanged epoch
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        ptr_tmp = os.path.join(self.root, _LATEST + ".tmp")
+        with open(ptr_tmp, "w") as fh:
+            fh.write(name + "\n")
+            fh.flush()
+            os.fsync(fh.fileno())
+        os.replace(ptr_tmp, os.path.join(self.root, _LATEST))
+        _fsync_dir(self.root)
+        # the snapshot is durable and published: WAL records and journal
+        # entries at or below its epoch are redundant
+        self.wal.truncate(keep_after_epoch=inc.epoch)
+        inc.truncate_journal()
+        # never prune the snapshot LATEST points at, whatever its name
+        # sorts as (a reused dir could hold higher-numbered strangers)
+        for old in self.snapshots()[: -self.keep]:
+            if old != name:
+                shutil.rmtree(os.path.join(self.root, old))
+        return manifest
+
+    # ------------------------------------------------------------------ #
+    def restore(self, program, *, verify: bool = False, **store_kwargs):
+        """Warm-start: latest snapshot + WAL replay.  Returns
+        ``(inc, RecoveryStats)``; the WAL is attached afterwards so new
+        batches keep logging to the same file."""
+        snap = self.latest()
+        if snap is None:
+            raise SnapshotError(f"no snapshot under {self.root!r}")
+        t0 = time.perf_counter()
+        inc, meta = restore_incremental(
+            program, snap, verify=False,
+            expected_label=self.label, **store_kwargs,
+        )
+        t_snap = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        n_replayed = self.wal.replay(inc, after_epoch=meta.epoch)
+        t_replay = time.perf_counter() - t0
+        if verify:
+            inc.check_integrity()
+        inc.attach_wal(self.wal)
+        return inc, RecoveryStats(
+            snapshot=snap,
+            snapshot_epoch=meta.epoch,
+            final_epoch=inc.epoch,
+            wal_batches=n_replayed,
+            wal_dropped=self.wal.n_dropped,
+            t_snapshot_s=t_snap,
+            t_replay_s=t_replay,
+            verified=verify,
+        )
+
+    # ------------------------------------------------------------------ #
+    def latest_manifest(self) -> dict | None:
+        snap = self.latest()
+        return read_manifest(snap) if snap else None
+
+    def disk_nbytes(self) -> int:
+        """Bytes across all snapshots + the WAL."""
+        total = self.wal.nbytes()
+        for name in self.snapshots():
+            total += snapshot_nbytes(os.path.join(self.root, name))
+        return total

@@ -1,0 +1,574 @@
+"""Durable storage subsystem: snapshot round-trips, WAL crash recovery,
+checkpoint orchestration, and compaction differentials."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import CMatEngine, flat_seminaive
+from repro.core.generators import chain, lubm_like, paper_example, random_kb
+from repro.incremental import IncrementalStore
+from repro.query import QueryEngine
+from repro.storage import (
+    CheckpointManager,
+    SnapshotError,
+    WriteAheadLog,
+    load_frozen,
+    mu_usage,
+    restore_incremental,
+    write_snapshot,
+)
+
+
+def as_sets(facts):
+    return {
+        p: frozenset(map(tuple, np.asarray(r).tolist()))
+        for p, r in facts.items()
+        if len(r)
+    }
+
+
+def assert_same_store(a: IncrementalStore, b: IncrementalStore):
+    """Row-for-row equal materialisations, counts, and explicit sets."""
+    da, db = a.to_dict(), b.to_dict()
+    assert set(da) == set(db)
+    for p in da:
+        assert np.array_equal(da[p], db[p]), p
+    assert set(a.counts) == set(b.counts)
+    for p in a.counts:
+        assert np.array_equal(a.counts[p], b.counts[p]), f"counts {p}"
+    assert as_sets(a.explicit) == as_sets(b.explicit)
+    assert a.epoch == b.epoch
+
+
+def small_lubm():
+    return lubm_like(n_dept=3, n_students=30, n_courses=6, seed=0)
+
+
+def pick_batch(dataset, k, seed=0):
+    rng = np.random.default_rng(seed)
+    pool = [
+        (p, tuple(int(v) for v in row))
+        for p, rows in dataset.items()
+        for row in np.asarray(rows).reshape(len(rows), -1)
+    ]
+    rng.shuffle(pool)
+    out: dict[str, list] = {}
+    for p, row in pool[:k]:
+        out.setdefault(p, []).append(row)
+    return {p: np.asarray(r, dtype=np.int64) for p, r in out.items()}
+
+
+# --------------------------------------------------------------------- #
+# snapshot round-trip
+# --------------------------------------------------------------------- #
+def test_snapshot_round_trip(tmp_path):
+    program, dataset, _ = small_lubm()
+    inc = IncrementalStore(program)
+    inc.load(dataset)
+    manifest = write_snapshot(
+        str(tmp_path / "snap"), inc.facts,
+        epoch=inc.epoch, round_tag=inc._round,
+        rows=inc.rows.to_dict(), counts=inc.counts,
+        explicit=inc.explicit, arities=inc.arities,
+    )
+    assert manifest["store"]["n_nodes"] > 0
+    inc2, meta = restore_incremental(
+        program, str(tmp_path / "snap"), verify=True
+    )
+    assert_same_store(inc, inc2)
+    # the differential gate really ran: counts were compared to a recount
+    assert meta.kind == "incremental"
+
+
+def test_snapshot_preserves_sharing(tmp_path):
+    """Splits create shared/concat structure; a round-trip must keep the
+    paper's representation size (payload dedup may even shrink it)."""
+    program, dataset, _ = paper_example(n=6, m=4)
+    inc = IncrementalStore(program)
+    inc.load(dataset)
+    batch = pick_batch(dataset, 3)
+    inc.apply(deletions=batch)  # forces copy-splits -> concats + sharing
+    inc.apply(additions=batch)
+    size_before = inc.facts.total_repr_size()
+    write_snapshot(
+        str(tmp_path / "snap"), inc.facts,
+        epoch=inc.epoch, round_tag=inc._round,
+        rows=inc.rows.to_dict(), counts=inc.counts,
+        explicit=inc.explicit, arities=inc.arities,
+    )
+    inc2, _ = restore_incremental(program, str(tmp_path / "snap"))
+    assert inc2.facts.total_repr_size() <= size_before
+    assert inc2.facts.n_meta_facts() == inc.facts.n_meta_facts()
+    assert_same_store(inc, inc2)
+
+
+def test_snapshot_rejects_corruption(tmp_path):
+    program, dataset, _ = small_lubm()
+    inc = IncrementalStore(program)
+    inc.load(dataset)
+    snap = str(tmp_path / "snap")
+    write_snapshot(
+        snap, inc.facts, rows=inc.rows.to_dict(),
+        counts=inc.counts, explicit=inc.explicit,
+    )
+    blob = os.path.join(snap, "data.bin")
+    with open(blob, "r+b") as fh:
+        fh.seek(10)
+        byte = fh.read(1)
+        fh.seek(10)
+        fh.write(bytes([byte[0] ^ 0xFF]))
+    with pytest.raises(SnapshotError):
+        restore_incremental(program, snap)
+    with pytest.raises(SnapshotError):
+        restore_incremental(program, str(tmp_path / "nowhere"))
+
+
+def test_frozen_snapshot_serves_queries(tmp_path):
+    """Static warm start: a frozen-kind snapshot answers queries
+    identically to the engine it was written from, without
+    re-materialising or re-unfolding."""
+    program, dataset, dictionary = small_lubm()
+    eng = CMatEngine(program)
+    eng.load(dataset)
+    eng.materialise()
+    frozen = eng.facts.freeze()
+    rows = {p: frozen.snapshot(p) for p in frozen.predicates()}
+    write_snapshot(
+        str(tmp_path / "frozen"), eng.facts, kind="frozen", rows=rows
+    )
+    restored = load_frozen(str(tmp_path / "frozen"))
+    for p in frozen.predicates():
+        assert restored.has_snapshot(p)  # seeded, not lazily re-unfolded
+    q1 = QueryEngine(frozen, dictionary)
+    q2 = QueryEngine(restored, dictionary)
+    queries = [
+        '?s, ?c <- memberOf(?s, "dept1"), takesCourse(?s, ?c)',
+        "?s, ?p, ?c <- advisor(?s, ?p), teacherOf(?p, ?c), takesCourse(?s, ?c)",
+        "?x <- Student(?x)",
+    ]
+    for text in queries:
+        assert np.array_equal(q1.answer(text).answers, q2.answer(text).answers)
+    assert restored.snapshot_cells == 0
+
+
+def test_incremental_restore_requires_incremental_kind(tmp_path):
+    program, dataset, _ = small_lubm()
+    eng = CMatEngine(program)
+    eng.load(dataset)
+    eng.materialise()
+    write_snapshot(str(tmp_path / "frozen"), eng.facts, kind="frozen")
+    with pytest.raises(SnapshotError):
+        restore_incremental(program, str(tmp_path / "frozen"))
+
+
+# --------------------------------------------------------------------- #
+# WAL + crash recovery
+# --------------------------------------------------------------------- #
+def test_wal_crash_recovery_parity(tmp_path):
+    """Snapshot + WAL replay == the store that crashed == a fresh
+    fixpoint over the final explicit set."""
+    program, dataset, _ = small_lubm()
+    inc = IncrementalStore(program)
+    inc.load(dataset)
+    ckpt = CheckpointManager(str(tmp_path / "ckpt"))
+    ckpt.checkpoint(inc)
+    inc.attach_wal(ckpt.wal)
+    for i in range(3):
+        batch = pick_batch(dataset, 4, seed=i)
+        inc.apply(deletions=batch)
+        inc.apply(additions=pick_batch(dataset, 2, seed=i))
+    # "crash": recover purely from disk
+    inc2, rec = ckpt.restore(program, verify=True)
+    assert rec.wal_batches == 6
+    assert rec.snapshot_epoch == 0 and rec.final_epoch == inc.epoch
+    assert_same_store(inc, inc2)
+    want = as_sets(
+        {p: r for p, r in flat_seminaive(program, inc.explicit).items()}
+    )
+    assert as_sets(inc2.to_dict()) == want
+
+
+def test_wal_torn_tail_is_dropped(tmp_path):
+    program, dataset, _ = small_lubm()
+    inc = IncrementalStore(program)
+    inc.load(dataset)
+    ckpt = CheckpointManager(str(tmp_path / "ckpt"))
+    ckpt.checkpoint(inc)
+    inc.attach_wal(ckpt.wal)
+    batch = pick_batch(dataset, 3)
+    inc.apply(deletions=batch)
+    state_after_first = inc.to_dict()
+    epoch_after_first = inc.epoch
+    # simulate a crash mid-append: a second record only half-written
+    with open(ckpt.wal.path, "a") as fh:
+        fh.write('{"rec": {"epoch": 99, "adds": {}, "de')
+    inc2, rec = ckpt.restore(program)
+    assert rec.wal_batches == 1 and rec.wal_dropped == 1
+    assert inc2.epoch == epoch_after_first
+    got = inc2.to_dict()
+    assert set(got) == set(state_after_first)
+    for p in got:
+        assert np.array_equal(got[p], state_after_first[p])
+
+
+def test_wal_checksum_guards_bitrot(tmp_path):
+    wal = WriteAheadLog(str(tmp_path / "wal.jsonl"))
+    wal.append(1, {"P": np.asarray([[1, 2]])}, None)
+    wal.append(2, None, {"P": np.asarray([[1, 2]])})
+    lines = open(wal.path).read().splitlines()
+    flipped = lines[0].replace('"epoch": 1', '"epoch": 7')
+    with open(wal.path, "w") as fh:
+        fh.write(flipped + "\n" + lines[1] + "\n")
+    # record 0 fails its checksum -> it and everything after are dropped
+    assert wal.records() == []
+    assert wal.n_dropped == 2
+
+
+def test_wal_truncate_keeps_newer_records(tmp_path):
+    wal = WriteAheadLog(str(tmp_path / "wal.jsonl"))
+    for e in (1, 2, 3):
+        wal.append(e, {"P": np.asarray([[e, e]])}, None)
+    wal.truncate(keep_after_epoch=2)
+    assert [r["epoch"] for r in wal.records()] == [3]
+    wal.truncate()
+    assert wal.records() == [] and wal.nbytes() == 0
+
+
+# --------------------------------------------------------------------- #
+# checkpoint orchestration
+# --------------------------------------------------------------------- #
+def test_checkpoint_truncates_wal_and_journal(tmp_path):
+    program, dataset, _ = small_lubm()
+    inc = IncrementalStore(program)
+    inc.load(dataset)
+    ckpt = CheckpointManager(str(tmp_path / "ckpt"))
+    inc.attach_wal(ckpt.wal)
+    batch = pick_batch(dataset, 3)
+    st = inc.apply(deletions=batch)
+    assert st.journal_bytes > 0
+    assert len(ckpt.wal.records()) == 1
+    ckpt.checkpoint(inc)
+    assert ckpt.wal.records() == []
+    assert len(inc.journal) == 0 and inc.journal_bytes() == 0
+
+
+def test_journal_is_bounded():
+    program, dataset, _ = paper_example()
+    inc = IncrementalStore(program, journal_max=4)
+    inc.load(dataset)
+    for _ in range(7):
+        inc.apply()  # empty batches still journal + bump the epoch
+    assert len(inc.journal) == 4
+    assert [j["epoch"] for j in inc.journal] == [4, 5, 6, 7]
+
+
+def test_checkpoint_prunes_and_tracks_latest(tmp_path):
+    program, dataset, _ = small_lubm()
+    inc = IncrementalStore(program)
+    inc.load(dataset)
+    ckpt = CheckpointManager(str(tmp_path / "ckpt"), keep=2)
+    inc.attach_wal(ckpt.wal)  # batches after the last snapshot replay
+    batch = pick_batch(dataset, 2)
+    for _ in range(3):
+        ckpt.checkpoint(inc)
+        inc.apply(deletions=batch)
+        inc.apply(additions=batch)
+    assert len(ckpt.snapshots()) == 2  # pruned to keep=2
+    assert ckpt.latest().endswith(f"snap-{inc.epoch - 2:08d}")
+    inc2, rec = ckpt.restore(program, verify=True)
+    assert_same_store(inc, inc2)
+    manifest = ckpt.latest_manifest()
+    assert manifest["epoch"] == inc.epoch - 2
+    assert ckpt.disk_nbytes() > 0
+
+
+def test_restore_then_apply_continues(tmp_path):
+    """A restored store is a live store: applying the same further batch
+    to the original and the restored copy stays bit-identical."""
+    program, dataset, _ = small_lubm()
+    inc = IncrementalStore(program)
+    inc.load(dataset)
+    ckpt = CheckpointManager(str(tmp_path / "ckpt"))
+    ckpt.checkpoint(inc)
+    inc2, _ = ckpt.restore(program)
+    batch = pick_batch(dataset, 5, seed=3)
+    inc.apply(deletions=batch)
+    inc2.apply(deletions=batch)
+    inc.check_integrity()
+    inc2.check_integrity()
+    assert_same_store(inc, inc2)
+
+
+def test_label_mismatch_refused(tmp_path):
+    """A labelled manager refuses a snapshot written for another KB;
+    an unlabelled side leaves the check unbound."""
+    program, dataset, _ = small_lubm()
+    inc = IncrementalStore(program)
+    inc.load(dataset)
+    ckpt = CheckpointManager(str(tmp_path / "ckpt"), label="lubm:scale1")
+    manifest = ckpt.checkpoint(inc)
+    assert manifest["label"] == "lubm:scale1"  # stamped, not shadowed
+    inc_ok, _ = ckpt.restore(program)  # matching label round-trips
+    assert_same_store(inc, inc_ok)
+    wrong = CheckpointManager(str(tmp_path / "ckpt"), label="chain:scale2")
+    with pytest.raises(SnapshotError):
+        wrong.restore(program)
+    unlabelled = CheckpointManager(str(tmp_path / "ckpt"))
+    inc2, _ = unlabelled.restore(program)
+    assert_same_store(inc, inc2)
+    with pytest.raises(SnapshotError):
+        load_frozen(ckpt.latest(), expected_label="chain:scale2")
+
+
+def test_reset_wipes_stale_history(tmp_path):
+    """A cold run over a reused directory must not stitch its fresh
+    epochs onto a previous run's snapshots and WAL records."""
+    program, dataset, _ = small_lubm()
+    inc = IncrementalStore(program)
+    inc.load(dataset)
+    ckpt = CheckpointManager(str(tmp_path / "ckpt"))
+    ckpt.checkpoint(inc)
+    inc.attach_wal(ckpt.wal)
+    inc.apply(deletions=pick_batch(dataset, 3))  # stale WAL record
+    # second run, cold start into the same directory
+    ckpt2 = CheckpointManager(str(tmp_path / "ckpt"))
+    ckpt2.reset()
+    assert not ckpt2.has_snapshot()
+    assert ckpt2.wal.records() == []
+    inc2 = IncrementalStore(program)
+    inc2.load(dataset)
+    inc2.attach_wal(ckpt2.wal)
+    inc2.apply(deletions=pick_batch(dataset, 2, seed=9))
+    ckpt2.checkpoint(inc2)
+    inc3, rec = ckpt2.restore(program, verify=True)
+    assert rec.snapshot_epoch == inc2.epoch  # only run-2 history survives
+    assert_same_store(inc2, inc3)
+
+
+# --------------------------------------------------------------------- #
+# GC / compaction epochs
+# --------------------------------------------------------------------- #
+def _churn(inc, dataset, rounds, batch_size=4):
+    for i in range(rounds):
+        batch = pick_batch(dataset, batch_size, seed=i)
+        inc.apply(deletions=batch)
+        inc.apply(additions=batch)
+
+
+def test_compaction_preserves_answers_and_counts(tmp_path):
+    program, dataset, dictionary = small_lubm()
+    inc = IncrementalStore(program)
+    inc.load(dataset)
+    _churn(inc, dataset, rounds=8)
+    before = mu_usage(inc.facts)
+    assert before.dead_fraction > 0  # churn strands dead nodes
+    qe = QueryEngine(inc, dictionary)
+    queries = [
+        '?s, ?c <- memberOf(?s, "dept0"), takesCourse(?s, ?c)',
+        "?x, ?u <- memberOf(?x, ?d), subOrganizationOf(?d, ?u)",
+    ]
+    want = [qe.answer(t).answers for t in queries]
+    pre = inc.to_dict()
+
+    cs = inc.compact()
+    assert cs.nodes_after < cs.nodes_before
+    assert cs.bytes_after <= cs.bytes_before
+    after = mu_usage(inc.facts)
+    assert after.n_dead == 0
+
+    inc.check_integrity()  # row index AND counts survive the swap
+    post = inc.to_dict()
+    assert set(pre) == set(post)
+    for p in pre:
+        assert np.array_equal(pre[p], post[p])
+    qe.bump_epoch(inc)
+    for t, w in zip(queries, want):
+        assert np.array_equal(qe.answer(t).answers, w)
+    # maintenance still works on the compacted store
+    batch = pick_batch(dataset, 3, seed=99)
+    inc.apply(deletions=batch)
+    inc.check_integrity()
+
+
+def test_compaction_reshares_across_epochs():
+    """Delete/re-insert churn duplicates identical runs in fresh leaves;
+    hash-consing merges them again, below the pre-churn node count."""
+    program, dataset, _ = chain(30)
+    inc = IncrementalStore(program)
+    inc.load(dataset)
+    _churn(inc, dataset, rounds=6, batch_size=2)
+    cs = inc.compact()
+    assert cs.reshared_leaves > 0
+    assert inc.mu_usage().dead_fraction == 0.0
+
+
+def test_maybe_compact_threshold():
+    program, dataset, _ = small_lubm()
+    inc = IncrementalStore(program)
+    inc.load(dataset)
+    assert inc.maybe_compact(threshold=0.99, min_nodes=1) is None
+    assert inc.maybe_compact(threshold=0) is None  # disabled
+    _churn(inc, dataset, rounds=6)
+    frac = inc.mu_usage().dead_fraction
+    assert inc.maybe_compact(threshold=frac + 0.01, min_nodes=1) is None
+    cs = inc.maybe_compact(threshold=frac / 2, min_nodes=1)
+    assert cs is not None and cs.dead_fraction_before >= frac / 2
+
+
+def test_snapshot_after_compaction_round_trips(tmp_path):
+    program, dataset, _ = small_lubm()
+    inc = IncrementalStore(program)
+    inc.load(dataset)
+    _churn(inc, dataset, rounds=6)
+    inc.compact()
+    ckpt = CheckpointManager(str(tmp_path / "ckpt"))
+    ckpt.checkpoint(inc)
+    inc2, _ = ckpt.restore(program, verify=True)
+    assert_same_store(inc, inc2)
+
+
+# --------------------------------------------------------------------- #
+# random / property-based round-trips
+# --------------------------------------------------------------------- #
+def test_random_kbs_snapshot_round_trip(tmp_path):
+    rng = np.random.default_rng(7)
+    for trial in range(15):
+        program, dataset = random_kb(
+            rng,
+            n_constants=int(rng.integers(2, 8)),
+            n_facts=int(rng.integers(1, 20)),
+            n_rules=int(rng.integers(1, 4)),
+        )
+        if not len(program.rules):
+            continue
+        inc = IncrementalStore(program)
+        inc.load(dataset)
+        snap = str(tmp_path / f"snap{trial}")
+        write_snapshot(
+            snap, inc.facts, epoch=inc.epoch, round_tag=inc._round,
+            rows=inc.rows.to_dict(), counts=inc.counts,
+            explicit=inc.explicit, arities=inc.arities,
+        )
+        inc2, _ = restore_incremental(program, snap, verify=True)
+        assert_same_store(inc, inc2)
+
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as hst
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - hypothesis is in requirements-dev
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    from repro.core.datalog import Atom, Program, Rule
+
+    PREDS = [("P", 2), ("Q", 2), ("R", 1)]
+    VARS = ["x", "y", "z"]
+
+    @hst.composite
+    def hyp_rules(draw):
+        body = []
+        for _ in range(draw(hst.integers(min_value=1, max_value=3))):
+            name, arity = draw(hst.sampled_from(PREDS))
+            body.append(
+                Atom(name, tuple(draw(hst.sampled_from(VARS)) for _ in range(arity)))
+            )
+        body_vars = [v for a in body for v in a.variables()]
+        name, arity = draw(hst.sampled_from(PREDS))
+        head = Atom(
+            name, tuple(draw(hst.sampled_from(body_vars)) for _ in range(arity))
+        )
+        return Rule(tuple(body), head)
+
+    @hst.composite
+    def hyp_programs(draw):
+        return Program(draw(hst.lists(hyp_rules(), min_size=1, max_size=4)))
+
+    @hst.composite
+    def hyp_datasets(draw):
+        out = {}
+        for name, arity in PREDS:
+            n = draw(hst.integers(min_value=0, max_value=10))
+            if n == 0:
+                continue
+            rows = draw(
+                hst.lists(
+                    hst.tuples(*[hst.integers(min_value=0, max_value=6)] * arity),
+                    min_size=n,
+                    max_size=n,
+                )
+            )
+            out[name] = np.unique(np.asarray(rows, dtype=np.int64), axis=0)
+        return out
+
+    @settings(
+        max_examples=30,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    @given(program=hyp_programs(), dataset=hyp_datasets())
+    def test_hypothesis_snapshot_round_trip(program, dataset, tmp_path_factory):
+        """snapshot -> load yields a store with row-for-row equal
+        ``mat(Pi, E)``, equal counts, and an equal further-apply future —
+        for random programs and datasets."""
+        if not dataset:
+            return
+        inc = IncrementalStore(program)
+        inc.load(dataset)
+        snap = str(tmp_path_factory.mktemp("hyp") / "snap")
+        write_snapshot(
+            snap, inc.facts, epoch=inc.epoch, round_tag=inc._round,
+            rows=inc.rows.to_dict(), counts=inc.counts,
+            explicit=inc.explicit, arities=inc.arities,
+        )
+        inc2, _ = restore_incremental(program, snap, verify=True)
+        assert_same_store(inc, inc2)
+        # the restored store has the same future, not just the same rows
+        dels = {p: r[: max(1, r.shape[0] // 2)] for p, r in dataset.items()}
+        inc.apply(deletions=dels)
+        inc2.apply(deletions=dels)
+        assert_same_store(inc, inc2)
+
+
+# --------------------------------------------------------------------- #
+# run.py --json schema gate (CI artifact comparability)
+# --------------------------------------------------------------------- #
+def test_bench_json_schema_check():
+    import sys
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    try:
+        from benchmarks.run import check_schema
+    finally:
+        sys.path.pop(0)
+
+    good = {
+        "smoke": True,
+        "failures": 0,
+        "benches": {
+            "storage": {
+                "status": "ok",
+                "seconds": 1.2,
+                "rows": [{"kb": "lubm", "t_restore_ms": 3.1, "ok": True}],
+            },
+            "broken": {"status": "failed", "seconds": 0.1, "error": "boom"},
+        },
+    }
+    assert check_schema(good) == []
+    assert check_schema(json.loads(json.dumps(good))) == []
+
+    bad_nested = json.loads(json.dumps(good))
+    bad_nested["benches"]["storage"]["rows"][0]["nested"] = {"a": 1}
+    assert any("non-scalar" in e for e in check_schema(bad_nested))
+
+    bad_status = json.loads(json.dumps(good))
+    bad_status["benches"]["storage"]["status"] = "okay"
+    assert any("status" in e for e in check_schema(bad_status))
+
+    bad_top = {"smoke": True, "benches": {}}
+    assert check_schema(bad_top)
