@@ -1,0 +1,262 @@
+"""CI bench-regression gate: diff a ``--json`` bench run against the
+committed baseline.
+
+    PYTHONPATH=src python -m benchmarks.compare bench-results.json \
+        [--baseline BENCH_BASELINE.json] [--tolerance 0.25] \
+        [--min-seconds 1.0] [--json-out bench-diff.json] \
+        [--update-baseline]
+
+For every bench present in both files the gate compares
+
+* **wall time** (``seconds``) — the hard gate: a regression beyond
+  ``--tolerance`` (relative, default +25%) on any bench whose baseline
+  took at least ``--min-seconds`` fails the run.  The floor keeps
+  sub-second benches (pure jitter on shared CI runners) out of the gate
+  while still reporting their drift.
+* **key metric rows** — rows are matched on their non-numeric cells
+  (kb, mode, batch, ...) and every shared numeric metric is diffed.
+  Metric drift is informational: it lands in the report and the JSON
+  artifact so a reviewer sees *what* regressed, but only wall time
+  gates (metrics like ``rows_joined`` gate through their own tests).
+
+Benches new in the results are reported as unbaselined (refresh with
+``--update-baseline``); benches missing from the results fail the gate —
+a silently dropped bench is how perf coverage rots.
+
+``--update-baseline`` rewrites the baseline from the current results
+(dropping per-run noise: only ``seconds``, ``status`` and ``rows`` are
+kept); it refuses to refresh from a run with failed benches.  Run it
+and commit the file whenever a PR legitimately changes the performance
+envelope.
+
+**Baseline provenance.**  Wall times are machine-relative: a baseline
+recorded on one host gates runs on another only up to their speed
+difference.  If CI runners drift outside the tolerance with no code
+change, download the ``bench-smoke-results`` artifact from a green CI
+run and refresh the baseline from *that* file, so the committed numbers
+are runner-measured rather than laptop-measured.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+_NUM = (int, float)
+
+
+def _rows(bench: dict) -> list[dict]:
+    rows = bench.get("rows")
+    if rows is None:
+        return []
+    if isinstance(rows, dict):
+        return [rows]
+    return [r for r in rows if isinstance(r, dict)]
+
+
+def _row_key(row: dict) -> tuple:
+    """Rows are matched across runs by their non-numeric cells — the
+    coordinates (kb, mode, batch is numeric but identifying...) — plus
+    any cell named like an identifier."""
+    key = []
+    for k in sorted(row):
+        v = row[k]
+        if isinstance(v, bool) or not isinstance(v, _NUM):
+            key.append((k, v))
+        elif k in ("batch", "shards", "n", "scale", "size", "n_explicit"):
+            # numeric coordinates, not metrics
+            key.append((k, v))
+    return tuple(key)
+
+
+def diff_results(results: dict, baseline: dict, *, tolerance: float,
+                 min_seconds: float) -> dict:
+    """Structured diff + gate verdict (pure; the CLI prints it)."""
+    failures: list[str] = []
+    notes: list[str] = []
+    benches: dict[str, dict] = {}
+    res_b = results.get("benches", {})
+    base_b = baseline.get("benches", {})
+
+    for name in sorted(set(res_b) | set(base_b)):
+        new = res_b.get(name)
+        old = base_b.get(name)
+        entry: dict = {}
+        if new is None:
+            failures.append(
+                f"{name}: present in baseline but missing from results "
+                f"(bench dropped?)"
+            )
+            benches[name] = {"status": "missing"}
+            continue
+        if old is None:
+            notes.append(
+                f"{name}: no baseline entry (new bench — refresh with "
+                f"--update-baseline)"
+            )
+            benches[name] = {"status": "unbaselined",
+                             "seconds": new.get("seconds")}
+            continue
+        if new.get("status") != "ok":
+            failures.append(f"{name}: bench failed ({new.get('error')})")
+            benches[name] = {"status": "failed"}
+            continue
+
+        t_new = float(new.get("seconds", 0.0))
+        t_old = float(old.get("seconds", 0.0))
+        rel = (t_new - t_old) / t_old if t_old > 0 else 0.0
+        entry = {
+            "status": "ok",
+            "seconds": t_new,
+            "baseline_seconds": t_old,
+            "rel_change": round(rel, 4),
+            "gated": t_old >= min_seconds,
+        }
+        if t_old >= min_seconds and rel > tolerance:
+            entry["status"] = "regressed"
+            failures.append(
+                f"{name}: wall time {t_old:.2f}s -> {t_new:.2f}s "
+                f"(+{rel:.0%} > +{tolerance:.0%} tolerance)"
+            )
+
+        # informational metric drift over matched rows.  Rows match on
+        # their non-numeric/coordinate cells plus an occurrence index,
+        # so benches whose rows differ only in measured metrics still
+        # pair up positionally instead of colliding on one key.
+        old_rows: dict = {}
+        for r in _rows(old):
+            k = _row_key(r)
+            old_rows[(k, sum(1 for kk in old_rows if kk[0] == k))] = r
+        seen: dict = {}
+        drifts: list[dict] = []
+        for row in _rows(new):
+            k = _row_key(row)
+            occ = seen.get(k, 0)
+            seen[k] = occ + 1
+            prev = old_rows.get((k, occ))
+            if prev is None:
+                continue
+            for k, v in row.items():
+                pv = prev.get(k)
+                if (
+                    isinstance(v, _NUM) and not isinstance(v, bool)
+                    and isinstance(pv, _NUM) and not isinstance(pv, bool)
+                    and (k, v) not in _row_key(row)
+                    and v != pv
+                    and not (v != v and pv != pv)  # NaN == NaN here
+                ):
+                    drifts.append(
+                        {
+                            "row": dict(_row_key(row)),
+                            "metric": k,
+                            "baseline": pv,
+                            "current": v,
+                        }
+                    )
+        if drifts:
+            entry["metric_drift"] = drifts
+        benches[name] = entry
+
+    return {
+        "tolerance": tolerance,
+        "min_seconds": min_seconds,
+        "failures": failures,
+        "notes": notes,
+        "benches": benches,
+        "ok": not failures,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("results", help="bench-results.json from benchmarks.run --json")
+    ap.add_argument("--baseline", default="BENCH_BASELINE.json")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="relative wall-time regression that fails the "
+                         "gate (default 0.25 = +25%%)")
+    ap.add_argument("--min-seconds", type=float, default=1.0,
+                    help="baseline wall-time floor below which a bench "
+                         "is reported but never gates (CI jitter)")
+    ap.add_argument("--json-out", default=None, metavar="PATH",
+                    help="write the structured diff (CI uploads it)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from these results")
+    args = ap.parse_args(argv)
+
+    with open(args.results) as fh:
+        results = json.load(fh)
+
+    if args.update_baseline:
+        not_ok = sorted(
+            name
+            for name, bench in results.get("benches", {}).items()
+            if bench.get("status") != "ok"
+        )
+        if not_ok:
+            # a bench silently dropped from the baseline would also
+            # drop out of the missing-bench gate — refuse the refresh
+            print(
+                f"[compare] refusing to refresh baseline: bench(es) not "
+                f"ok in the results: {', '.join(not_ok)}"
+            )
+            return 1
+        slim = {
+            "smoke": results.get("smoke", False),
+            "failures": 0,
+            "benches": {
+                name: {
+                    k: v for k, v in bench.items()
+                    if k in ("status", "seconds", "rows")
+                }
+                for name, bench in results.get("benches", {}).items()
+            },
+        }
+        with open(args.baseline, "w") as fh:
+            json.dump(slim, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"[compare] baseline refreshed: {args.baseline} "
+              f"({len(slim['benches'])} benches)")
+        return 0
+
+    try:
+        with open(args.baseline) as fh:
+            baseline = json.load(fh)
+    except FileNotFoundError:
+        print(f"[compare] no baseline at {args.baseline}; run with "
+              f"--update-baseline to create one")
+        return 1
+
+    diff = diff_results(
+        results, baseline,
+        tolerance=args.tolerance, min_seconds=args.min_seconds,
+    )
+    if args.json_out:
+        with open(args.json_out, "w") as fh:
+            json.dump(diff, fh, indent=2)
+        print(f"[compare] diff written to {args.json_out}")
+
+    for name, entry in diff["benches"].items():
+        if entry.get("status") == "ok":
+            mark = " " if entry.get("gated") else "~"
+            print(
+                f"[compare]{mark}{name}: {entry['baseline_seconds']:.2f}s "
+                f"-> {entry['seconds']:.2f}s ({entry['rel_change']:+.0%})"
+                + (f", {len(entry.get('metric_drift', []))} metric drifts"
+                   if entry.get("metric_drift") else "")
+            )
+    for note in diff["notes"]:
+        print(f"[compare] note: {note}")
+    if diff["failures"]:
+        print(f"[compare] FAILED ({len(diff['failures'])} regressions, "
+              f"tolerance +{args.tolerance:.0%}):")
+        for f in diff["failures"]:
+            print(f"  - {f}")
+        return 1
+    print(f"[compare] OK: no bench regressed beyond +{args.tolerance:.0%} "
+          f"(floor {args.min_seconds}s)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -85,6 +85,7 @@ def main() -> None:
 
     from . import (
         bench_dedup,
+        bench_distributed,
         bench_incremental,
         bench_kernels,
         bench_query,
@@ -103,6 +104,7 @@ def main() -> None:
         "query": bench_query.run,                    # compressed vs flat answering
         "incremental": bench_incremental.run,        # update vs rematerialise
         "storage": bench_storage.run,                # cold vs restore, compaction
+        "distributed": bench_distributed.run,        # naive vs semi-naive shards
     }
     failures = 0
     results: dict[str, dict] = {}

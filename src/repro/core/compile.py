@@ -18,7 +18,11 @@ arXiv 1511.08915, makes the same rule-body-as-query move):
   per-predicate statistics,
 * :func:`compile_body` — greedy connected-selectivity ordering with
   per-step join-kind selection (semi-join when one side's variables
-  cover the other's, structure-sharing cross-join otherwise),
+  cover the other's, structure-sharing cross-join otherwise) and, for
+  single-key equi-joins, a *partition key* annotation telling the
+  distributed executor which variable to co-partition the join on (a
+  side whose stored first column already is that variable skips its
+  pre-join ``all_to_all``),
 * :func:`stats_bucket` / :class:`PlanCache` — plans are cached per
   (rule, pivot) and re-planned only when a body predicate's cardinality
   moves to a different power-of-two bucket,
@@ -102,6 +106,12 @@ class JoinStep:
     #: semi-join direction: True = the new atom filters the pipeline,
     #: False = the pipeline filters the new atom
     filter_left: bool = False
+    #: the variable a distributed executor should co-partition both sides
+    #: on for this join (the single equi-join key; ``None`` for cartesian
+    #: or multi-key steps).  A side whose relation is already stored
+    #: partitioned on this variable — it owns the atom's first term —
+    #: needs no exchange before the local join.
+    partition_key: str | None = None
 
     def __str__(self) -> str:
         key = ", ".join(self.key_vars) if self.key_vars else "(cartesian)"
@@ -286,6 +296,7 @@ def compile_body(
                 kind,
                 shared,
                 filter_left,
+                partition_key=shared[0] if len(shared) == 1 else None,
             )
         )
         bound |= atom_vars

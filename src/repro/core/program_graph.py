@@ -24,6 +24,7 @@ __all__ = [
     "stratify",
     "explain_strata",
     "is_recursive",
+    "stratum_predicates",
 ]
 
 
@@ -131,6 +132,16 @@ def explain_strata(program: Program) -> str:
             f"  stratum {k}: {len(rules)} rule(s), heads [{', '.join(heads)}]{tag}"
         )
     return "\n".join(lines)
+
+
+def stratum_predicates(rules: list[Rule]) -> tuple[set[str], set[str]]:
+    """``(heads, body_preds)`` of one stratum's rules — the predicates a
+    fixpoint driver must watch for deltas (bodies) and the predicates the
+    stratum can change (heads).  Shared by the incremental sweeps and the
+    distributed stratum scheduler."""
+    heads = {r.head.predicate for r in rules}
+    bodies = {a.predicate for r in rules for a in r.body}
+    return heads, bodies
 
 
 def is_recursive(rules: list[Rule]) -> bool:

@@ -43,7 +43,24 @@ from .eval import (
 )
 from .index import merge_rows, setdiff_rows
 
-__all__ = ["dred_stratum"]
+__all__ = ["dred_stratum", "explicit_restores"]
+
+
+def explicit_restores(
+    missing: dict[str, np.ndarray], explicit: dict[str, np.ndarray]
+) -> dict[str, np.ndarray]:
+    """Overdeleted rows that are still explicit facts — they come back
+    without any derivability probe (the first rederivation step, shared
+    by the host DRed and the distributed delta exchange)."""
+    out: dict[str, np.ndarray] = {}
+    for pred, miss in missing.items():
+        present = explicit.get(pred)
+        if present is None or present.shape[0] == 0 or miss.shape[0] == 0:
+            continue
+        back = miss[multicol_member(miss, present)]
+        if back.shape[0]:
+            out[pred] = back
+    return out
 
 
 def dred_stratum(inc, stratum, seeds, head_dels, st) -> dict[str, np.ndarray]:
@@ -69,15 +86,10 @@ def dred_stratum(inc, stratum, seeds, head_dels, st) -> dict[str, np.ndarray]:
     t0 = time.perf_counter()
     # --- rederive: explicit survivors come back without a probe ------- #
     delta_mfs: dict[str, list] = {}
-    for pred, miss in list(missing.items()):
-        explicit = inc.explicit.get(pred)
-        if explicit is None or explicit.shape[0] == 0:
-            continue
-        back = miss[multicol_member(miss, explicit)]
-        if back.shape[0]:
-            delta_mfs[pred] = inc.add_rows(pred, back)
-            missing[pred] = setdiff_rows(miss, back)
-            st.n_rederived += int(back.shape[0])
+    for pred, back in explicit_restores(missing, inc.explicit).items():
+        delta_mfs[pred] = inc.add_rows(pred, back)
+        missing[pred] = setdiff_rows(missing[pred], back)
+        st.n_rederived += int(back.shape[0])
 
     def current(pred: str, src: str = "") -> list:
         return facts.all(pred)

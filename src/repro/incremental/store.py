@@ -53,7 +53,7 @@ from ..core.datalog import Program
 from ..core.engine import CMatEngine, MaterialisationStats
 from ..core.frozen import FrozenFacts
 from ..core.metafacts import MetaFact
-from ..core.program_graph import is_recursive, stratify
+from ..core.program_graph import is_recursive, stratify, stratum_predicates
 from ..core.util import multicol_member
 from .dred import dred_stratum
 from .eval import (
@@ -64,7 +64,12 @@ from .eval import (
 )
 from .index import RowIndex, merge_rows
 
-__all__ = ["IncrementalStore", "IncrementalStats"]
+__all__ = [
+    "IncrementalStore",
+    "IncrementalStats",
+    "normalise_batch",
+    "effective_updates",
+]
 
 
 @dataclass
@@ -89,7 +94,10 @@ class IncrementalStats(MaterialisationStats):
     journal_bytes: int = 0    # resident bytes of the (capped) journal
 
 
-def _normalise(batch) -> dict[str, np.ndarray]:
+def normalise_batch(batch) -> dict[str, np.ndarray]:
+    """Canonical update batch: sorted-unique ``(n, arity)`` int64 rows per
+    predicate, empty predicates dropped (shared with the distributed
+    engine's ``apply``)."""
     out: dict[str, np.ndarray] = {}
     for pred, rows in (batch or {}).items():
         rows = np.asarray(rows, dtype=np.int64)
@@ -98,6 +106,42 @@ def _normalise(batch) -> dict[str, np.ndarray]:
         if rows.shape[0]:
             out[pred] = np.unique(rows, axis=0)
     return out
+
+
+_normalise = normalise_batch  # backwards-compatible internal alias
+
+
+def effective_updates(
+    explicit: dict[str, np.ndarray],
+    adds: dict[str, np.ndarray],
+    dels: dict[str, np.ndarray],
+) -> tuple[dict[str, np.ndarray], dict[str, np.ndarray]]:
+    """Clamp a normalised batch against the explicit set and update it in
+    place (``E := (E \\ dels) ∪ adds``).
+
+    Returns ``(eff_adds, eff_dels)``: deletions of non-explicit facts and
+    additions of already-explicit facts are dropped, so batches are
+    idempotent.  This is the update contract every maintenance engine
+    shares (host :class:`IncrementalStore` and the distributed engine).
+    """
+    eff_dels: dict[str, np.ndarray] = {}
+    for pred, rows in dels.items():
+        present = explicit.get(pred)
+        if present is None or present.shape[0] == 0:
+            continue
+        rows = rows[multicol_member(rows, present)]
+        if rows.shape[0]:
+            eff_dels[pred] = rows
+            explicit[pred] = present[~multicol_member(present, rows)]
+    eff_adds: dict[str, np.ndarray] = {}
+    for pred, rows in adds.items():
+        present = explicit.get(pred)
+        if present is not None and present.shape[0]:
+            rows = rows[~multicol_member(rows, present)]
+        if rows.shape[0]:
+            eff_adds[pred] = rows
+            explicit[pred] = merge_rows(present, rows)
+    return eff_adds, eff_dels
 
 
 class IncrementalStore:
@@ -307,41 +351,26 @@ class IncrementalStore:
         facts are ignored (idempotent batches)."""
         t_start = time.perf_counter()
         st = IncrementalStats()
-        adds = _normalise(additions)
-        dels = _normalise(deletions)
+        adds = normalise_batch(additions)
+        dels = normalise_batch(deletions)
         if self.wal is not None:
             # write-ahead: the record is durable before any mutation, so
             # a crash mid-apply recovers to the post-batch state
             self.wal.append(self.epoch + 1, adds, dels)
 
-        # effective explicit deletions (E := E \ D)
-        eff_dels: dict[str, np.ndarray] = {}
-        for pred, rows in dels.items():
-            explicit = self.explicit.get(pred)
-            if explicit is None or explicit.shape[0] == 0:
-                continue
-            rows = rows[multicol_member(rows, explicit)]
-            if rows.shape[0]:
-                eff_dels[pred] = rows
-                self.explicit[pred] = explicit[
-                    ~multicol_member(explicit, rows)
-                ]
-                st.n_del_explicit += int(rows.shape[0])
+        # effective explicit deletions (E := E \ D), swept before the
+        # additions clamp so a fact in both batches deletes then re-adds
+        _, eff_dels = effective_updates(self.explicit, {}, dels)
+        st.n_del_explicit += sum(int(r.shape[0]) for r in eff_dels.values())
         if eff_dels:
             self.stats_view.refresh()
             self._deletion_sweep(eff_dels, st)
 
         # effective explicit additions (E := E ∪ A)
-        eff_adds: dict[str, np.ndarray] = {}
         for pred, rows in adds.items():
             self.arities.setdefault(pred, int(rows.shape[1]))
-            explicit = self.explicit.get(pred)
-            if explicit is not None and explicit.shape[0]:
-                rows = rows[~multicol_member(rows, explicit)]
-            if rows.shape[0]:
-                eff_adds[pred] = rows
-                self.explicit[pred] = merge_rows(explicit, rows)
-                st.n_add_explicit += int(rows.shape[0])
+        eff_adds, _ = effective_updates(self.explicit, adds, {})
+        st.n_add_explicit += sum(int(r.shape[0]) for r in eff_adds.values())
         if eff_adds:
             self.stats_view.refresh()
             self._insertion_sweep(eff_adds, st)
@@ -392,8 +421,7 @@ class IncrementalStore:
         st.time_delete += time.perf_counter() - t0
 
         for stratum in self.strata:
-            body_preds = {a.predicate for r in stratum for a in r.body}
-            stratum_heads = {r.head.predicate for r in stratum}
+            stratum_heads, body_preds = stratum_predicates(stratum)
             seeds = {
                 p: removed[p] for p in body_preds if p in removed
             }
@@ -506,8 +534,7 @@ class IncrementalStore:
             note_added(pred, rows, self.add_rows(pred, rows))
 
         for stratum in self.strata:
-            body_preds = {a.predicate for r in stratum for a in r.body}
-            stratum_heads = {r.head.predicate for r in stratum}
+            stratum_heads, body_preds = stratum_predicates(stratum)
             seeds = {
                 p: added_mfs[p] for p in body_preds if p in added_mfs
             }

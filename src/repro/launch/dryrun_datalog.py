@@ -45,14 +45,7 @@ def lower_round(n_shards: int, capacity: int = 1 << 12):
         for atom in (rule.head, *rule.body):
             arities.setdefault(atom.predicate, atom.arity)
 
-    round_fn = eng._round_fn(preds, arities)
-    abstract = []
-    for p in preds:
-        a = arities[p]
-        abstract.append(
-            jax.ShapeDtypeStruct((n_shards, capacity, a), np.int32)
-        )
-        abstract.append(jax.ShapeDtypeStruct((n_shards,), np.int32))
+    round_fn, abstract = eng.abstract_round(preds, arities)
 
     t0 = time.time()
     lowered = round_fn.lower(*abstract)

@@ -25,6 +25,14 @@ the report adds apply-latency percentiles, per-epoch stale evictions,
 and — with ``--live-verify`` — a final differential check against a
 from-scratch materialisation of the ending fact set.
 
+``--distributed`` runs the sharded engine alongside the host store: the
+KB is hash-partitioned over every visible device, materialised with the
+semi-naive delta exchange, and — under ``--live`` — every update batch
+is *also* routed through ``DistributedEngine.apply`` (overdelete /
+rederive / insert deltas through ``all_to_all``), with a final
+differential ``check_integrity`` against the host
+:class:`~repro.incremental.IncrementalStore` serving the queries.
+
 ``--checkpoint-dir`` makes the store durable (DESIGN.md §Storage):
 update batches are write-ahead logged, a snapshot is checkpointed every
 ``--checkpoint-every`` batches, and ``--restore`` warm-starts from the
@@ -162,6 +170,11 @@ def main(argv=None):
     ap.add_argument("--live", action="store_true",
                     help="serve updates interleaved with queries through "
                          "the incremental maintenance subsystem")
+    ap.add_argument("--distributed", action="store_true",
+                    help="shadow the KB on the sharded engine (semi-naive "
+                         "delta exchange over all visible devices); with "
+                         "--live, updates also ship through all_to_all and "
+                         "the final state is differentially verified")
     ap.add_argument("--update-every", type=int, default=200,
                     help="apply an update batch every N queries (--live)")
     ap.add_argument("--update-size", type=int, default=8,
@@ -257,6 +270,63 @@ def main(argv=None):
     else:
         print(f"[restore] frozen snapshot served from {static_snap}, {t_mat:.3f}s")
 
+    dist = None
+    if args.distributed:
+        import jax
+        from jax.sharding import Mesh
+
+        from ..core.distributed import DistributedEngine
+
+        dprog = DistributedEngine.supported_program(program)
+        dist_complete = len(dprog) == len(program)
+        mesh = Mesh(np.asarray(jax.devices()), ("data",))
+        # size the padded buffers from the host materialisation (2x
+        # headroom over the biggest predicate): every device op scales
+        # with capacity, not live rows, so oversizing taxes each round
+        mat_rows = (
+            inc.to_dict() if inc is not None
+            else source.materialisation()
+            if hasattr(source, "materialisation")
+            else None
+        )
+        cap = 1 << 14
+        if mat_rows:
+            biggest = max(
+                (np.asarray(r).shape[0] for r in mat_rows.values()),
+                default=0,
+            )
+            cap = max(1 << 10, 1 << int(np.ceil(np.log2(max(2 * biggest, 2)))))
+        dist = DistributedEngine(dprog, mesh, capacity=cap)
+        t0 = time.perf_counter()
+        # seed from the *restored* explicit set when the host store came
+        # back from a checkpoint — the generator dataset no longer
+        # reflects prior sessions' WAL batches and the final
+        # differential check would flag a phantom mismatch
+        dist.materialise(inc.explicit if inc is not None else dataset)
+        ds = dist.stats
+        print(
+            f"[distributed] {mesh.shape['data']} shard(s), {dist.rounds} "
+            f"rounds over {ds.n_strata} strata in "
+            f"{time.perf_counter() - t0:.2f}s; "
+            f"{ds.n_rule_applications} rule applications "
+            f"({ds.rule_applications_skipped} skipped), "
+            f"{ds.rows_joined} rows joined, {ds.exchanges} exchanges "
+            f"({ds.exchanges_skipped} elided by planner keys, "
+            f"{ds.exchange_regrows} regrows)"
+        )
+        if not dist_complete:
+            print(
+                f"[distributed] {len(program) - len(dprog)} rule(s) outside "
+                f"the distributed fragment — differential checks disabled"
+            )
+        elif not args.live and hasattr(source, "materialisation"):
+            try:
+                dist.check_integrity(source.materialisation())
+                print("[dist-verify] OK (sharded materialisation == host)")
+            except AssertionError as e:
+                print(f"[dist-verify] MISMATCH: {e}")
+                return 1
+
     qe = QueryEngine(
         source,
         dictionary,
@@ -285,6 +355,7 @@ def main(argv=None):
 
     latencies = np.zeros(len(stream))
     apply_lat: list[float] = []
+    dist_lat: list[float] = []
     apply_tot: list = []  # per-batch stats (the journal is truncated
     n_answers = 0         # by checkpoints, so sums come from here)
     next_batch = 0
@@ -302,6 +373,11 @@ def main(argv=None):
                 compactions.append(cs)
             qe.bump_epoch(inc)
             apply_lat.append(time.perf_counter() - t0)
+            if dist is not None:
+                # the same batch ships through the all_to_all exchange
+                t0 = time.perf_counter()
+                dist.apply(additions=additions, deletions=deletions)
+                dist_lat.append(time.perf_counter() - t0)
             if (
                 ckpt is not None
                 and args.checkpoint_every > 0
@@ -376,6 +452,23 @@ def main(argv=None):
                 f"on disk, WAL {ckpt.wal.nbytes()}B), "
                 f"journal {inc.journal_bytes()}B resident"
             )
+        if dist is not None and dist_lat:
+            dl_ms = np.asarray(dist_lat) * 1e3
+            ds = dist.stats
+            print(
+                f"[distributed] {len(dist_lat)} update batches through the "
+                f"exchange, apply p50={np.percentile(dl_ms, 50):.2f}ms "
+                f"p99={np.percentile(dl_ms, 99):.2f}ms "
+                f"(last batch: {ds.n_overdeleted} overdeleted, "
+                f"{ds.n_rederived} rederived, {ds.n_inserted} inserted)"
+            )
+            if dist_complete:
+                try:
+                    dist.check_integrity(inc)
+                    print("[dist-verify] OK (sharded state == host store)")
+                except AssertionError as e:
+                    print(f"[dist-verify] MISMATCH: {e}")
+                    return 1
         if args.live_verify:
             from ..core import flat_seminaive
 

@@ -227,3 +227,35 @@ def test_stratify_partitions_rules_topologically():
 
     assert stratum_of("P") < stratum_of("Q") < stratum_of("T")
     assert "recursive" in explain_strata(program)
+
+
+def test_partition_key_annotates_single_key_joins():
+    """The compiler picks the distributed exchange key: each single-key
+    equi-join step carries the join variable; multi-key and cartesian
+    steps carry None."""
+
+    class Stats:
+        def n_rows(self, pred):
+            return 100
+
+        def arity(self, pred):
+            return 2
+
+        def selectivity(self, pred, pos, value):
+            return 0.1
+
+    program = parse_program(
+        """
+        path(x, y), edge(y, z) -> path(x, z)
+        P(x, y), Q(x, y) -> R(x, y)
+        """
+    )
+    tc, multi = program.rules
+    plan = compile_body(tc.body, Stats(), pivot=0)
+    assert plan.first.atom.predicate == "path"  # pivot anchors
+    assert plan.joins[0].key_vars == ("y",)
+    assert plan.joins[0].partition_key == "y"
+
+    plan2 = compile_body(multi.body, Stats(), pivot=0)
+    assert plan2.joins[0].key_vars == ("x", "y")
+    assert plan2.joins[0].partition_key is None
