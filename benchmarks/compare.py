@@ -13,19 +13,27 @@ For every bench present in both files the gate compares
   took at least ``--min-seconds`` fails the run.  The floor keeps
   sub-second benches (pure jitter on shared CI runners) out of the gate
   while still reporting their drift.
+* **counter metrics** — each bench's ``"metrics"`` registry snapshot
+  (written by ``run.py``) is gated for the counters in
+  :data:`METRIC_GATES` — ``rows_joined``, ``exchanges_skipped``,
+  ``rule_applications_skipped`` — with per-metric relative tolerances
+  (override with ``--metric-tolerance name=tol``).  These counters are
+  deterministic for a fixed seed, so movement in *either* direction
+  beyond tolerance fails the gate: silently joining 2x more rows is a
+  planner regression even when wall time hides it in CI jitter.
 * **key metric rows** — rows are matched on their non-numeric cells
   (kb, mode, batch, ...) and every shared numeric metric is diffed.
-  Metric drift is informational: it lands in the report and the JSON
-  artifact so a reviewer sees *what* regressed, but only wall time
-  gates (metrics like ``rows_joined`` gate through their own tests).
+  Row-metric drift is informational: it lands in the report and the
+  JSON artifact so a reviewer sees *what* regressed.
 
 Benches new in the results are reported as unbaselined (refresh with
 ``--update-baseline``); benches missing from the results fail the gate —
 a silently dropped bench is how perf coverage rots.
 
 ``--update-baseline`` rewrites the baseline from the current results
-(dropping per-run noise: only ``seconds``, ``status`` and ``rows`` are
-kept); it refuses to refresh from a run with failed benches.  Run it
+(dropping per-run noise: only ``seconds``, ``status``, ``rows`` and
+``metrics`` are kept); it refuses to refresh from a run with failed
+benches.  Run it
 and commit the file whenever a PR legitimately changes the performance
 envelope.
 
@@ -44,6 +52,18 @@ import json
 import sys
 
 _NUM = (int, float)
+
+#: gated registry counters (matched on the metric's last dotted
+#: segment, so ``cmat.rule_applications_skipped`` and
+#: ``dist.rule_applications_skipped`` both gate) -> relative tolerance.
+#: These are deterministic work counters, not wall times: any change
+#: beyond tolerance — more OR less — is an unexplained planner/engine
+#: behaviour change and fails the gate.
+METRIC_GATES: dict[str, float] = {
+    "rows_joined": 0.10,
+    "exchanges_skipped": 0.10,
+    "rule_applications_skipped": 0.10,
+}
 
 
 def _rows(bench: dict) -> list[dict]:
@@ -70,9 +90,26 @@ def _row_key(row: dict) -> tuple:
     return tuple(key)
 
 
+def _gated_metrics(new: dict, old: dict, gates: dict[str, float]):
+    """Yield ``(name, tol, old_val, new_val)`` for every registry metric
+    whose last dotted segment is gated, across both snapshots (a counter
+    missing on either side reads as 0 — a metric that disappears is as
+    suspicious as one that doubles)."""
+    new_m = new.get("metrics") or {}
+    old_m = old.get("metrics") or {}
+    for name in sorted(set(new_m) | set(old_m)):
+        tol = gates.get(name.rsplit(".", 1)[-1])
+        if tol is None:
+            continue
+        yield name, tol, float(old_m.get(name, 0)), float(new_m.get(name, 0))
+
+
 def diff_results(results: dict, baseline: dict, *, tolerance: float,
-                 min_seconds: float) -> dict:
+                 min_seconds: float,
+                 metric_gates: dict[str, float] | None = None) -> dict:
     """Structured diff + gate verdict (pure; the CLI prints it)."""
+    if metric_gates is None:
+        metric_gates = METRIC_GATES
     failures: list[str] = []
     notes: list[str] = []
     benches: dict[str, dict] = {}
@@ -119,6 +156,34 @@ def diff_results(results: dict, baseline: dict, *, tolerance: float,
                 f"{name}: wall time {t_old:.2f}s -> {t_new:.2f}s "
                 f"(+{rel:.0%} > +{tolerance:.0%} tolerance)"
             )
+
+        # gated work counters: deterministic, so drift in EITHER
+        # direction beyond the per-metric tolerance fails the gate
+        gate_entries: list[dict] = []
+        for mname, tol, ov, nv in _gated_metrics(new, old, metric_gates):
+            if ov > 0:
+                mrel = (nv - ov) / ov
+                bad = abs(mrel) > tol
+            else:
+                mrel = float("inf") if nv > 0 else 0.0
+                bad = nv > 0
+            gate_entries.append(
+                {
+                    "metric": mname,
+                    "baseline": ov,
+                    "current": nv,
+                    "tolerance": tol,
+                    "status": "regressed" if bad else "ok",
+                }
+            )
+            if bad:
+                entry["status"] = "regressed"
+                failures.append(
+                    f"{name}: counter {mname} {ov:g} -> {nv:g} "
+                    f"({mrel:+.0%} beyond ±{tol:.0%} tolerance)"
+                )
+        if gate_entries:
+            entry["metric_gates"] = gate_entries
 
         # informational metric drift over matched rows.  Rows match on
         # their non-numeric/coordinate cells plus an occurrence index,
@@ -178,6 +243,11 @@ def main(argv=None) -> int:
     ap.add_argument("--min-seconds", type=float, default=1.0,
                     help="baseline wall-time floor below which a bench "
                          "is reported but never gates (CI jitter)")
+    ap.add_argument("--metric-tolerance", action="append", default=[],
+                    metavar="NAME=TOL",
+                    help="override a gated counter's relative tolerance "
+                         "(e.g. rows_joined=0.2); repeatable.  NAME is "
+                         "the metric's last dotted segment")
     ap.add_argument("--json-out", default=None, metavar="PATH",
                     help="write the structured diff (CI uploads it)")
     ap.add_argument("--update-baseline", action="store_true",
@@ -207,7 +277,7 @@ def main(argv=None) -> int:
             "benches": {
                 name: {
                     k: v for k, v in bench.items()
-                    if k in ("status", "seconds", "rows")
+                    if k in ("status", "seconds", "rows", "metrics")
                 }
                 for name, bench in results.get("benches", {}).items()
             },
@@ -227,9 +297,18 @@ def main(argv=None) -> int:
               f"--update-baseline to create one")
         return 1
 
+    metric_gates = dict(METRIC_GATES)
+    for spec in args.metric_tolerance:
+        name, _, tol = spec.partition("=")
+        try:
+            metric_gates[name] = float(tol)
+        except ValueError:
+            ap.error(f"--metric-tolerance expects NAME=TOL, got {spec!r}")
+
     diff = diff_results(
         results, baseline,
         tolerance=args.tolerance, min_seconds=args.min_seconds,
+        metric_gates=metric_gates,
     )
     if args.json_out:
         with open(args.json_out, "w") as fh:

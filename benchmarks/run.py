@@ -11,6 +11,14 @@ file — per-bench status, wall time, and whatever structured rows the
 bench returns — which CI uploads as a build artifact, and validates it
 against the flat-rows-of-scalars schema (:func:`check_schema`) so
 artifacts stay diffable across PRs.
+
+The metrics registry (:mod:`repro.obs`) is **reset before every
+bench**, so each suite sees only its own counters — the kernel meter
+used to be module-global and cross-contaminated suites.  After each
+bench the non-zero counters are snapshotted into the bench's
+``"metrics"`` key (flat scalars, same contract as rows); the
+regression gate (:mod:`benchmarks.compare`) checks selected counters
+against the committed baseline with per-metric tolerances.
 """
 
 from __future__ import annotations
@@ -46,9 +54,23 @@ def check_schema(payload: dict) -> list[str]:
             errs.append(f"{name}: status {bench.get('status')!r}")
         if not isinstance(bench.get("seconds"), (int, float)):
             errs.append(f"{name}: 'seconds' missing or non-numeric")
-        extra = set(bench) - {"status", "seconds", "rows", "error"}
+        extra = set(bench) - {"status", "seconds", "rows", "error", "metrics"}
         if extra:
             errs.append(f"{name}: unexpected keys {sorted(extra)}")
+        metrics = bench.get("metrics")
+        if metrics is not None:
+            if not isinstance(metrics, dict):
+                errs.append(f"{name}: metrics must be a flat dict")
+            else:
+                bad = {
+                    k: type(v).__name__
+                    for k, v in metrics.items()
+                    if not isinstance(k, str)
+                    or isinstance(v, bool)
+                    or not isinstance(v, (int, float))
+                }
+                if bad:
+                    errs.append(f"{name}: non-numeric metrics {bad}")
         if bench.get("status") == "failed" and not isinstance(
             bench.get("error"), str
         ):
@@ -106,12 +128,19 @@ def main() -> None:
         "storage": bench_storage.run,                # cold vs restore, compaction
         "distributed": bench_distributed.run,        # naive vs semi-naive shards
     }
+    from repro.obs import get_registry
+
+    registry = get_registry()
     failures = 0
     results: dict[str, dict] = {}
     for name, fn in benches.items():
         if args.only and name != args.only:
             continue
         print(f"\n=== bench:{name} ===", flush=True)
+        # per-suite isolation: every bench starts from zeroed counters,
+        # so its snapshot carries only its own work (the kernel meter
+        # used to leak across suites)
+        registry.reset()
         t0 = time.time()
         kwargs = {}
         if args.smoke and "smoke" in inspect.signature(fn).parameters:
@@ -123,6 +152,11 @@ def main() -> None:
             results[name] = {"status": "ok", "seconds": round(dt, 2)}
             if isinstance(rows, (list, dict)):
                 results[name]["rows"] = rows
+            metrics = {
+                k: v for k, v in registry.snapshot().items() if v
+            }
+            if metrics:
+                results[name]["metrics"] = metrics
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"=== bench:{name} FAILED: {type(e).__name__}: {e} ===")

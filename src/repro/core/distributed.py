@@ -53,6 +53,7 @@ from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from ..compat import shard_map
+from ..obs import instant, publish_distributed, span
 from .compile import SRC_DELTA, SRC_OLD, PlanCache, compile_body, stats_bucket
 from .datalog import Program
 from .engine import MaterialisationStats
@@ -918,6 +919,7 @@ class DistributedEngine:
             self._factor *= 2
             regrew = True
             self.stats.exchange_regrows += 1
+            instant("dist.exchange_regrow", factor=self._factor)
         raise RuntimeError(
             "exchange overflow persists after "
             f"{self.max_regrows} regrows — increase capacity/join_capacity"
@@ -1039,35 +1041,43 @@ class DistributedEngine:
         entry = naive_entry
         rounds = 0
         r0 = len(self.stats.per_round)
-        while rounds < max_rounds:
-            if not entry and self.seminaive:
-                if not any(
-                    self._delta_count(p) > 0
-                    for p in body_preds
-                    if p in self._state
-                ):
+        with span("dist.stratum", stratum=si, rules=len(stratum)):
+            while rounds < max_rounds:
+                if not entry and self.seminaive:
+                    if not any(
+                        self._delta_count(p) > 0
+                        for p in body_preds
+                        if p in self._state
+                    ):
+                        break
+                pairs, skipped = self._schedule(stratum, entry, stable=stable)
+                self.stats.rule_applications_skipped += skipped
+                if not pairs:
                     break
-            pairs, skipped = self._schedule(stratum, entry, stable=stable)
-            self.stats.rule_applications_skipped += skipped
-            if not pairs:
-                break
-            total_new, joined = self._mat_round(pairs)
-            rounds += 1
-            self.stats.n_rule_applications += len(pairs)
-            self.stats.per_round.append(
-                {
-                    "round": len(self.stats.per_round) + 1,
-                    "stratum": si,
-                    "new_facts": total_new,
-                    "rows_joined": joined,
-                    "rule_applications": len(pairs),
-                    "rule_applications_skipped": skipped,
-                }
-            )
-            if self.seminaive:
-                entry = False
-            if total_new == 0:
-                break
+                with span(
+                    "dist.round",
+                    round=len(self.stats.per_round) + 1,
+                    stratum=si,
+                    rule_applications=len(pairs),
+                ) as sp:
+                    total_new, joined = self._mat_round(pairs)
+                    sp.set(new_facts=total_new, rows_joined=joined)
+                rounds += 1
+                self.stats.n_rule_applications += len(pairs)
+                self.stats.per_round.append(
+                    {
+                        "round": len(self.stats.per_round) + 1,
+                        "stratum": si,
+                        "new_facts": total_new,
+                        "rows_joined": joined,
+                        "rule_applications": len(pairs),
+                        "rule_applications_skipped": skipped,
+                    }
+                )
+                if self.seminaive:
+                    entry = False
+                if total_new == 0:
+                    break
         self.stats.per_stratum.append(
             {
                 "stratum": si,
@@ -1148,20 +1158,24 @@ class DistributedEngine:
         )
         self.stats.n_strata = len(strata)
         rounds = 0
-        for si, stratum in enumerate(strata):
-            used, converged = self._stratum_fixpoint(
-                si, stratum, max_rounds - rounds, naive_entry=True
-            )
-            rounds += used
-            if not converged:
-                raise RuntimeError(
-                    f"materialisation did not reach a fixpoint within "
-                    f"max_rounds={max_rounds} (stratum {si} still has "
-                    f"pending deltas) — increase max_rounds"
+        with span(
+            "dist.materialise", n_strata=len(strata), n_shards=self.n_shards
+        ):
+            for si, stratum in enumerate(strata):
+                used, converged = self._stratum_fixpoint(
+                    si, stratum, max_rounds - rounds, naive_entry=True
                 )
+                rounds += used
+                if not converged:
+                    raise RuntimeError(
+                        f"materialisation did not reach a fixpoint within "
+                        f"max_rounds={max_rounds} (stratum {si} still has "
+                        f"pending deltas) — increase max_rounds"
+                    )
         self.rounds = rounds
         self.stats.rounds = rounds
         self.stats.plan_cache = self._plan_cache.counters()
+        publish_distributed(self.stats)
         result = {}
         for p in self._preds:
             rows, cnt, _lo = self._state[p]
@@ -1309,19 +1323,29 @@ class DistributedEngine:
         # E := E \ D, swept before the additions clamp (same phase order
         # as IncrementalStore.apply)
         self._dirty = True
-        _, eff_dels = effective_updates(self.explicit, {}, dels)
-        st.n_del_explicit += sum(int(r.shape[0]) for r in eff_dels.values())
-        if eff_dels:
-            self._deletion_sweep(eff_dels, st)
-        eff_adds, _ = effective_updates(self.explicit, adds, {})
-        st.n_add_explicit += sum(int(r.shape[0]) for r in eff_adds.values())
-        if eff_adds:
-            self._insertion_sweep(eff_adds, st)
+        with span(
+            "dist.apply",
+            n_additions=sum(int(r.shape[0]) for r in adds.values()),
+            n_deletions=sum(int(r.shape[0]) for r in dels.values()),
+        ):
+            _, eff_dels = effective_updates(self.explicit, {}, dels)
+            st.n_del_explicit += sum(
+                int(r.shape[0]) for r in eff_dels.values()
+            )
+            if eff_dels:
+                self._deletion_sweep(eff_dels, st)
+            eff_adds, _ = effective_updates(self.explicit, adds, {})
+            st.n_add_explicit += sum(
+                int(r.shape[0]) for r in eff_adds.values()
+            )
+            if eff_adds:
+                self._insertion_sweep(eff_adds, st)
         self._dirty = False
         self.epoch += 1
         st.epoch = self.epoch
         st.plan_cache = self._plan_cache.counters()
         st.time_total = time.perf_counter() - t0
+        publish_distributed(st)
         return st
 
     def _deletion_sweep(self, dels: dict[str, np.ndarray], st) -> None:
@@ -1333,68 +1357,74 @@ class DistributedEngine:
 
         rules = [r for r in self.program if r.body]
         # --- overdelete: propagate the deleted delta ------------------- #
-        over_acc = self._new_acc(dels)
-        while True:
-            pairs = self._schedule_acc(rules, one_step=False)
-            if not pairs:
-                break
-            st.n_rule_applications += len(pairs)
-            total_new = self._acc_round(
-                over_acc, pairs, union_acc=False,
-                restrict={p: self._state[p][:2] for p in self._preds},
-            )
-            if total_new == 0:
-                break
-        over = self._pull_acc(over_acc)
-        st.n_overdeleted += sum(int(r.shape[0]) for r in over.values())
-
-        # --- delete: drop overdeleted rows from every shard ------------ #
-        routed = self._route_pairs(over)
-        flat = self._flat_state()
-        for p in self._preds:
-            flat.extend(routed[p])
-        rec = self._variant(("delete", self._preds), self._build_delete)
-        out = rec.fn(*flat)
-        for i, p in enumerate(self._preds):
-            self._state[p] = list(out[3 * i : 3 * i + 3])
-            self._counts[p] = int(np.asarray(out[3 * i + 1]).sum())
-
-        # --- rederive: explicit restores, one-step check, forward ------ #
-        restored0 = explicit_restores(over, self.explicit)
-        missing = {
-            p: setdiff_rows(rows, restored0[p]) if p in restored0 else rows
-            for p, rows in over.items()
-        }
-        missing = {p: r for p, r in missing.items() if r.shape[0]}
-        red_acc = self._new_acc(restored0)
-        if missing and rules:
-            restrict = self._route_pairs(missing)
-            pairs = self._schedule_acc(rules, one_step=True)
-            if pairs:
-                st.n_rule_applications += len(pairs)
-                self._acc_round(
-                    red_acc, pairs, union_acc=True, restrict=restrict
-                )
+        with span("dist.overdelete") as sp:
+            over_acc = self._new_acc(dels)
             while True:
                 pairs = self._schedule_acc(rules, one_step=False)
                 if not pairs:
                     break
                 st.n_rule_applications += len(pairs)
                 total_new = self._acc_round(
-                    red_acc, pairs, union_acc=True, restrict=restrict
+                    over_acc, pairs, union_acc=False,
+                    restrict={p: self._state[p][:2] for p in self._preds},
                 )
                 if total_new == 0:
                     break
-        restored = self._pull_acc(red_acc)
-        n_restored = sum(int(r.shape[0]) for r in restored.values())
-        st.n_rederived += n_restored
+            over = self._pull_acc(over_acc)
+            n_over = sum(int(r.shape[0]) for r in over.values())
+            st.n_overdeleted += n_over
+            sp.set(n_overdeleted=n_over)
 
-        # --- fold restorations back into the base partitions ----------- #
-        if n_restored:
-            self._merge_host_rows(restored, st, count_inserted=False)
-        st.n_deleted += (
-            sum(int(r.shape[0]) for r in over.values()) - n_restored
-        )
+        # --- delete: drop overdeleted rows from every shard ------------ #
+        with span("dist.delete"):
+            routed = self._route_pairs(over)
+            flat = self._flat_state()
+            for p in self._preds:
+                flat.extend(routed[p])
+            rec = self._variant(("delete", self._preds), self._build_delete)
+            out = rec.fn(*flat)
+            for i, p in enumerate(self._preds):
+                self._state[p] = list(out[3 * i : 3 * i + 3])
+                self._counts[p] = int(np.asarray(out[3 * i + 1]).sum())
+
+        # --- rederive: explicit restores, one-step check, forward ------ #
+        with span("dist.rederive") as sp:
+            restored0 = explicit_restores(over, self.explicit)
+            missing = {
+                p: setdiff_rows(rows, restored0[p]) if p in restored0 else rows
+                for p, rows in over.items()
+            }
+            missing = {p: r for p, r in missing.items() if r.shape[0]}
+            red_acc = self._new_acc(restored0)
+            if missing and rules:
+                restrict = self._route_pairs(missing)
+                pairs = self._schedule_acc(rules, one_step=True)
+                if pairs:
+                    st.n_rule_applications += len(pairs)
+                    self._acc_round(
+                        red_acc, pairs, union_acc=True, restrict=restrict
+                    )
+                while True:
+                    pairs = self._schedule_acc(rules, one_step=False)
+                    if not pairs:
+                        break
+                    st.n_rule_applications += len(pairs)
+                    total_new = self._acc_round(
+                        red_acc, pairs, union_acc=True, restrict=restrict
+                    )
+                    if total_new == 0:
+                        break
+            restored = self._pull_acc(red_acc)
+            n_restored = sum(int(r.shape[0]) for r in restored.values())
+            st.n_rederived += n_restored
+            sp.set(n_rederived=n_restored)
+
+            # --- fold restorations back into the base partitions ------- #
+            if n_restored:
+                self._merge_host_rows(restored, st, count_inserted=False)
+            st.n_deleted += (
+                sum(int(r.shape[0]) for r in over.values()) - n_restored
+            )
 
     def _merge_host_rows(self, rows_by_pred, st, *, count_inserted) -> int:
         """Route host rows to their owner shards and dedup-append them as
@@ -1423,26 +1453,30 @@ class DistributedEngine:
         incoming delta; every stratum re-marks the sweep's net additions
         as its delta (the ``sweep_lo`` watermark), so derived facts of
         earlier strata propagate without host-side seed bookkeeping."""
-        sweep_lo = {p: self._state[p][1] for p in self._preds}
-        self._merge_host_rows(adds, st, count_inserted=True)
-        strata = (
-            stratify(self.program) if self.seminaive else [list(self.program)]
-        )
-        r0 = len(self.stats.per_round)
-        for si, stratum in enumerate(strata):
-            _, converged = self._stratum_fixpoint(
-                si, stratum, 512, naive_entry=False, sweep_lo=sweep_lo,
-                stable=True,
+        with span("dist.insert") as sp:
+            sweep_lo = {p: self._state[p][1] for p in self._preds}
+            self._merge_host_rows(adds, st, count_inserted=True)
+            strata = (
+                stratify(self.program)
+                if self.seminaive
+                else [list(self.program)]
             )
-            if not converged:
-                raise RuntimeError(
-                    f"insertion sweep did not reach a fixpoint in "
-                    f"stratum {si} within 512 rounds"
+            r0 = len(self.stats.per_round)
+            for si, stratum in enumerate(strata):
+                _, converged = self._stratum_fixpoint(
+                    si, stratum, 512, naive_entry=False, sweep_lo=sweep_lo,
+                    stable=True,
                 )
-        st.n_inserted += sum(
-            r["new_facts"] for r in self.stats.per_round[r0:]
-        )
-        st.rounds += len(self.stats.per_round) - r0
+                if not converged:
+                    raise RuntimeError(
+                        f"insertion sweep did not reach a fixpoint in "
+                        f"stratum {si} within 512 rounds"
+                    )
+            st.n_inserted += sum(
+                r["new_facts"] for r in self.stats.per_round[r0:]
+            )
+            st.rounds += len(self.stats.per_round) - r0
+            sp.set(n_inserted=st.n_inserted)
 
     # -------------------------------------------------------------- #
     # read side / differential checking

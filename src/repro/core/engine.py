@@ -25,6 +25,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from ..obs import publish_materialisation, span
 from .columns import ColumnStore
 from .compile import FactStoreStats, Plan, PlanCache, compile_body, stats_bucket
 from .compress import compress_rows
@@ -203,39 +204,53 @@ class CMatEngine:
         )
         self.stats.n_strata = len(strata)
         round_no = 0
-        for si, stratum in enumerate(strata):
-            naive = True
-            s_rounds = 0
-            s_round0 = len(self.stats.per_round)
-            while round_no < self.max_rounds:
-                self.facts.current_round = round_no
-                if not naive and not self.facts.has_delta():
-                    break
-                round_no += 1
-                s_rounds += 1
-                round_stats = self._round(round_no, stratum, naive=naive)
-                round_stats["stratum"] = si
-                self.stats.per_round.append(round_stats)
-                naive = False
-                if round_stats["new_meta_facts"] == 0:
-                    break
-            self.stats.per_stratum.append(
-                {
-                    "stratum": si,
-                    "rounds": s_rounds,
-                    "rules": len(stratum),
-                    "heads": sorted({r.head.predicate for r in stratum}),
-                    "rule_applications": sum(
-                        r["rule_applications"]
-                        for r in self.stats.per_round[s_round0:]
-                    ),
-                }
-            )
+        with span("cmat.materialise", n_strata=len(strata)):
+            for si, stratum in enumerate(strata):
+                naive = True
+                s_rounds = 0
+                s_round0 = len(self.stats.per_round)
+                with span("cmat.stratum", stratum=si, rules=len(stratum)):
+                    while round_no < self.max_rounds:
+                        self.facts.current_round = round_no
+                        if not naive and not self.facts.has_delta():
+                            break
+                        round_no += 1
+                        s_rounds += 1
+                        with span(
+                            "cmat.round", round=round_no, stratum=si
+                        ) as sp:
+                            round_stats = self._round(
+                                round_no, stratum, naive=naive
+                            )
+                            sp.set(
+                                new_facts=round_stats["new_facts"],
+                                rule_applications=round_stats[
+                                    "rule_applications"
+                                ],
+                            )
+                        round_stats["stratum"] = si
+                        self.stats.per_round.append(round_stats)
+                        naive = False
+                        if round_stats["new_meta_facts"] == 0:
+                            break
+                self.stats.per_stratum.append(
+                    {
+                        "stratum": si,
+                        "rounds": s_rounds,
+                        "rules": len(stratum),
+                        "heads": sorted({r.head.predicate for r in stratum}),
+                        "rule_applications": sum(
+                            r["rule_applications"]
+                            for r in self.stats.per_round[s_round0:]
+                        ),
+                    }
+                )
         self.stats.rounds = round_no
         self.stats.n_meta_facts = self.facts.n_meta_facts()
         self.stats.n_facts = self.facts.n_facts()
         self.stats.plan_cache = self.plan_cache.counters()
         self.stats.time_total = time.perf_counter() - t_start
+        publish_materialisation(self.stats)
         return self.stats
 
     # ------------------------------------------------------------------ #
@@ -289,22 +304,27 @@ class CMatEngine:
                     # a body predicate is still empty: nothing to probe
                     n_skipped += 1
                     continue
-                result = self._eval_plan(
-                    plan, cached_match, (rule, None if naive else i)
-                )
+                with span(
+                    "cmat.rule", head=rule.head.predicate, pivot=i
+                ):
+                    result = self._eval_plan(
+                        plan, cached_match, (rule, None if naive else i)
+                    )
                 if result is None or result.is_empty():
                     continue
                 n_apps += 1
                 self._emit_head(rule, result, candidates)
 
         t0 = time.perf_counter()
-        delta = elim_dup(candidates, facts, store, round_no,
-                         self.inplace_splits, index=self._dedup_index)
+        with span("cmat.dedup", round=round_no):
+            delta = elim_dup(candidates, facts, store, round_no,
+                             self.inplace_splits, index=self._dedup_index)
         self.stats.time_dedup += time.perf_counter() - t0
 
         # Alg. 1 line 23: re-compress length-one meta-facts
         t0 = time.perf_counter()
-        delta = self._recompress_singletons(delta, round_no)
+        with span("cmat.recompress", round=round_no):
+            delta = self._recompress_singletons(delta, round_no)
         self.stats.time_compress += time.perf_counter() - t0
 
         for mf in delta:

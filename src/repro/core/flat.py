@@ -19,6 +19,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from ..obs import get_registry, span
 from .compile import ArrayStats, PlanCache, compile_body, stats_bucket
 from .datalog import Program, Rule
 from .util import factorize_rows, multicol_member
@@ -115,35 +116,43 @@ class FlatEngine:
         t0 = time.perf_counter()
         delta = {p: r for p, r in self.facts.items()}
         rounds = 0
-        while delta and rounds < self.max_rounds:
-            rounds += 1
-            stats_view = ArrayStats(self.facts)
-            derived: dict[str, list[np.ndarray]] = {}
-            for rule in self.program:
-                for i in range(len(rule.body)):
-                    rows = self._eval(rule, i, delta, stats_view)
-                    if rows is not None and rows.shape[0]:
-                        derived.setdefault(rule.head.predicate, []).append(rows)
-            new_delta: dict[str, np.ndarray] = {}
-            for pred, blocks in derived.items():
-                cand = np.unique(np.concatenate(blocks), axis=0)
-                old = self.facts.get(pred)
-                if old is not None and old.shape[0]:
-                    fresh = cand[~multicol_member(cand, old)]
-                else:
-                    fresh = cand
-                if fresh.shape[0]:
-                    new_delta[pred] = fresh
-                    self.facts[pred] = (
-                        np.concatenate([old, fresh]) if old is not None and old.size
-                        else fresh
-                    )
-            # facts stay sorted-unique per predicate
-            for pred in new_delta:
-                self.facts[pred] = np.unique(self.facts[pred], axis=0)
-            delta = new_delta
+        with span("flat.materialise"):
+            while delta and rounds < self.max_rounds:
+                rounds += 1
+                with span("flat.round", round=rounds):
+                    stats_view = ArrayStats(self.facts)
+                    derived: dict[str, list[np.ndarray]] = {}
+                    for rule in self.program:
+                        for i in range(len(rule.body)):
+                            rows = self._eval(rule, i, delta, stats_view)
+                            if rows is not None and rows.shape[0]:
+                                derived.setdefault(
+                                    rule.head.predicate, []
+                                ).append(rows)
+                    new_delta: dict[str, np.ndarray] = {}
+                    for pred, blocks in derived.items():
+                        cand = np.unique(np.concatenate(blocks), axis=0)
+                        old = self.facts.get(pred)
+                        if old is not None and old.shape[0]:
+                            fresh = cand[~multicol_member(cand, old)]
+                        else:
+                            fresh = cand
+                        if fresh.shape[0]:
+                            new_delta[pred] = fresh
+                            self.facts[pred] = (
+                                np.concatenate([old, fresh])
+                                if old is not None and old.size
+                                else fresh
+                            )
+                    # facts stay sorted-unique per predicate
+                    for pred in new_delta:
+                        self.facts[pred] = np.unique(self.facts[pred], axis=0)
+                    delta = new_delta
         self.rounds = rounds
         self.time_total = time.perf_counter() - t0
+        reg = get_registry()
+        reg.counter("flat.rounds").inc(rounds)
+        reg.counter("flat.time_total").inc(self.time_total)
         return self.facts
 
     def _source_rows(self, pred: str, source: str, delta: dict) -> np.ndarray | None:

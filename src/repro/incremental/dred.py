@@ -35,6 +35,7 @@ import numpy as np
 
 from ..core.compile import SRC_DELTA
 from ..core.util import multicol_member
+from ..obs import span
 from .eval import (
     evaluate_rule,
     head_binding_filter,
@@ -72,92 +73,101 @@ def dred_stratum(inc, stratum, seeds, head_dels, st) -> dict[str, np.ndarray]:
     deltas later strata see).  ``inc`` is the :class:`IncrementalStore`.
     """
     store, facts = inc.store, inc.facts
-    over = _overdelete(inc, stratum, seeds, head_dels, st)
+    with span("dred.overdelete") as sp:
+        over = _overdelete(inc, stratum, seeds, head_dels, st)
+        sp.set(n_overdeleted=sum(int(r.shape[0]) for r in over.values()))
     if not over:
         return {}
 
     t0 = time.perf_counter()
-    missing: dict[str, np.ndarray] = {}
-    for pred, rows in over.items():
-        inc.delete_rows(pred, rows)
-        missing[pred] = rows
+    with span("dred.delete"):
+        missing: dict[str, np.ndarray] = {}
+        for pred, rows in over.items():
+            inc.delete_rows(pred, rows)
+            missing[pred] = rows
     st.time_delete += time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    # --- rederive: explicit survivors come back without a probe ------- #
-    delta_mfs: dict[str, list] = {}
-    for pred, back in explicit_restores(missing, inc.explicit).items():
-        delta_mfs[pred] = inc.add_rows(pred, back)
-        missing[pred] = setdiff_rows(missing[pred], back)
-        st.n_rederived += int(back.shape[0])
-
-    def current(pred: str, src: str = "") -> list:
-        return facts.all(pred)
-
-    # --- backward pass: bounded one-step rederivability check --------- #
-    for rule in stratum:
-        if not rule.body:
-            continue
-        pred = rule.head.predicate
-        miss = missing.get(pred)
-        if miss is None or miss.shape[0] == 0:
-            continue
-        mark = store.mark()
-        hf = head_binding_filter(rule.head, miss, store)
-        L = evaluate_rule(
-            rule, None, current, store, inc.stats_view, inc.plan_cache,
-            head_filter=hf,
-        )
-        st.n_rule_applications += 1
-        if L is None:
-            store.release(mark)
-            continue
-        rows, _ = project_head(rule.head, L, store)
-        store.release(mark)
-        back = rows[multicol_member(rows, miss)]
-        if back.shape[0]:
-            delta_mfs.setdefault(pred, []).extend(inc.add_rows(pred, back))
-            missing[pred] = setdiff_rows(miss, back)
+    with span("dred.rederive") as rede:
+        # --- rederive: explicit survivors come back without a probe --- #
+        delta_mfs: dict[str, list] = {}
+        for pred, back in explicit_restores(missing, inc.explicit).items():
+            delta_mfs[pred] = inc.add_rows(pred, back)
+            missing[pred] = setdiff_rows(missing[pred], back)
             st.n_rederived += int(back.shape[0])
 
-    # --- forward pass: restorations propagate semi-naively ------------ #
-    while delta_mfs:
-        def sources(pred: str, src: str) -> list:
-            if src == SRC_DELTA:
-                return delta_mfs.get(pred, [])
+        def current(pred: str, src: str = "") -> list:
             return facts.all(pred)
 
-        mark = store.mark()
-        derived: dict[str, list[np.ndarray]] = {}
+        # --- backward pass: bounded one-step rederivability check ----- #
         for rule in stratum:
+            if not rule.body:
+                continue
             pred = rule.head.predicate
             miss = missing.get(pred)
             if miss is None or miss.shape[0] == 0:
                 continue
+            mark = store.mark()
             hf = head_binding_filter(rule.head, miss, store)
-            for i, atom in enumerate(rule.body):
-                if atom.predicate not in delta_mfs:
-                    continue
-                L = evaluate_rule(
-                    rule, i, sources, store, inc.stats_view, inc.plan_cache,
-                    head_filter=hf,
-                )
-                st.n_rule_applications += 1
-                if L is None:
-                    continue
-                rows, _ = project_head(rule.head, L, store)
-                derived.setdefault(pred, []).append(rows)
-        store.release(mark)
-
-        new_delta: dict[str, list] = {}
-        for pred, blocks in derived.items():
-            cand = np.unique(np.concatenate(blocks), axis=0)
-            back = cand[multicol_member(cand, missing[pred])]
+            L = evaluate_rule(
+                rule, None, current, store, inc.stats_view, inc.plan_cache,
+                head_filter=hf,
+            )
+            st.n_rule_applications += 1
+            if L is None:
+                store.release(mark)
+                continue
+            rows, _ = project_head(rule.head, L, store)
+            store.release(mark)
+            back = rows[multicol_member(rows, miss)]
             if back.shape[0]:
-                new_delta[pred] = inc.add_rows(pred, back)
-                missing[pred] = setdiff_rows(missing[pred], back)
+                delta_mfs.setdefault(pred, []).extend(
+                    inc.add_rows(pred, back)
+                )
+                missing[pred] = setdiff_rows(miss, back)
                 st.n_rederived += int(back.shape[0])
-        delta_mfs = new_delta
+
+        # --- forward pass: restorations propagate semi-naively -------- #
+        while delta_mfs:
+            def sources(pred: str, src: str) -> list:
+                if src == SRC_DELTA:
+                    return delta_mfs.get(pred, [])
+                return facts.all(pred)
+
+            mark = store.mark()
+            derived: dict[str, list[np.ndarray]] = {}
+            for rule in stratum:
+                pred = rule.head.predicate
+                miss = missing.get(pred)
+                if miss is None or miss.shape[0] == 0:
+                    continue
+                hf = head_binding_filter(rule.head, miss, store)
+                for i, atom in enumerate(rule.body):
+                    if atom.predicate not in delta_mfs:
+                        continue
+                    L = evaluate_rule(
+                        rule, i, sources, store, inc.stats_view,
+                        inc.plan_cache, head_filter=hf,
+                    )
+                    st.n_rule_applications += 1
+                    if L is None:
+                        continue
+                    rows, _ = project_head(rule.head, L, store)
+                    derived.setdefault(pred, []).append(rows)
+            store.release(mark)
+
+            new_delta: dict[str, list] = {}
+            for pred, blocks in derived.items():
+                cand = np.unique(np.concatenate(blocks), axis=0)
+                back = cand[multicol_member(cand, missing[pred])]
+                if back.shape[0]:
+                    new_delta[pred] = inc.add_rows(pred, back)
+                    missing[pred] = setdiff_rows(missing[pred], back)
+                    st.n_rederived += int(back.shape[0])
+            delta_mfs = new_delta
+        rede.set(
+            n_missing=sum(int(m.shape[0]) for m in missing.values())
+        )
     st.time_rederive += time.perf_counter() - t0
 
     net = {p: m for p, m in missing.items() if m.shape[0]}

@@ -55,6 +55,7 @@ from ..core.frozen import FrozenFacts
 from ..core.metafacts import MetaFact
 from ..core.program_graph import is_recursive, stratify, stratum_predicates
 from ..core.util import multicol_member
+from ..obs import publish_incremental, span
 from .dred import dred_stratum
 from .eval import (
     PhaseStats,
@@ -358,22 +359,35 @@ class IncrementalStore:
             # a crash mid-apply recovers to the post-batch state
             self.wal.append(self.epoch + 1, adds, dels)
 
-        # effective explicit deletions (E := E \ D), swept before the
-        # additions clamp so a fact in both batches deletes then re-adds
-        _, eff_dels = effective_updates(self.explicit, {}, dels)
-        st.n_del_explicit += sum(int(r.shape[0]) for r in eff_dels.values())
-        if eff_dels:
-            self.stats_view.refresh()
-            self._deletion_sweep(eff_dels, st)
+        with span(
+            "inc.apply",
+            epoch=self.epoch + 1,
+            n_additions=sum(int(r.shape[0]) for r in adds.values()),
+            n_deletions=sum(int(r.shape[0]) for r in dels.values()),
+        ):
+            # effective explicit deletions (E := E \ D), swept before the
+            # additions clamp so a fact in both batches deletes then
+            # re-adds
+            _, eff_dels = effective_updates(self.explicit, {}, dels)
+            st.n_del_explicit += sum(
+                int(r.shape[0]) for r in eff_dels.values()
+            )
+            if eff_dels:
+                self.stats_view.refresh()
+                with span("inc.deletion_sweep"):
+                    self._deletion_sweep(eff_dels, st)
 
-        # effective explicit additions (E := E ∪ A)
-        for pred, rows in adds.items():
-            self.arities.setdefault(pred, int(rows.shape[1]))
-        eff_adds, _ = effective_updates(self.explicit, adds, {})
-        st.n_add_explicit += sum(int(r.shape[0]) for r in eff_adds.values())
-        if eff_adds:
-            self.stats_view.refresh()
-            self._insertion_sweep(eff_adds, st)
+            # effective explicit additions (E := E ∪ A)
+            for pred, rows in adds.items():
+                self.arities.setdefault(pred, int(rows.shape[1]))
+            eff_adds, _ = effective_updates(self.explicit, adds, {})
+            st.n_add_explicit += sum(
+                int(r.shape[0]) for r in eff_adds.values()
+            )
+            if eff_adds:
+                self.stats_view.refresh()
+                with span("inc.insertion_sweep"):
+                    self._insertion_sweep(eff_adds, st)
 
         self.epoch += 1
         st.epoch = self.epoch
@@ -397,6 +411,7 @@ class IncrementalStore:
             }
         )
         st.journal_bytes = self.journal_bytes()
+        publish_incremental(st)
         return st
 
     # ------------------------------------------------------------------ #
@@ -432,10 +447,14 @@ class IncrementalStore:
                 continue
             self.stats_view.refresh()
             if self.counting and not is_recursive(stratum):
-                net = self._counting_delete(stratum, seeds, head_dels, st)
+                with span("inc.counting_delete", rules=len(stratum)):
+                    net = self._counting_delete(
+                        stratum, seeds, head_dels, st
+                    )
                 st.counting_strata += 1
             else:
-                net = dred_stratum(self, stratum, seeds, head_dels, st)
+                with span("inc.dred_stratum", rules=len(stratum)):
+                    net = dred_stratum(self, stratum, seeds, head_dels, st)
                 st.dred_strata += 1
             for pred, rows in net.items():
                 removed[pred] = merge_rows(removed.get(pred), rows)
@@ -546,14 +565,16 @@ class IncrementalStore:
                 continue
             self.stats_view.refresh()
             if self.counting and not is_recursive(stratum):
-                self._counting_insert(
-                    stratum, seed_rows, head_adds, st, note_added
-                )
+                with span("inc.counting_insert", rules=len(stratum)):
+                    self._counting_insert(
+                        stratum, seed_rows, head_adds, st, note_added
+                    )
                 st.counting_strata += 1
             else:
-                self._seminaive_insert(
-                    stratum, seeds, head_adds, st, note_added
-                )
+                with span("inc.seminaive_insert", rules=len(stratum)):
+                    self._seminaive_insert(
+                        stratum, seeds, head_adds, st, note_added
+                    )
                 st.dred_strata += 1
         st.time_insert += time.perf_counter() - t_sweep
 

@@ -10,6 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..obs import get_registry
 from .join_bounds import join_bounds as _join_bounds
 from .rle_expand import rle_expand as _rle_expand
 from .sorted_member import sorted_member as _sorted_member
@@ -23,30 +24,42 @@ __all__ = [
     "meter_reset",
 ]
 
-#: kernel-launch metering: {op: [calls, elements]} — cheap host-side
-#: counters so benchmarks and the serving driver can report how much
-#: work the device path absorbed (reset with ``meter_reset``).  Counts
-#: *eager* launches only: inside a jit trace the Python side effect
-#: would fire once per trace, not per execution, so traced calls are
-#: excluded rather than silently underreported.
-_METER: dict[str, list[int]] = {}
+# kernel-launch metering lives in the metrics registry under the
+# ``kernels.`` scope (``kernels.<op>.calls`` / ``kernels.<op>.elements``)
+# — cheap host-side counters so benchmarks and the serving driver can
+# report how much work the device path absorbed, resettable per scope
+# without clobbering anyone else's metrics.  Counts *eager* launches
+# only: inside a jit trace the Python side effect would fire once per
+# trace, not per execution, so traced calls are excluded rather than
+# silently underreported.
+_SCOPE = "kernels."
 
 
 def _metered(op: str, n, operand=None) -> None:
     if isinstance(operand, jax.core.Tracer):
         return
-    cell = _METER.setdefault(op, [0, 0])
-    cell[0] += 1
-    cell[1] += int(n)
+    reg = get_registry()
+    reg.counter(f"{_SCOPE}{op}.calls").inc()
+    reg.counter(f"{_SCOPE}{op}.elements").inc(int(n))
 
 
 def meter() -> dict[str, dict[str, int]]:
-    """Snapshot of per-op kernel traffic since the last reset."""
-    return {op: {"calls": c, "elements": e} for op, (c, e) in _METER.items()}
+    """Snapshot of per-op kernel traffic since the last reset (the
+    legacy ``{op: {"calls", "elements"}}`` shape, reassembled from the
+    registry's ``kernels.`` scope)."""
+    out: dict[str, dict[str, int]] = {}
+    for name, val in get_registry().snapshot(_SCOPE).items():
+        op, field = name[len(_SCOPE):].rsplit(".", 1)
+        out.setdefault(op, {"calls": 0, "elements": 0})[field] = int(val)
+    # registry reset zeroes in place; drop untouched ops so the dict
+    # looks exactly like the legacy meter after meter_reset()
+    return {op: m for op, m in out.items() if m["calls"]}
 
 
 def meter_reset() -> None:
-    _METER.clear()
+    """Zero the ``kernels.`` registry scope only (other scopes keep
+    accumulating — per-scope reset is the whole point)."""
+    get_registry().reset(_SCOPE)
 
 
 def member(a, b_sorted, *, interpret: bool = True, **blocks) -> jax.Array:

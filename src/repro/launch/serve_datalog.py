@@ -47,6 +47,7 @@ holds a single frozen snapshot of the static materialisation and
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import time
 
@@ -55,8 +56,40 @@ import numpy as np
 from ..core import CMatEngine
 from ..core.generators import chain, lubm_like, paper_example, star
 from ..incremental import IncrementalStore
+from ..obs import (
+    get_registry,
+    get_tracer,
+    publish_query_cache,
+    span,
+    write_chrome_trace,
+    write_metrics,
+)
 from ..query import QueryEngine
 from ..storage import CheckpointManager, load_frozen, write_snapshot
+
+
+class Report:
+    """Report sink: every block prints its legacy ``[tag] ...`` line and
+    (with ``--report-json``) appends one JSON object per block —
+    ``{"block": tag, ...data}`` — so drivers can scrape structure
+    instead of parsing the text."""
+
+    def __init__(self, json_path: str | None = None):
+        self._fh = open(json_path, "w") if json_path else None
+
+    def emit(self, block: str, text: str, data: dict | None = None) -> None:
+        print(f"[{block}] {text}")
+        if self._fh is not None:
+            rec = {"block": block}
+            rec.update(data or {})
+            json.dump(rec, self._fh, default=float, sort_keys=True)
+            self._fh.write("\n")
+            self._fh.flush()
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
 
 
 def build_kb(name: str, scale: int):
@@ -193,11 +226,36 @@ def main(argv=None):
     ap.add_argument("--compact-threshold", type=float, default=0.5,
                     help="dead mu-node fraction that triggers a "
                          "compaction epoch (--live; 0 disables)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable span tracing and write a Chrome "
+                         "trace-event / Perfetto JSON file here (in "
+                         "--live mode, rewritten after every update "
+                         "batch)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a flat JSON metrics-registry snapshot "
+                         "here (periodic in --live mode, final always)")
+    ap.add_argument("--report-json", default=None, metavar="PATH",
+                    help="append one JSON object per report block here")
     args = ap.parse_args(argv)
+
+    if args.trace_out:
+        get_tracer().enable()
+    report = Report(args.report_json)
+
+    def flush_telemetry() -> None:
+        if args.metrics_out:
+            write_metrics(args.metrics_out)
+        if args.trace_out:
+            write_chrome_trace(args.trace_out)
 
     program, dataset, dictionary = build_kb(args.kb, args.scale)
     n_explicit = sum(np.asarray(r).shape[0] for r in dataset.values())
-    print(f"[kb:{args.kb}] {n_explicit} explicit facts, {len(program)} rules")
+    report.emit(
+        f"kb:{args.kb}",
+        f"{n_explicit} explicit facts, {len(program)} rules",
+        {"explicit_facts": n_explicit, "rules": len(program),
+         "scale": args.scale},
+    )
 
     kb_label = f"{args.kb}:scale{args.scale}"
     ckpt = (
@@ -247,28 +305,50 @@ def main(argv=None):
             )
     t_mat = time.perf_counter() - t0
     if stats is not None:
-        print(
-            f"[materialise] {stats.rounds} rounds over {stats.n_strata} strata, "
-            f"{stats.n_facts} facts in {stats.n_meta_facts} meta-facts, {t_mat:.2f}s"
+        report.emit(
+            "materialise",
+            f"{stats.rounds} rounds over {stats.n_strata} strata, "
+            f"{stats.n_facts} facts in {stats.n_meta_facts} meta-facts, "
+            f"{t_mat:.2f}s",
+            {"rounds": stats.rounds, "n_strata": stats.n_strata,
+             "n_facts": stats.n_facts, "n_meta_facts": stats.n_meta_facts,
+             "seconds": t_mat},
         )
-        print(
-            f"[fixpoint] {stats.n_rule_applications} rule applications, "
+        report.emit(
+            "fixpoint",
+            f"{stats.n_rule_applications} rule applications, "
             f"{stats.rule_applications_skipped} skipped without a probe; "
             f"plans: {stats.plan_cache.get('plans', 0)} compiled, "
             f"{stats.plan_cache.get('plan_hits', 0)} hits, "
-            f"{stats.plan_cache.get('plan_replans', 0)} replans"
+            f"{stats.plan_cache.get('plan_replans', 0)} replans",
+            {"n_rule_applications": stats.n_rule_applications,
+             "rule_applications_skipped": stats.rule_applications_skipped,
+             **{f"plan_cache.{k}": v for k, v in stats.plan_cache.items()}},
         )
     elif recovery is not None:
-        print(
-            f"[restore] warm start from {recovery.snapshot}: snapshot "
-            f"{recovery.t_snapshot_s:.3f}s + {recovery.wal_batches} WAL "
-            f"batches {recovery.t_replay_s:.3f}s (epoch "
+        # rendered from the registry scope the restore path published
+        # into (the recovery object only contributes the snapshot name
+        # and epochs — strings and levels the registry does not hold)
+        snap = get_registry().snapshot("storage.")
+        report.emit(
+            "restore",
+            f"warm start from {recovery.snapshot}: snapshot "
+            f"{snap['storage.restore_snapshot_s']:.3f}s + "
+            f"{int(snap['storage.wal_replayed'])} WAL "
+            f"batches {snap['storage.restore_replay_s']:.3f}s (epoch "
             f"{recovery.snapshot_epoch} -> {recovery.final_epoch}), "
             f"{inc.facts.n_facts()} facts in "
-            f"{inc.facts.n_meta_facts()} meta-facts; total {t_mat:.3f}s"
+            f"{inc.facts.n_meta_facts()} meta-facts; total {t_mat:.3f}s",
+            {**snap, "snapshot": recovery.snapshot,
+             "snapshot_epoch": recovery.snapshot_epoch,
+             "final_epoch": recovery.final_epoch, "seconds": t_mat},
         )
     else:
-        print(f"[restore] frozen snapshot served from {static_snap}, {t_mat:.3f}s")
+        report.emit(
+            "restore",
+            f"frozen snapshot served from {static_snap}, {t_mat:.3f}s",
+            {"snapshot": static_snap, "seconds": t_mat},
+        )
 
     dist = None
     if args.distributed:
@@ -304,27 +384,41 @@ def main(argv=None):
         # differential check would flag a phantom mismatch
         dist.materialise(inc.explicit if inc is not None else dataset)
         ds = dist.stats
-        print(
-            f"[distributed] {mesh.shape['data']} shard(s), {dist.rounds} "
+        report.emit(
+            "distributed",
+            f"{mesh.shape['data']} shard(s), {dist.rounds} "
             f"rounds over {ds.n_strata} strata in "
             f"{time.perf_counter() - t0:.2f}s; "
             f"{ds.n_rule_applications} rule applications "
             f"({ds.rule_applications_skipped} skipped), "
             f"{ds.rows_joined} rows joined, {ds.exchanges} exchanges "
             f"({ds.exchanges_skipped} elided by planner keys, "
-            f"{ds.exchange_regrows} regrows)"
+            f"{ds.exchange_regrows} regrows)",
+            get_registry().snapshot("dist."),
         )
         if not dist_complete:
-            print(
-                f"[distributed] {len(program) - len(dprog)} rule(s) outside "
-                f"the distributed fragment — differential checks disabled"
+            report.emit(
+                "distributed",
+                f"{len(program) - len(dprog)} rule(s) outside "
+                f"the distributed fragment — differential checks disabled",
+                {"unsupported_rules": len(program) - len(dprog)},
             )
         elif not args.live and hasattr(source, "materialisation"):
+            reg = get_registry()
             try:
                 dist.check_integrity(source.materialisation())
-                print("[dist-verify] OK (sharded materialisation == host)")
+                reg.counter("dist.verify_ok").inc()
+                report.emit(
+                    "dist-verify",
+                    "OK (sharded materialisation == host)",
+                    reg.snapshot("dist.verify"),
+                )
             except AssertionError as e:
-                print(f"[dist-verify] MISMATCH: {e}")
+                reg.counter("dist.verify_mismatch").inc()
+                report.emit(
+                    "dist-verify", f"MISMATCH: {e}",
+                    {**reg.snapshot("dist.verify"), "error": str(e)},
+                )
                 return 1
 
     qe = QueryEngine(
@@ -348,8 +442,9 @@ def main(argv=None):
     )
 
     # warmup: build snapshots + plans off the measured path
-    for text in dict.fromkeys(stream[: min(50, len(stream))]):
-        qe.answer(text)
+    with span("serve.warmup"):
+        for text in dict.fromkeys(stream[: min(50, len(stream))]):
+            qe.answer(text)
     warm_cells = qe.frozen.snapshot_cells
     warm_cache = qe.cache_stats()
 
@@ -364,27 +459,33 @@ def main(argv=None):
     t_serve0 = time.perf_counter()
     for i, text in enumerate(stream):
         if args.live and i and i % update_at == 0 and next_batch < len(batches):
-            deletions, additions = batches[next_batch]
-            next_batch += 1
-            t0 = time.perf_counter()
-            apply_tot.append(inc.apply(additions=additions, deletions=deletions))
-            cs = inc.maybe_compact(args.compact_threshold)
-            if cs is not None:
-                compactions.append(cs)
-            qe.bump_epoch(inc)
-            apply_lat.append(time.perf_counter() - t0)
-            if dist is not None:
-                # the same batch ships through the all_to_all exchange
+            with span("serve.update_batch", batch=next_batch):
+                deletions, additions = batches[next_batch]
+                next_batch += 1
                 t0 = time.perf_counter()
-                dist.apply(additions=additions, deletions=deletions)
-                dist_lat.append(time.perf_counter() - t0)
-            if (
-                ckpt is not None
-                and args.checkpoint_every > 0
-                and next_batch % args.checkpoint_every == 0
-            ):
-                ckpt.checkpoint(inc)
-                n_checkpoints += 1
+                apply_tot.append(
+                    inc.apply(additions=additions, deletions=deletions)
+                )
+                cs = inc.maybe_compact(args.compact_threshold)
+                if cs is not None:
+                    compactions.append(cs)
+                qe.bump_epoch(inc)
+                apply_lat.append(time.perf_counter() - t0)
+                if dist is not None:
+                    # the same batch ships through the all_to_all exchange
+                    t0 = time.perf_counter()
+                    dist.apply(additions=additions, deletions=deletions)
+                    dist_lat.append(time.perf_counter() - t0)
+                if (
+                    ckpt is not None
+                    and args.checkpoint_every > 0
+                    and next_batch % args.checkpoint_every == 0
+                ):
+                    ckpt.checkpoint(inc)
+                    n_checkpoints += 1
+            # live telemetry: the trace/metrics files track the serving
+            # loop batch by batch, not only at exit
+            flush_telemetry()
         t0 = time.perf_counter()
         res = qe.answer(text)
         latencies[i] = time.perf_counter() - t0
@@ -402,72 +503,120 @@ def main(argv=None):
     hit_rate = cache["result_hits"] / max(
         cache["result_hits"] + cache["result_misses"], 1
     )
-    print(
-        f"[serve] {len(stream)} queries in {t_serve:.2f}s "
+    # per-query latencies feed the registry histogram so the metrics
+    # snapshot carries serving percentiles alongside the counters
+    lat_hist = get_registry().histogram("serve.query_s")
+    for v in latencies:
+        lat_hist.observe(float(v))
+    publish_query_cache(qe)
+    report.emit(
+        "serve",
+        f"{len(stream)} queries in {t_serve:.2f}s "
         f"({len(stream) / max(t_serve, 1e-9):.0f} q/s), "
-        f"{n_answers} answers total"
+        f"{n_answers} answers total",
+        {"queries": len(stream), "seconds": t_serve,
+         "qps": len(stream) / max(t_serve, 1e-9), "answers": n_answers},
     )
-    print(
-        f"[latency] p50={np.percentile(lat_ms, 50):.3f}ms "
+    report.emit(
+        "latency",
+        f"p50={np.percentile(lat_ms, 50):.3f}ms "
         f"p90={np.percentile(lat_ms, 90):.3f}ms "
         f"p99={np.percentile(lat_ms, 99):.3f}ms "
-        f"max={lat_ms.max():.3f}ms"
+        f"max={lat_ms.max():.3f}ms",
+        get_registry().snapshot("serve.query_s"),
     )
-    print(
-        f"[cache] result hit rate {hit_rate:.1%} "
+    report.emit(
+        "cache",
+        f"result hit rate {hit_rate:.1%} "
         f"(plans: {cache['plan_hits']} hits / {cache['plan_misses']} misses); "
         f"snapshot warmup {warm_cells} cells, "
-        f"{qe.frozen.snapshot_cells - warm_cells} after"
+        f"{qe.frozen.snapshot_cells - warm_cells} after",
+        {**get_registry().snapshot("query."), "hit_rate": hit_rate},
     )
-    print(f"[store] {qe.frozen.store.n_nodes()} mu-nodes (flat across stream)")
+    report.emit(
+        "store",
+        f"{qe.frozen.store.n_nodes()} mu-nodes (flat across stream)",
+        {"mu_nodes": qe.frozen.store.n_nodes()},
+    )
     if args.live:
+        reg = get_registry()
         ap_ms = np.asarray(apply_lat) * 1e3 if apply_lat else np.zeros(1)
-        print(
-            f"[live] {len(apply_lat)} update batches applied "
+        # the registry's inc. scope accumulated these batch by batch via
+        # publish_incremental; render the report line from its snapshot
+        inc_snap = reg.snapshot("inc.")
+        report.emit(
+            "live",
+            f"{len(apply_lat)} update batches applied "
             f"(epoch {inc.epoch}), apply p50={np.percentile(ap_ms, 50):.2f}ms "
             f"p99={np.percentile(ap_ms, 99):.2f}ms; "
-            f"{sum(s.n_deleted for s in apply_tot)} deleted / "
-            f"{sum(s.n_inserted for s in apply_tot)} inserted facts, "
-            f"{sum(s.n_rederived for s in apply_tot)} rederived; "
-            f"{qe.stale_evictions} stale cache entries evicted"
+            f"{int(inc_snap.get('inc.n_deleted', 0))} deleted / "
+            f"{int(inc_snap.get('inc.n_inserted', 0))} inserted facts, "
+            f"{int(inc_snap.get('inc.n_rederived', 0))} rederived; "
+            f"{qe.stale_evictions} stale cache entries evicted",
+            {**inc_snap, "stale_evictions": qe.stale_evictions},
         )
         usage = inc.mu_usage()
+        reg.gauge("gc.nodes").set(usage.n_nodes)
+        reg.gauge("gc.dead_fraction").set(usage.dead_fraction)
+        reg.gauge("gc.resident_bytes").set(usage.total_bytes)
+        gc_snap = reg.snapshot("gc.")
+        n_compactions = int(gc_snap.get("gc.compactions", 0))
         compact_note = (
-            f"{len(compactions)} compaction epochs "
-            f"(-{sum(c.nodes_before - c.nodes_after for c in compactions)} "
-            f"nodes, {sum(c.reshared_leaves for c in compactions)} leaves "
+            f"{n_compactions} compaction epochs "
+            f"(-{int(gc_snap.get('gc.nodes_reclaimed', 0))} "
+            f"nodes, {int(gc_snap.get('gc.reshared_leaves', 0))} leaves "
             f"re-shared)"
-            if compactions
+            if n_compactions
             else "no compactions"
         )
-        print(
-            f"[mu-gc] {usage.n_nodes} nodes "
+        report.emit(
+            "mu-gc",
+            f"{usage.n_nodes} nodes "
             f"({usage.dead_fraction:.1%} dead, "
-            f"{usage.total_bytes / 1024:.1f}KiB resident); {compact_note}"
+            f"{usage.total_bytes / 1024:.1f}KiB resident); {compact_note}",
+            gc_snap,
         )
         if ckpt is not None:
-            print(
-                f"[storage] {n_checkpoints} checkpoints under "
-                f"{args.checkpoint_dir} ({ckpt.disk_nbytes() / 1024:.1f}KiB "
-                f"on disk, WAL {ckpt.wal.nbytes()}B), "
-                f"journal {inc.journal_bytes()}B resident"
+            reg.gauge("storage.disk_bytes").set(ckpt.disk_nbytes())
+            reg.gauge("storage.wal_bytes").set(ckpt.wal.nbytes())
+            st_snap = reg.snapshot("storage.")
+            report.emit(
+                "storage",
+                f"{int(st_snap.get('storage.checkpoints', 0))} checkpoints "
+                f"under {args.checkpoint_dir} "
+                f"({st_snap['storage.disk_bytes'] / 1024:.1f}KiB "
+                f"on disk, WAL {int(st_snap['storage.wal_bytes'])}B), "
+                f"journal {int(inc_snap.get('inc.journal_bytes', 0))}B "
+                f"resident",
+                st_snap,
             )
         if dist is not None and dist_lat:
             dl_ms = np.asarray(dist_lat) * 1e3
             ds = dist.stats
-            print(
-                f"[distributed] {len(dist_lat)} update batches through the "
+            report.emit(
+                "distributed",
+                f"{len(dist_lat)} update batches through the "
                 f"exchange, apply p50={np.percentile(dl_ms, 50):.2f}ms "
                 f"p99={np.percentile(dl_ms, 99):.2f}ms "
                 f"(last batch: {ds.n_overdeleted} overdeleted, "
-                f"{ds.n_rederived} rederived, {ds.n_inserted} inserted)"
+                f"{ds.n_rederived} rederived, {ds.n_inserted} inserted)",
+                reg.snapshot("dist."),
             )
             if dist_complete:
                 try:
                     dist.check_integrity(inc)
-                    print("[dist-verify] OK (sharded state == host store)")
+                    reg.counter("dist.verify_ok").inc()
+                    report.emit(
+                        "dist-verify",
+                        "OK (sharded state == host store)",
+                        reg.snapshot("dist.verify"),
+                    )
                 except AssertionError as e:
-                    print(f"[dist-verify] MISMATCH: {e}")
+                    reg.counter("dist.verify_mismatch").inc()
+                    report.emit(
+                        "dist-verify", f"MISMATCH: {e}",
+                        {**reg.snapshot("dist.verify"), "error": str(e)},
+                    )
                     return 1
         if args.live_verify:
             from ..core import flat_seminaive
@@ -481,8 +630,13 @@ def main(argv=None):
             ok = set(want) == set(got) and all(
                 np.array_equal(want[p], got[p]) for p in want
             )
-            print(f"[live-verify] {'OK' if ok else 'MISMATCH'} "
-                  f"({sum(r.shape[0] for r in want.values())} facts)")
+            report.emit(
+                "live-verify",
+                f"{'OK' if ok else 'MISMATCH'} "
+                f"({sum(r.shape[0] for r in want.values())} facts)",
+                {"ok": ok,
+                 "facts": sum(r.shape[0] for r in want.values())},
+            )
             if not ok:
                 return 1
     if args.pallas:
@@ -492,7 +646,29 @@ def main(argv=None):
             f"{op}: {m['calls']} calls / {m['elements']} elems"
             for op, m in sorted(ops.meter().items())
         )
-        print(f"[kernels] {traffic or 'no kernel launches'}")
+        report.emit(
+            "kernels",
+            traffic or "no kernel launches",
+            get_registry().snapshot("kernels."),
+        )
+    flush_telemetry()
+    if args.trace_out:
+        tr = get_tracer()
+        report.emit(
+            "trace",
+            f"{len(tr.events)} span/instant events -> {args.trace_out} "
+            f"({tr.dropped} dropped)",
+            {"events": len(tr.events), "dropped": tr.dropped,
+             "path": args.trace_out},
+        )
+    if args.metrics_out:
+        report.emit(
+            "metrics",
+            f"{len(get_registry().snapshot())} metrics -> "
+            f"{args.metrics_out}",
+            {"path": args.metrics_out},
+        )
+    report.close()
     return 0
 
 

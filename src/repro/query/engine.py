@@ -34,6 +34,7 @@ from ..core.engine import CMatEngine
 from ..core.frozen import FrozenFacts
 from ..core.metafacts import FactStore
 from ..core.terms import Dictionary
+from ..obs import span
 from .ast import Query, parse_query
 from .exec import ExecStats, execute
 from .plan import Plan, plan_query
@@ -200,32 +201,37 @@ class QueryEngine:
         return self.plan(query).explain()
 
     def answer(self, query: Query | str) -> QueryResult:
-        if isinstance(query, str):
-            query = self.parse(query)
-        if self._result_cache_size > 0:
-            hit = self._stamped_get(self._result_cache, query)
-            if hit is not None:
-                self.result_hits += 1
-                return QueryResult(
-                    query, hit.answers, hit.plan, hit.stats, from_cache=True
-                )
-        self.result_misses += 1
-        plan = self.plan(query)
-        answers, stats = execute(
-            plan,
-            self.frozen,
-            use_pallas=self.use_pallas,
-            interpret=self.interpret,
-        )
-        # cached answers are shared across hits: freeze them so a caller
-        # mutating in place cannot poison later responses
-        answers.setflags(write=False)
-        result = QueryResult(query, answers, plan, stats)
-        if self._result_cache_size > 0:
-            self._stamped_put(
-                self._result_cache, query, result, self._result_cache_size
+        with span("query.answer") as sp:
+            if isinstance(query, str):
+                query = self.parse(query)
+            if self._result_cache_size > 0:
+                hit = self._stamped_get(self._result_cache, query)
+                if hit is not None:
+                    self.result_hits += 1
+                    sp.set(cached=True, n_answers=int(hit.answers.shape[0]))
+                    return QueryResult(
+                        query, hit.answers, hit.plan, hit.stats,
+                        from_cache=True,
+                    )
+            self.result_misses += 1
+            plan = self.plan(query)
+            answers, stats = execute(
+                plan,
+                self.frozen,
+                use_pallas=self.use_pallas,
+                interpret=self.interpret,
             )
-        return result
+            # cached answers are shared across hits: freeze them so a
+            # caller mutating in place cannot poison later responses
+            answers.setflags(write=False)
+            result = QueryResult(query, answers, plan, stats)
+            if self._result_cache_size > 0:
+                self._stamped_put(
+                    self._result_cache, query, result,
+                    self._result_cache_size,
+                )
+            sp.set(cached=False, n_answers=int(answers.shape[0]))
+            return result
 
     # ------------------------------------------------------------------ #
     def decode(self, answers: np.ndarray) -> list[tuple[str, ...]]:

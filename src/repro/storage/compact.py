@@ -34,6 +34,7 @@ from dataclasses import dataclass
 
 from ..core.columns import ColumnStore
 from ..core.metafacts import FactStore, MetaFact
+from ..obs import get_registry, span
 
 __all__ = ["MuUsage", "CompactionStats", "mu_usage", "compact_store"]
 
@@ -98,6 +99,27 @@ def compact_store(inc) -> CompactionStats:
     in (between requests — see the module docstring for the exact
     concurrency contract).  The swapped-in state represents the
     identical fact set: rows, counts, and query answers are unchanged."""
+    with span("storage.compact") as sp:
+        stats = _compact_store(inc)
+        sp.set(
+            nodes_before=stats.nodes_before, nodes_after=stats.nodes_after
+        )
+    reg = get_registry()
+    reg.counter("gc.compactions").inc()
+    reg.counter("gc.nodes_reclaimed").inc(
+        stats.nodes_before - stats.nodes_after
+    )
+    reg.counter("gc.bytes_reclaimed").inc(
+        stats.bytes_before - stats.bytes_after
+    )
+    reg.counter("gc.reshared_leaves").inc(stats.reshared_leaves)
+    reg.counter("gc.time_s").inc(stats.time_s)
+    reg.gauge("gc.nodes").set(stats.nodes_after)
+    reg.gauge("gc.bytes").set(stats.bytes_after)
+    return stats
+
+
+def _compact_store(inc) -> CompactionStats:
     t0 = time.perf_counter()
     store: ColumnStore = inc.store
     facts: FactStore = inc.facts

@@ -29,6 +29,7 @@ import shutil
 import time
 from dataclasses import dataclass
 
+from ..obs import get_registry, span
 from .format import (
     SnapshotError,
     _fsync_dir,
@@ -122,42 +123,49 @@ class CheckpointManager:
     def checkpoint(self, inc) -> dict:
         """Write a snapshot of the incremental store's current epoch,
         publish it, and drop the now-redundant WAL/journal prefix."""
-        name = self._snap_name(inc.epoch)
-        final = os.path.join(self.root, name)
-        tmp = final + ".tmp"
-        if os.path.exists(tmp):
-            shutil.rmtree(tmp)
-        manifest = write_snapshot(
-            tmp,
-            inc.facts,
-            kind="incremental",
-            label=self.label,
-            epoch=inc.epoch,
-            round_tag=inc._round,
-            rows=inc.rows.to_dict(),
-            counts={p: c for p, c in inc.counts.items() if c.size},
-            explicit={p: r for p, r in inc.explicit.items() if r.size},
-            arities=inc.arities,
-        )
-        if os.path.exists(final):  # re-checkpoint at an unchanged epoch
-            shutil.rmtree(final)
-        os.rename(tmp, final)
-        ptr_tmp = os.path.join(self.root, _LATEST + ".tmp")
-        with open(ptr_tmp, "w") as fh:
-            fh.write(name + "\n")
-            fh.flush()
-            os.fsync(fh.fileno())
-        os.replace(ptr_tmp, os.path.join(self.root, _LATEST))
-        _fsync_dir(self.root)
-        # the snapshot is durable and published: WAL records and journal
-        # entries at or below its epoch are redundant
-        self.wal.truncate(keep_after_epoch=inc.epoch)
-        inc.truncate_journal()
-        # never prune the snapshot LATEST points at, whatever its name
-        # sorts as (a reused dir could hold higher-numbered strangers)
-        for old in self.snapshots()[: -self.keep]:
-            if old != name:
-                shutil.rmtree(os.path.join(self.root, old))
+        with span("storage.checkpoint", epoch=inc.epoch) as sp:
+            name = self._snap_name(inc.epoch)
+            final = os.path.join(self.root, name)
+            tmp = final + ".tmp"
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            manifest = write_snapshot(
+                tmp,
+                inc.facts,
+                kind="incremental",
+                label=self.label,
+                epoch=inc.epoch,
+                round_tag=inc._round,
+                rows=inc.rows.to_dict(),
+                counts={p: c for p, c in inc.counts.items() if c.size},
+                explicit={p: r for p, r in inc.explicit.items() if r.size},
+                arities=inc.arities,
+            )
+            if os.path.exists(final):  # re-checkpoint, unchanged epoch
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            ptr_tmp = os.path.join(self.root, _LATEST + ".tmp")
+            with open(ptr_tmp, "w") as fh:
+                fh.write(name + "\n")
+                fh.flush()
+                os.fsync(fh.fileno())
+            os.replace(ptr_tmp, os.path.join(self.root, _LATEST))
+            _fsync_dir(self.root)
+            # the snapshot is durable and published: WAL records and
+            # journal entries at or below its epoch are redundant
+            self.wal.truncate(keep_after_epoch=inc.epoch)
+            inc.truncate_journal()
+            # never prune the snapshot LATEST points at, whatever its
+            # name sorts as (a reused dir could hold higher-numbered
+            # strangers)
+            for old in self.snapshots()[: -self.keep]:
+                if old != name:
+                    shutil.rmtree(os.path.join(self.root, old))
+            sp.set(snapshot=name)
+        reg = get_registry()
+        reg.counter("storage.checkpoints").inc()
+        reg.gauge("storage.checkpoint_epoch").set(inc.epoch)
+        reg.gauge("storage.disk_bytes").set(self.disk_nbytes())
         return manifest
 
     # ------------------------------------------------------------------ #
@@ -168,18 +176,30 @@ class CheckpointManager:
         snap = self.latest()
         if snap is None:
             raise SnapshotError(f"no snapshot under {self.root!r}")
-        t0 = time.perf_counter()
-        inc, meta = restore_incremental(
-            program, snap, verify=False,
-            expected_label=self.label, **store_kwargs,
-        )
-        t_snap = time.perf_counter() - t0
-        t0 = time.perf_counter()
-        n_replayed = self.wal.replay(inc, after_epoch=meta.epoch)
-        t_replay = time.perf_counter() - t0
-        if verify:
-            inc.check_integrity()
-        inc.attach_wal(self.wal)
+        with span("storage.restore") as sp:
+            t0 = time.perf_counter()
+            inc, meta = restore_incremental(
+                program, snap, verify=False,
+                expected_label=self.label, **store_kwargs,
+            )
+            t_snap = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            n_replayed = self.wal.replay(inc, after_epoch=meta.epoch)
+            t_replay = time.perf_counter() - t0
+            if verify:
+                inc.check_integrity()
+            inc.attach_wal(self.wal)
+            sp.set(
+                snapshot_epoch=meta.epoch,
+                final_epoch=inc.epoch,
+                wal_batches=n_replayed,
+            )
+        reg = get_registry()
+        reg.counter("storage.restores").inc()
+        reg.counter("storage.wal_replayed").inc(n_replayed)
+        reg.counter("storage.wal_dropped").inc(self.wal.n_dropped)
+        reg.counter("storage.restore_snapshot_s").inc(t_snap)
+        reg.counter("storage.restore_replay_s").inc(t_replay)
         return inc, RecoveryStats(
             snapshot=snap,
             snapshot_epoch=meta.epoch,

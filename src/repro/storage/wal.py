@@ -29,6 +29,8 @@ import os
 
 import numpy as np
 
+from ..obs import get_registry, span
+
 __all__ = ["WriteAheadLog"]
 
 
@@ -65,18 +67,23 @@ class WriteAheadLog:
         additions: dict[str, np.ndarray] | None,
         deletions: dict[str, np.ndarray] | None,
     ) -> None:
-        rec = {
-            "epoch": int(epoch),
-            "adds": _encode_batch(additions),
-            "dels": _encode_batch(deletions),
-        }
-        body = _canonical(rec)
-        sha = hashlib.sha256(body.encode()).hexdigest()
-        line = json.dumps({"rec": rec, "sha": sha}, sort_keys=True)
-        with open(self.path, "a") as fh:
-            fh.write(line + "\n")
-            fh.flush()
-            os.fsync(fh.fileno())
+        with span("storage.wal.append", epoch=int(epoch)) as sp:
+            rec = {
+                "epoch": int(epoch),
+                "adds": _encode_batch(additions),
+                "dels": _encode_batch(deletions),
+            }
+            body = _canonical(rec)
+            sha = hashlib.sha256(body.encode()).hexdigest()
+            line = json.dumps({"rec": rec, "sha": sha}, sort_keys=True)
+            with open(self.path, "a") as fh:
+                fh.write(line + "\n")
+                fh.flush()
+                os.fsync(fh.fileno())
+            sp.set(bytes=len(line) + 1)
+        reg = get_registry()
+        reg.counter("storage.wal.appends").inc()
+        reg.counter("storage.wal.bytes").inc(len(line) + 1)
 
     # ------------------------------------------------------------------ #
     def records(self) -> list[dict]:

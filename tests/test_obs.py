@@ -1,0 +1,324 @@
+"""Observability subsystem tests: span tracer, metrics registry,
+Chrome-trace export, adapter parity, and the tracing-is-inert
+differential guarantee."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import CMatEngine
+from repro.core.generators import lubm_like, paper_example
+from repro.obs import (
+    Histogram,
+    MetricsRegistry,
+    Tracer,
+    chrome_trace,
+    get_registry,
+    get_tracer,
+    instant,
+    publish_materialisation,
+    set_registry,
+    set_tracer,
+    span,
+    write_chrome_trace,
+    write_metrics,
+)
+from repro.obs.adapters import (
+    MATERIALISATION_COUNTERS,
+    MATERIALISATION_GAUGES,
+)
+
+
+@pytest.fixture
+def tracer():
+    """Fresh enabled tracer installed as the process tracer."""
+    t = Tracer(enabled=True)
+    prev = set_tracer(t)
+    yield t
+    set_tracer(prev)
+
+
+@pytest.fixture
+def registry():
+    """Fresh registry installed as the process registry, so tests see
+    only their own metrics (engines publish into the global)."""
+    r = MetricsRegistry()
+    prev = set_registry(r)
+    yield r
+    set_registry(prev)
+
+
+# --------------------------------------------------------------------- #
+# tracer
+# --------------------------------------------------------------------- #
+class TestTracer:
+    def test_nesting_and_program_order(self, tracer):
+        with span("a.outer", k=1):
+            with span("a.child1"):
+                pass
+            with span("a.child2"):
+                pass
+        # exits append children before parents ...
+        assert [r.name for r in tracer.events] == [
+            "a.child1", "a.child2", "a.outer",
+        ]
+        # ... sorted_events recovers program (start-time) order
+        ordered = tracer.sorted_events()
+        assert [r.name for r in ordered] == [
+            "a.outer", "a.child1", "a.child2",
+        ]
+        assert [r.depth for r in ordered] == [0, 1, 1]
+        assert ordered[0].args == {"k": 1}
+        # parent encloses children on the clock
+        outer = ordered[0]
+        for child in ordered[1:]:
+            assert child.start_ns >= outer.start_ns
+            assert child.start_ns + child.dur_ns <= (
+                outer.start_ns + outer.dur_ns
+            )
+
+    def test_set_attaches_late_attributes(self, tracer):
+        with span("x.s") as sp:
+            sp.set(hit=True, n=3)
+        assert tracer.events[0].args == {"hit": True, "n": 3}
+
+    def test_instant_marker(self, tracer):
+        instant("x.marker", factor=2)
+        (rec,) = tracer.events
+        assert rec.dur_ns == -1 and rec.args == {"factor": 2}
+
+    def test_disabled_is_shared_noop(self, tracer):
+        tracer.disable()
+        s1, s2 = span("a"), span("b", k=1)
+        assert s1 is s2  # shared singleton: no per-call allocation
+        with s1 as sp:
+            sp.set(ignored=1)  # the no-op twin accepts attributes
+        instant("a.i")
+        assert tracer.events == []
+
+    def test_enable_mid_process_via_module_function(self, tracer):
+        tracer.disable()
+        with span("x.off"):
+            pass
+        tracer.enable()
+        with span("x.on"):
+            pass
+        assert [r.name for r in tracer.events] == ["x.on"]
+
+    def test_max_events_drops_and_counts(self):
+        t = Tracer(enabled=True, max_events=2)
+        prev = set_tracer(t)
+        try:
+            for i in range(5):
+                with span("x.s", i=i):
+                    pass
+        finally:
+            set_tracer(prev)
+        assert len(t.events) == 2 and t.dropped == 3
+
+    def test_misnested_exit_recovers(self, tracer):
+        a = tracer.span("x.a")
+        b = tracer.span("x.b")
+        a.__enter__()
+        b.__enter__()
+        a.__exit__(None, None, None)  # out of LIFO order
+        b.__exit__(None, None, None)
+        assert tracer.misnested == 1
+        assert len(tracer.events) == 2  # both still recorded
+
+    def test_reset_clears_events_keeps_enabled(self, tracer):
+        with span("x.s"):
+            pass
+        tracer.reset()
+        assert tracer.events == [] and tracer.enabled
+
+
+# --------------------------------------------------------------------- #
+# metrics registry
+# --------------------------------------------------------------------- #
+class TestRegistry:
+    def test_counter_gauge_roundtrip(self, registry):
+        registry.counter("a.c").inc()
+        registry.counter("a.c").inc(4)
+        registry.gauge("a.g").set(7.5)
+        snap = registry.snapshot()
+        assert snap["a.c"] == 5 and snap["a.g"] == 7.5
+
+    def test_scoped_reset_zeroes_in_place(self, registry):
+        registry.counter("kernels.member.calls").inc(3)
+        registry.counter("cmat.rounds").inc(2)
+        registry.reset("kernels.")
+        snap = registry.snapshot()
+        # kernel scope zeroed but still registered; other scopes intact
+        assert snap["kernels.member.calls"] == 0
+        assert snap["cmat.rounds"] == 2
+
+    def test_name_type_conflict_rejected(self, registry):
+        registry.counter("a.x")
+        with pytest.raises(ValueError):
+            registry.gauge("a.x")
+        with pytest.raises(ValueError):
+            registry.histogram("a.x")
+
+    def test_histogram_quantiles_vs_numpy(self):
+        rng = np.random.default_rng(0)
+        samples = rng.uniform(1e-3, 1.0, size=500)
+        h = Histogram()
+        for v in samples:
+            h.observe(float(v))
+        # bucket edges are 10**(1/10) apart, so the interpolated
+        # quantile is exact to one bucket's relative width (~26%)
+        for q in (0.50, 0.95, 0.99):
+            exact = float(np.percentile(samples, q * 100))
+            est = h.quantile(q)
+            assert abs(est - exact) <= 0.30 * exact, (q, est, exact)
+        assert h.count == 500
+        assert h.min == samples.min() and h.max == samples.max()
+        assert h.sum == pytest.approx(samples.sum())
+
+    def test_histogram_single_observation(self):
+        h = Histogram()
+        h.observe(0.25)
+        assert h.quantile(0.5) == pytest.approx(0.25)
+        assert h.quantile(0.99) == pytest.approx(0.25)
+
+    def test_empty_histogram_snapshot(self, registry):
+        registry.histogram("a.h")
+        snap = registry.snapshot("a.")
+        assert snap["a.h.count"] == 0 and snap["a.h.p99"] == 0.0
+        assert snap["a.h.max"] == 0.0
+
+    def test_snapshot_expands_histograms_flat(self, registry):
+        registry.histogram("serve.query_s").observe(0.01)
+        snap = registry.snapshot("serve.")
+        assert set(snap) == {
+            "serve.query_s.count", "serve.query_s.sum",
+            "serve.query_s.p50", "serve.query_s.p95",
+            "serve.query_s.p99", "serve.query_s.max",
+        }
+        # every value JSON-serialisable scalar
+        json.dumps(snap)
+
+
+# --------------------------------------------------------------------- #
+# exporters
+# --------------------------------------------------------------------- #
+class TestChromeTrace:
+    def test_schema(self, tracer):
+        with span("cmat.materialise", n_strata=2):
+            with span("cmat.round", round=1):
+                pass
+        instant("dist.exchange_regrow", factor=2)
+        doc = chrome_trace(tracer)
+        json.loads(json.dumps(doc))  # valid JSON
+        assert set(doc) == {"traceEvents", "displayTimeUnit", "otherData"}
+        assert doc["otherData"]["dropped_events"] == 0
+        assert doc["otherData"]["misnested_spans"] == 0
+        assert doc["otherData"]["origin_unix_s"] > 0
+        events = doc["traceEvents"]
+        meta = [e for e in events if e["ph"] == "M"]
+        assert {m["name"] for m in meta} == {"process_name", "thread_name"}
+        complete = [e for e in events if e["ph"] == "X"]
+        assert [e["name"] for e in complete] == [
+            "cmat.materialise", "cmat.round",
+        ]
+        for e in complete:
+            assert e["cat"] == e["name"].split(".", 1)[0]
+            assert isinstance(e["ts"], float) and e["dur"] >= 0
+            assert e["pid"] == 1 and isinstance(e["tid"], int)
+        (inst,) = [e for e in events if e["ph"] == "i"]
+        assert inst["s"] == "t" and "dur" not in inst
+        assert inst["args"] == {"factor": 2}
+
+    def test_write_returns_event_count(self, tracer, tmp_path):
+        with span("x.a"):
+            pass
+        instant("x.b")
+        path = tmp_path / "trace.json"
+        n = write_chrome_trace(str(path), tracer)
+        assert n == 2
+        doc = json.loads(path.read_text())
+        assert sum(1 for e in doc["traceEvents"] if e["ph"] != "M") == 2
+
+    def test_write_metrics(self, registry, tmp_path):
+        registry.counter("a.c").inc(3)
+        path = tmp_path / "metrics.json"
+        snap = write_metrics(str(path), registry)
+        assert json.loads(path.read_text()) == snap == {"a.c": 3}
+
+
+# --------------------------------------------------------------------- #
+# adapters: registry parity with the legacy stats dataclasses
+# --------------------------------------------------------------------- #
+class TestAdapterParity:
+    def test_cmat_snapshot_matches_stats_on_lubm(self, registry):
+        program, dataset, _ = lubm_like(
+            n_dept=2, n_students=20, n_courses=4, seed=0
+        )
+        eng = CMatEngine(program)
+        eng.load(dataset)
+        stats = eng.materialise()  # publishes into the registry itself
+        snap = registry.snapshot("cmat.")
+        for f in MATERIALISATION_COUNTERS + MATERIALISATION_GAUGES:
+            assert snap[f"cmat.{f}"] == pytest.approx(getattr(stats, f)), f
+
+    def test_counters_accumulate_gauges_overwrite(self, registry):
+        program, dataset, _ = paper_example()
+        eng = CMatEngine(program)
+        eng.load(dataset)
+        stats = eng.materialise()
+        publish_materialisation(stats)  # second publish, same scope
+        snap = registry.snapshot("cmat.")
+        assert snap["cmat.rounds"] == 2 * stats.rounds
+        assert snap["cmat.n_facts"] == stats.n_facts  # gauge: last write
+
+
+# --------------------------------------------------------------------- #
+# kernel meter through the registry
+# --------------------------------------------------------------------- #
+class TestKernelMeter:
+    def test_meter_scoped_reset(self, registry):
+        from repro.kernels import ops
+
+        ops.meter_reset()
+        registry.counter("cmat.rounds").inc(9)
+        ops.member(np.array([1, 2, 3]), np.array([2, 3, 5]))
+        m = ops.meter()
+        assert m["member"]["calls"] == 1 and m["member"]["elements"] == 3
+        ops.meter_reset()
+        assert ops.meter() == {}  # zeroed ops drop out of the dict
+        # the reset was scoped: other subsystems' counters survive
+        assert registry.snapshot("cmat.")["cmat.rounds"] == 9
+
+
+# --------------------------------------------------------------------- #
+# differential: tracing must not change engine results
+# --------------------------------------------------------------------- #
+class TestTracingIsInert:
+    def test_materialisation_identical_with_tracing(self, registry):
+        def run():
+            program, dataset, _ = lubm_like(
+                n_dept=2, n_students=15, n_courses=3, seed=1
+            )
+            eng = CMatEngine(program)
+            eng.load(dataset)
+            stats = eng.materialise()
+            return stats, eng.facts.to_dict()
+
+        prev = set_tracer(Tracer(enabled=False))
+        try:
+            stats_off, facts_off = run()
+            get_tracer().enable()
+            stats_on, facts_on = run()
+            assert get_tracer().events  # tracing actually recorded
+        finally:
+            set_tracer(prev)
+        assert sorted(facts_on) == sorted(facts_off)
+        for pred in facts_on:
+            np.testing.assert_array_equal(facts_on[pred], facts_off[pred])
+        assert stats_on.n_facts == stats_off.n_facts
+        assert stats_on.rounds == stats_off.rounds
+        assert (
+            stats_on.n_rule_applications == stats_off.n_rule_applications
+        )
