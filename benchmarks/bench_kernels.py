@@ -1,8 +1,19 @@
-"""Kernel microbenchmarks: Pallas (interpret) vs jnp oracle vs numpy.
+"""Kernel microbenchmarks: Pallas (interpret) vs jnp oracle vs numpy,
+with an achieved-vs-peak bandwidth column per kernel and a launch-count
+comparison of the fused join→dedup→merge chain vs its unfused steps.
 
 interpret-mode timings do NOT reflect TPU performance (the kernel body
-runs in Python); the benchmark validates plumbing + records the work
-shapes that the BlockSpecs tile for v5e."""
+runs in Python), so the ``peak_pct`` column is only meaningful on real
+hardware; on CPU it documents the bytes model, not the roofline.  The
+bandwidth math uses the same ``HBM_BW`` peak as the roofline table
+(:mod:`repro.roofline.analysis`) so no dry-run artifacts are needed.
+
+Launch counts are structural (device dispatches per round of the
+chain), not sampled: the unfused path needs span-probe + pair-expand +
+sort + dedup-probe + merge-sort dispatches where the fused path needs
+exactly two (``join_dedup`` + ``merge_unique``); the bench asserts the
+>= 2x reduction and that both chains produce identical codes.
+"""
 
 from __future__ import annotations
 
@@ -10,7 +21,7 @@ import time
 
 import numpy as np
 
-from repro.kernels import ops, ref
+from repro.roofline.analysis import HBM_BW
 
 
 def _time(fn, *args, reps=3):
@@ -25,48 +36,178 @@ def _time(fn, *args, reps=3):
     return (time.perf_counter() - t0) / reps
 
 
-def run(csv=True):
+def _bw(nbytes: int, seconds: float) -> tuple[float, float]:
+    """(achieved GB/s, % of HBM peak) for a kernel touching nbytes."""
+    gbps = nbytes / max(seconds, 1e-12) / 1e9
+    return round(gbps, 3), round(100.0 * gbps * 1e9 / HBM_BW, 4)
+
+
+def _row(kernel, n, t_kernel, nbytes, t_ref=float("nan"),
+         t_np=float("nan")):
+    gbps, pct = _bw(nbytes, t_kernel)
+    return {
+        "kernel": kernel, "n": n,
+        "pallas_interpret_ms": round(1e3 * t_kernel, 2),
+        "jnp_ref_ms": round(1e3 * t_ref, 2),
+        "numpy_ms": round(1e3 * t_np, 2),
+        "achieved_gbps": gbps,
+        "peak_pct": pct,
+    }
+
+
+def _fused_chain_comparison(rng, n: int) -> dict:
+    """One join→dedup→merge round both ways; returns the launch counts.
+
+    The unfused chain is the pre-fusion dataflow: ``group_spans`` (1),
+    ``expand_rle`` pair→left-row expansion (2), device sort of the
+    packed pairs (3), ``member`` dedup probe against the buffer (4) and
+    the merge re-sort (5).  The fused chain is ``join_dedup`` (1) +
+    ``merge_unique`` (2).  Both must produce the same sorted-unique
+    packed codes."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    from repro.kernels.fused import BIG
+
+    l_keys = rng.integers(0, n // 4, size=n).astype(np.int32)
+    l_payload = rng.integers(0, 2**14, size=n).astype(np.int32)
+    r_keys = np.sort(rng.integers(0, n // 4, size=n).astype(np.int32))
+    r_payload = rng.integers(0, 2**15, size=n).astype(np.int32)
+    buf_codes = np.unique(
+        rng.integers(0, 2**30, size=n).astype(np.int32)
+    )
+
+    # --- unfused chain (5 device dispatches + a host round-trip) ------ #
+    def unfused():
+        lo, hi = ops.group_spans(l_keys, r_keys)           # launch 1
+        lo_h, hi_h = np.asarray(lo), np.asarray(hi)        # host trip
+        counts = (hi_h - lo_h).astype(np.int32)
+        total = int(counts.sum())
+        nz = counts > 0
+        li = np.asarray(ops.expand_rle(                    # launch 2
+            np.flatnonzero(nz).astype(np.int32), counts[nz], total
+        ))
+        offs = np.concatenate([[0], np.cumsum(counts)[:-1]])
+        rj = lo_h[li] + (np.arange(total) - offs[li])
+        packed = (
+            l_payload[li].astype(np.int32) << 16
+        ) | (r_payload[rj].astype(np.int32) & 0xFFFF)
+        s = np.asarray(jnp.sort(jnp.asarray(packed)))      # launch 3
+        uniq = s[np.concatenate([[True], s[1:] != s[:-1]])]
+        fresh = uniq[
+            np.asarray(ops.anti_join_mask(uniq, buf_codes))  # launch 4
+        ]
+        merged = np.asarray(                               # launch 5
+            jnp.sort(jnp.concatenate(
+                [jnp.asarray(buf_codes), jnp.asarray(fresh)]
+            ))
+        )
+        return merged
+
+    # --- fused chain (2 launches, no host trip between them) --------- #
+    total = int((np.searchsorted(r_keys, l_keys, "right")
+                 - np.searchsorted(r_keys, l_keys, "left")).sum())
+    cap = 1 << max(7, int(np.ceil(np.log2(max(total, 1) + 1))))
+
+    def fused():
+        out, cnt, tot = ops.join_dedup(
+            l_keys, l_payload, r_keys, r_payload, capacity=cap
+        )                                                  # launch 1
+        assert int(tot[0]) <= cap, "bench capacity too small"
+        buf_cap = 1 << int(
+            np.ceil(np.log2(buf_codes.shape[0] + int(cnt[0]) + 1))
+        )
+        buf = np.full(max(buf_cap, 128), BIG, np.int32)
+        buf[: buf_codes.shape[0]] = buf_codes
+        merged, mcnt, _ = ops.merge_unique(buf, out)       # launch 2
+        return np.asarray(merged)[: int(mcnt[0])]
+
+    a, b = unfused(), fused()
+    assert a.shape == b.shape and (a == b).all(), (
+        "fused and unfused chains disagree"
+    )
+    launches_unfused, launches_fused = 5, 2
+    assert launches_unfused >= 2 * launches_fused
+    t_unfused = _time(unfused)
+    t_fused = _time(fused)
+    return {
+        "kernel": "fused_chain", "n": n,
+        "launches_unfused": launches_unfused,
+        "launches_fused": launches_fused,
+        "launch_ratio": round(launches_unfused / launches_fused, 2),
+        "unfused_ms": round(1e3 * t_unfused, 2),
+        "fused_ms": round(1e3 * t_fused, 2),
+    }
+
+
+def run(csv=True, smoke=False):
+    from repro.kernels import ops, ref
+    from repro.kernels.fused import BIG
+
     rng = np.random.default_rng(0)
     rows = []
-    for n in (4_096, 65_536):
+    sizes = (4_096,) if smoke else (4_096, 65_536)
+    for n in sizes:
         a = rng.integers(0, 1_000_000, size=n).astype(np.int32)
         b = np.sort(rng.integers(0, 1_000_000, size=n).astype(np.int32))
         t_kernel = _time(lambda: np.asarray(ops.member(a, b)))
         t_ref = _time(lambda: np.asarray(ref.sorted_member_ref(a, b)))
         t_np = _time(lambda: np.isin(a, b))
-        rows.append({
-            "kernel": "sorted_member", "n": n,
-            "pallas_interpret_ms": round(1e3 * t_kernel, 2),
-            "jnp_ref_ms": round(1e3 * t_ref, 2),
-            "numpy_ms": round(1e3 * t_np, 2),
-        })
+        # reads a + b (int32), writes a bool mask
+        rows.append(_row("sorted_member", n, t_kernel,
+                         4 * n + 4 * n + n, t_ref, t_np))
 
         vals = rng.integers(0, 1000, size=n // 16).astype(np.int32)
         cnts = rng.integers(1, 32, size=n // 16).astype(np.int32)
         total = int(cnts.sum())
         t_kernel = _time(lambda: np.asarray(ops.expand_rle(vals, cnts, total)))
         t_np = _time(lambda: np.repeat(vals, cnts))
-        rows.append({
-            "kernel": "rle_expand", "n": total,
-            "pallas_interpret_ms": round(1e3 * t_kernel, 2),
-            "jnp_ref_ms": float("nan"),
-            "numpy_ms": round(1e3 * t_np, 2),
-        })
+        rows.append(_row("rle_expand", total, t_kernel,
+                         8 * vals.size + 4 * total, t_np=t_np))
 
         l = rng.integers(0, 1_000_000, size=n).astype(np.int32)
         t_kernel = _time(lambda: np.asarray(ops.group_spans(l, b)[0]))
         t_ref = _time(lambda: np.asarray(ref.join_bounds_ref(l, b)[0]))
-        rows.append({
-            "kernel": "join_bounds", "n": n,
-            "pallas_interpret_ms": round(1e3 * t_kernel, 2),
-            "jnp_ref_ms": round(1e3 * t_ref, 2),
-            "numpy_ms": float("nan"),
-        })
+        rows.append(_row("join_bounds", n, t_kernel,
+                         4 * n + 4 * n + 8 * n, t_ref))
+
+        # --- fused kernels vs their numpy references ------------------ #
+        lk = rng.integers(0, n // 4, size=n).astype(np.int32)
+        lp = rng.integers(0, 2**14, size=n).astype(np.int32)
+        rk = np.sort(rng.integers(0, n // 4, size=n).astype(np.int32))
+        rp = rng.integers(0, 2**15, size=n).astype(np.int32)
+        total_pairs = int((np.searchsorted(rk, lk, "right")
+                           - np.searchsorted(rk, lk, "left")).sum())
+        cap = 1 << max(7, int(np.ceil(np.log2(total_pairs + 1))))
+        t_kernel = _time(lambda: np.asarray(
+            ops.join_dedup(lk, lp, rk, rp, capacity=cap)[0]
+        ))
+        t_np = _time(
+            lambda: ref.fused_join_dedup_ref(lk, lp, rk, rp, capacity=cap)[0]
+        )
+        rows.append(_row("fused_join_dedup", n, t_kernel,
+                         4 * (2 * n + 2 * n) + 4 * cap + 8, t_np=t_np))
+
+        bufc = 1 << int(np.ceil(np.log2(2 * n)))
+        buf = np.full(bufc, BIG, np.int32)
+        seed = np.unique(rng.integers(0, 2**30, size=n // 2).astype(np.int32))
+        buf[: seed.size] = seed
+        fresh = np.unique(rng.integers(0, 2**30, size=n // 4).astype(np.int32))
+        fresh = np.setdiff1d(fresh, seed)
+        t_kernel = _time(lambda: np.asarray(ops.merge_unique(buf, fresh)[0]))
+        t_np = _time(lambda: ref.merge_sorted_unique_ref(buf, fresh)[0])
+        rows.append(_row("merge_sorted_unique", bufc, t_kernel,
+                         4 * (bufc + fresh.size) + 4 * bufc + 8, t_np=t_np))
+
+        rows.append(_fused_chain_comparison(rng, n))
+
     if csv:
-        cols = list(rows[0].keys())
+        cols: list[str] = []
+        for r in rows:  # union of keys, first-seen order
+            cols.extend(k for k in r if k not in cols)
         print(",".join(cols))
         for r in rows:
-            print(",".join(str(r[c]) for c in cols))
+            print(",".join(str(r.get(c, "")) for c in cols))
     return rows
 
 

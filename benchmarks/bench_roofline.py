@@ -1,25 +1,38 @@
 """Roofline table: three terms per (arch x shape) from the dry-run
-artifacts (run ``python -m repro.launch.dryrun`` first)."""
+artifacts (run ``python -m repro.launch.dryrun`` first).
+
+When no artifacts exist the bench no longer silently returns an empty
+row list (which read as "ran, measured nothing" in the JSON artifact):
+it emits one explicit ``skipped`` row naming the missing input, so CI
+diffs distinguish "not run" from "regressed to zero rows".
+"""
 
 from __future__ import annotations
 
+import dataclasses
 import os
 
 from repro.roofline.analysis import format_table, full_table
 
 
+def _skip_row(reason: str) -> list[dict]:
+    print(f"(skipped: {reason})")
+    return [{"skipped": True, "reason": reason}]
+
+
 def run(csv=True, directory="experiments/dryrun"):
     if not os.path.isdir(directory):
-        print(f"(no dry-run artifacts in {directory}; run "
-              f"`python -m repro.launch.dryrun` first)")
-        return []
+        return _skip_row(
+            f"no dry-run artifacts in {directory}; run "
+            f"`python -m repro.launch.dryrun` first"
+        )
     rows = full_table(directory, mesh="single")
     if not rows:
-        print("(no OK single-mesh records yet)")
-        return []
+        return _skip_row(f"no OK single-mesh records in {directory}")
     if csv:
         print(format_table(rows))
-    return rows
+    # flatten dataclasses to scalar dicts (the bench-artifact contract)
+    return [dataclasses.asdict(r) for r in rows]
 
 
 if __name__ == "__main__":

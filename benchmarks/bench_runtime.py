@@ -42,6 +42,14 @@ def _run_cmat(program, dataset, **kwargs):
     return eng, time.perf_counter() - t0
 
 
+def _run_flat(program, dataset, fused):
+    t0 = time.perf_counter()
+    eng = FlatEngine(program, fused=fused)
+    eng.load(dataset)
+    eng.materialise()
+    return eng, time.perf_counter() - t0
+
+
 def run_one(name, gen):
     program, dataset, _ = gen()
 
@@ -57,23 +65,39 @@ def run_one(name, gen):
     # beyond-paper: persistent sorted dedup index (speed/memory tradeoff)
     _, t_index = _run_cmat(program, dataset, dedup_index=True)
 
-    t0 = time.perf_counter()
-    flat = FlatEngine(program)
-    flat.load(dataset)
-    t_load_f = time.perf_counter() - t0
-    flat.materialise()
+    # fused fast path (PR 7): flat-tail xjoin emission + packed-code
+    # dedup against the persistent FactBuffers index
+    cmat_fused, t_cmat_fused = _run_cmat(program, dataset, fused=True)
+
+    # flat engine, per-step (legacy round tail) vs fused round tail —
+    # the per-step run is the differential oracle for both fused paths
+    flat, t_flat = _run_flat(program, dataset, fused=False)
+    flat_fused, t_flat_fused = _run_flat(program, dataset, fused=True)
 
     n_c = rep["n_facts_materialised"]
     n_lr = sum(v.shape[0] for v in cmat_lr.materialisation().values())
     n_f = sum(v.shape[0] for v in flat.facts.values())
     assert n_c == n_f, f"{name}: fact count mismatch {n_c} != {n_f}"
     assert n_c == n_lr, f"{name}: planned vs left-to-right mismatch {n_c} != {n_lr}"
+    # fused paths must be answer-identical, not just count-identical
+    for pred, rows in flat.facts.items():
+        fr = flat_fused.facts[pred]
+        assert rows.shape == fr.shape and (rows == fr).all(), (
+            f"{name}/{pred}: fused flat rows differ from per-step"
+        )
+    cf_mat = cmat_fused.materialisation()
+    n_cf = sum(v.shape[0] for v in cf_mat.values())
+    assert n_c == n_cf, f"{name}: cmat fused mismatch {n_c} != {n_cf}"
     return {
         "workload": name,
         "cmat_total": round(t_cmat, 3),
         "cmat_lr_total": round(t_lr, 3),
         "cmat_indexed_total": round(t_index, 3),
-        "flat_total": round(t_load_f + flat.time_total, 3),
+        "cmat_fused_total": round(t_cmat_fused, 3),
+        "cmat_fused_speedup": round(t_cmat / max(t_cmat_fused, 1e-9), 2),
+        "flat_total": round(t_flat, 3),
+        "flat_fused_total": round(t_flat_fused, 3),
+        "flat_fused_speedup": round(t_flat / max(t_flat_fused, 1e-9), 2),
         "strata": rep["n_strata"],
         "apps": rep["rule_applications"],
         "apps_lr": cmat_lr.stats.n_rule_applications,

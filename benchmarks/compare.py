@@ -63,6 +63,12 @@ METRIC_GATES: dict[str, float] = {
     "rows_joined": 0.10,
     "exchanges_skipped": 0.10,
     "rule_applications_skipped": 0.10,
+    # eager Pallas dispatches (kernels.kernel_launches): a silent rise
+    # means a fused path fell back to the per-step chain
+    "kernel_launches": 0.10,
+    # rounds served by the fused tail (flat.fused_rounds /
+    # cmat.fused_rounds): dropping to zero means the fast path un-wired
+    "fused_rounds": 0.10,
 }
 
 

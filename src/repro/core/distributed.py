@@ -58,6 +58,7 @@ from .compile import SRC_DELTA, SRC_OLD, PlanCache, compile_body, stats_bucket
 from .datalog import Program
 from .engine import MaterialisationStats
 from .program_graph import stratify, stratum_predicates
+from .util import unique_rows
 
 EMPTY = jnp.int32(-1)
 
@@ -113,11 +114,12 @@ def sorted_member_jnp(a: jax.Array, b_sorted: jax.Array) -> jax.Array:
 
 def sorted_member_kernel(a: jax.Array, b_sorted: jax.Array) -> jax.Array:
     """Pallas-kernel membership (``repro.kernels.sorted_member``) — the
-    TPU device path for the dedup anti-join.  interpret=True here (CPU
-    container); on TPU pass interpret=False through ``ops.member``."""
+    TPU device path for the dedup anti-join.  ``interpret`` is backend-
+    detected (interpret on CPU, compiled on TPU; override with
+    ``REPRO_PALLAS_INTERPRET`` — see ``repro.kernels.backend``)."""
     from ..kernels import ops
 
-    return ops.member(a, b_sorted, interpret=True)
+    return ops.member(a, b_sorted, interpret=None)
 
 
 #: x64 is disabled by default in JAX, so packed fact keys live in int32:
@@ -635,7 +637,7 @@ class DistributedEngine:
     def _spec2(self):
         return [P(self.axis, None, None), P(self.axis)]
 
-    def _shmap(self, body, in_specs, out_specs):
+    def _shmap(self, body, in_specs, out_specs, donate_argnums=()):
         return jax.jit(shard_map(
             body,
             mesh=self.mesh,
@@ -645,7 +647,21 @@ class DistributedEngine:
             # the vma check so the kernel dedup path can run under
             # shard_map (the specs above still pin the layouts)
             check_vma=False,
-        ))
+        ), donate_argnums=tuple(donate_argnums))
+
+    def _state_donation(self):
+        """Argnums of the per-predicate state buffers, for variants that
+        consume-and-replace the state exactly once per call (delete /
+        merge — NOT the fixpoint rounds, which retry the *same* inputs
+        on exchange overflow and so must never donate).  Donation lets
+        XLA reuse the old buffers for the outputs, so steady-state
+        maintenance allocates nothing; it is a no-op (with a warning)
+        on CPU, so only engage it on backends that honour it."""
+        from ..kernels.backend import backend_name
+
+        if backend_name() == "cpu":
+            return ()
+        return tuple(range(3 * len(self._preds)))
 
     def _merge_block(self, trows, tcnt, rows, valid, restrict=None):
         """Dedup candidate rows against a target buffer (and optionally
@@ -888,7 +904,13 @@ class DistributedEngine:
         for _ in preds:
             out_specs.extend(self._spec3())
         out_specs.extend([P(), P()])
-        return _Variant(self._shmap(body, in_specs, out_specs), 0, 0)
+        return _Variant(
+            self._shmap(
+                body, in_specs, out_specs,
+                donate_argnums=self._state_donation(),
+            ),
+            0, 0,
+        )
 
     # -------------------------------------------------------------- #
     # round execution with exchange-regrow retries
@@ -1131,7 +1153,7 @@ class DistributedEngine:
             )
             if rows.ndim == 1:
                 rows = rows.reshape(-1, 1)
-            full[p] = np.unique(rows, axis=0) if rows.shape[0] else rows
+            full[p] = unique_rows(rows) if rows.shape[0] else rows
         self._preds = preds
         self._arities = arities
         self._counts = {p: int(full[p].shape[0]) for p in preds}
@@ -1184,7 +1206,7 @@ class DistributedEngine:
             flat_rows = np.concatenate(
                 [buf[s, : c[s]] for s in range(self.n_shards)]
             )
-            result[p] = np.unique(flat_rows.astype(np.int64), axis=0)
+            result[p] = unique_rows(flat_rows.astype(np.int64))
         return result
 
     # -------------------------------------------------------------- #
@@ -1225,7 +1247,7 @@ class DistributedEngine:
             rows = np.concatenate(
                 [buf[s, : cnt[s]] for s in range(self.n_shards)]
             )
-            out[p] = np.unique(rows.astype(np.int64), axis=0)
+            out[p] = unique_rows(rows.astype(np.int64))
         return out
 
     def _route_pairs(self, rows_by_pred: dict) -> dict:
@@ -1494,7 +1516,7 @@ class DistributedEngine:
             flat_rows = np.concatenate(
                 [buf[s, : c[s]] for s in range(self.n_shards)]
             )
-            out[p] = np.unique(flat_rows.astype(np.int64), axis=0)
+            out[p] = unique_rows(flat_rows.astype(np.int64))
         return out
 
     def check_integrity(self, host) -> None:

@@ -25,16 +25,17 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from ..obs import publish_materialisation, span
+from ..obs import get_registry, publish_materialisation, span
 from .columns import ColumnStore
 from .compile import FactStoreStats, Plan, PlanCache, compile_body, stats_bucket
 from .compress import compress_rows
 from .datalog import Program, Rule
 from .dedup import elim_dup
 from .frozen import SortedRows
-from .joins import SubstSet, match, sjoin, xjoin
+from .joins import SubstSet, _unfold_cols, match, sjoin, xjoin
 from .metafacts import FactStore, MetaFact, flat_repr_size
 from .program_graph import stratify
+from .util import factorize_rows, unique_rows
 
 __all__ = ["CMatEngine", "MaterialisationStats"]
 
@@ -68,7 +69,7 @@ class _OldPartitionSnapshots:
         upto = self._upto.get(pred, 0)
         if sr is None:
             rows = facts.unfold_pred(pred, "old")
-            sr = SortedRows(np.unique(rows, axis=0))
+            sr = SortedRows(unique_rows(rows))
         elif upto < r:
             fresh = [
                 mf for mf in facts.all(pred) if upto <= mf.round < r
@@ -83,7 +84,7 @@ class _OldPartitionSnapshots:
                 merged = np.concatenate(
                     [sr.rows, np.stack(cols, axis=1)]
                 )
-                sr = SortedRows(np.unique(merged, axis=0))
+                sr = SortedRows(unique_rows(merged))
         self._snap[pred] = sr
         self._upto[pred] = r
         return sr
@@ -134,6 +135,8 @@ class CMatEngine:
         stratify_program: bool = True,
         plan_cache: PlanCache | None = None,
         snapshot_old_scans: bool = True,
+        fused: bool = False,
+        fused_max_pairs: int = 1 << 22,
     ):
         # ``inplace_splits=True`` is the paper's Algorithm 4 accounting
         # (mu(a) := b_in.b_out).  We found it unsound in general: a split
@@ -166,11 +169,32 @@ class CMatEngine:
             else None
         )
         self._explicit: dict[str, np.ndarray] = {}
+        # ``fused=True`` is the device-resident fast path retimed for the
+        # host: rules whose plan ends in an xjoin skip the compress →
+        # unfold → split round-trip (the measured hot spot: per-group
+        # leaf creation in ``compress_grouped`` followed by ``elim_dup``
+        # immediately re-unfolding those same leaves) and instead emit
+        # flat head rows straight into a packed-code dedup against a
+        # persistent ``FactBuffers`` index; only the genuinely-new
+        # survivors are compressed, once, per predicate.  This is the
+        # same join→dedup→merge dataflow as the ``fused_join_dedup`` /
+        # ``merge_sorted_unique`` Pallas kernels, so on-device rounds and
+        # host rounds share one shape.  ``fused_max_pairs`` caps the
+        # transient flat join output; a wider join falls back to the
+        # structure-shared xjoin for that rule application.
+        self.fused = fused
+        self.fused_max_pairs = fused_max_pairs
         # persistent sorted dedup index (speed for memory — the paper's
-        # reported bottleneck is dedup re-unpacking; see DedupIndex)
-        from .dedup import DedupIndex
+        # reported bottleneck is dedup re-unpacking; see DedupIndex).
+        # Fused mode requires it: the flat tail's dedup IS the index.
+        if fused:
+            from ..kernels.buffers import FactBuffers
 
-        self._dedup_index = DedupIndex() if dedup_index else None
+            self._dedup_index = FactBuffers()
+        else:
+            from .dedup import DedupIndex
+
+            self._dedup_index = DedupIndex() if dedup_index else None
 
     # ------------------------------------------------------------------ #
     def load(self, dataset: dict[str, np.ndarray]) -> None:
@@ -180,7 +204,7 @@ class CMatEngine:
             rows = np.asarray(rows, dtype=np.int64)
             if rows.ndim == 1:
                 rows = rows.reshape(-1, 1)
-            rows = np.unique(rows, axis=0)
+            rows = unique_rows(rows)
             self._explicit[pred] = rows
             if self._dedup_index is not None:
                 self._dedup_index.seed(pred, rows)
@@ -257,6 +281,7 @@ class CMatEngine:
     def _round(self, round_no: int, rules: list[Rule], naive: bool = False) -> dict:
         facts, store = self.facts, self.store
         candidates: dict[str, list[tuple[tuple[int, ...], int]]] = {}
+        flat_candidates: dict[str, list[np.ndarray]] = {}
         match_cache: dict = {}
         n_apps = 0
         n_skipped = 0
@@ -304,12 +329,32 @@ class CMatEngine:
                     # a body predicate is still empty: nothing to probe
                     n_skipped += 1
                     continue
+                fused_tail = (
+                    self.fused
+                    and plan.joins
+                    and plan.joins[-1].kind == "xjoin"
+                    and len(rule.head.terms) <= 2
+                )
                 with span(
                     "cmat.rule", head=rule.head.predicate, pivot=i
                 ):
-                    result = self._eval_plan(
-                        plan, cached_match, (rule, None if naive else i)
-                    )
+                    if fused_tail:
+                        result = self._eval_plan_fused(
+                            plan, cached_match, rule,
+                            (rule, None if naive else i),
+                        )
+                        if isinstance(result, np.ndarray):
+                            if result.shape[0]:
+                                n_apps += 1
+                                flat_candidates.setdefault(
+                                    rule.head.predicate, []
+                                ).append(result)
+                            continue
+                        # wide join fell back to the structure-shared path
+                    else:
+                        result = self._eval_plan(
+                            plan, cached_match, (rule, None if naive else i)
+                        )
                 if result is None or result.is_empty():
                     continue
                 n_apps += 1
@@ -319,6 +364,10 @@ class CMatEngine:
         with span("cmat.dedup", round=round_no):
             delta = elim_dup(candidates, facts, store, round_no,
                              self.inplace_splits, index=self._dedup_index)
+            if flat_candidates:
+                delta.extend(
+                    self._dedup_flat(flat_candidates, round_no)
+                )
         self.stats.time_dedup += time.perf_counter() - t0
 
         # Alg. 1 line 23: re-compress length-one meta-facts
@@ -424,6 +473,136 @@ class CMatEngine:
         return L
 
     # ------------------------------------------------------------------ #
+    def _eval_plan_fused(
+        self, plan: Plan, cached_match, rule: Rule, plan_key=None
+    ) -> np.ndarray | SubstSet | None:
+        """Fused-tail evaluation: run the plan as usual up to the final
+        xjoin, then emit flat head rows directly instead of compressing
+        the join output into the store (``fused_join_dedup`` dataflow on
+        the host: span probe → pair gather → head projection; the dedup
+        half happens once per predicate in :meth:`_dedup_flat`).
+
+        Returns an ``(n, arity)`` int64 array normally; a ``SubstSet``
+        when the transient pair count exceeds ``fused_max_pairs`` (the
+        structure-shared xjoin fallback); ``None`` on an empty body."""
+        L = cached_match(plan.first.atom, plan.first.source)
+        if L.is_empty():
+            return None
+        if plan_key is not None:
+            self.plan_cache.note_actual(
+                plan_key, plan.first.est_rows, L.n_substitutions()
+            )
+        for step in plan.joins[:-1]:
+            R = cached_match(step.scan.atom, step.scan.source)
+            if R.is_empty():
+                return None
+            t0 = time.perf_counter()
+            if step.kind == "sjoin":
+                if step.filter_left:
+                    L = sjoin(R, L, step.key_vars, self.store,
+                              self.inplace_splits)
+                else:
+                    L = sjoin(L, R, step.key_vars, self.store,
+                              self.inplace_splits)
+            else:
+                L = xjoin(L, R, step.key_vars, self.store)
+            self.stats.time_join += time.perf_counter() - t0
+            if L.is_empty():
+                return None
+        last = plan.joins[-1]
+        R = cached_match(last.scan.atom, last.scan.source)
+        if R.is_empty():
+            return None
+        t0 = time.perf_counter()
+        rows = self._xjoin_head_rows(L, R, last.key_vars, rule.head)
+        self.stats.time_join += time.perf_counter() - t0
+        if rows is None:  # too wide: fall back to the compressed xjoin
+            t0 = time.perf_counter()
+            out = xjoin(L, R, last.key_vars, self.store)
+            self.stats.time_join += time.perf_counter() - t0
+            return None if out.is_empty() else out
+        return rows
+
+    def _xjoin_head_rows(
+        self,
+        left: SubstSet,
+        right: SubstSet,
+        key_vars: tuple[str, ...],
+        head,
+    ) -> np.ndarray | None:
+        """Cross-join ``left`` x ``right`` on ``key_vars`` and project the
+        rule head in one pass, returning flat ``(n, arity)`` rows — no
+        compression, no leaf creation.  ``None`` when the pair total
+        exceeds ``fused_max_pairs`` (caller falls back to xjoin)."""
+        store = self.store
+        l_key_idx = [left.vars.index(v) for v in key_vars]
+        r_key_idx = [right.vars.index(v) for v in key_vars]
+        l_keys = _unfold_cols(store, left.items, l_key_idx)
+        r_keys = _unfold_cols(store, right.items, r_key_idx)
+        codes_l, codes_r = factorize_rows(l_keys, r_keys)
+        r_perm = np.argsort(codes_r, kind="stable")
+        codes_r_s = codes_r[r_perm]
+        lo = np.searchsorted(codes_r_s, codes_l, side="left")
+        hi = np.searchsorted(codes_r_s, codes_l, side="right")
+        counts = hi - lo
+        total = int(counts.sum())
+        if total == 0:
+            return np.zeros((0, len(head.terms)), dtype=np.int64)
+        if total > self.fused_max_pairs:
+            return None
+        l_rep = np.repeat(np.arange(codes_l.shape[0]), counts)
+        offsets = np.concatenate([[0], np.cumsum(counts)[:-1]])
+        within = np.arange(total) - np.repeat(offsets, counts)
+        r_sel = r_perm[np.repeat(lo, counts) + within]
+        # head projection straight from the unfolded sides
+        head_vars = [t for t in head.terms if not isinstance(t, int)]
+        l_cols: dict[str, np.ndarray] = {}
+        r_cols: dict[str, np.ndarray] = {}
+        l_need = [v for v in head_vars if v in left.vars]
+        r_need = [v for v in head_vars if v not in left.vars]
+        if l_need:
+            unf = _unfold_cols(store, left.items,
+                               [left.vars.index(v) for v in l_need])
+            l_cols = {v: unf[:, j] for j, v in enumerate(l_need)}
+        if r_need:
+            unf = _unfold_cols(store, right.items,
+                               [right.vars.index(v) for v in r_need])
+            r_cols = {v: unf[:, j] for j, v in enumerate(r_need)}
+        cols = []
+        for t in head.terms:
+            if isinstance(t, int):
+                cols.append(np.full(total, t, dtype=np.int64))
+            elif t in l_cols:
+                cols.append(l_cols[t][l_rep])
+            else:
+                cols.append(r_cols[t][r_sel])
+        return np.stack(cols, axis=1)
+
+    def _dedup_flat(
+        self, flat_candidates: dict[str, list[np.ndarray]], round_no: int
+    ) -> list[MetaFact]:
+        """Dedup the round's flat head rows against the persistent
+        ``FactBuffers`` index (which :func:`elim_dup` has already updated
+        with this round's meta-fact survivors, so cross-path duplicates
+        are caught) and compress only the genuinely-new rows — once per
+        predicate, not once per leaf group."""
+        delta: list[MetaFact] = []
+        for pred, blocks in sorted(flat_candidates.items()):
+            rows = blocks[0] if len(blocks) == 1 else np.concatenate(blocks)
+            keep = self._dedup_index.fresh_mask(pred, rows)
+            # arity <= 2 is guaranteed by the fused-tail gate, so the
+            # packed fast path never falls back
+            assert keep is not None, "fused tail emitted unpackable arity"
+            if not keep.any():
+                continue
+            # fresh_mask already dropped in-block duplicates (first-
+            # occurrence) — survivors are unique, compress sorts its way
+            for cols, length in compress_rows(rows[keep], self.store):
+                delta.append(MetaFact(pred, cols, length, round=round_no))
+        get_registry().counter("cmat.fused_rounds").inc()
+        return delta
+
+    # ------------------------------------------------------------------ #
     def explain(self, rule: Rule, pivot: int = 0) -> str:
         """Inspectable plan for one (rule, pivot) under current stats."""
         self._stats_view.refresh()
@@ -481,7 +660,7 @@ class CMatEngine:
     def report(self) -> dict:
         flat_mat = self.materialisation()
         explicit_size = flat_repr_size(
-            {p: np.unique(r, axis=0) for p, r in self._explicit.items()}
+            {p: unique_rows(r) for p, r in self._explicit.items()}
         )
         return {
             "rounds": self.stats.rounds,

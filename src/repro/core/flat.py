@@ -22,7 +22,13 @@ import numpy as np
 from ..obs import get_registry, span
 from .compile import ArrayStats, PlanCache, compile_body, stats_bucket
 from .datalog import Program, Rule
-from .util import factorize_rows, multicol_member
+from .util import (
+    factorize_rows,
+    merge_sorted_rows_np,
+    multicol_member,
+    sorted_member,
+    unique_rows,
+)
 
 __all__ = ["FlatEngine", "flat_seminaive"]
 
@@ -96,11 +102,22 @@ class FlatEngine:
         max_rounds: int = 10_000,
         plan_bodies: bool = True,
         plan_cache: PlanCache | None = None,
+        fused: bool = True,
     ):
+        # ``fused=True`` (default) runs the fused round tail: one joint
+        # factorisation per (predicate, round) drives dedup (sorted
+        # membership against the already-sorted fact codes — no re-sort)
+        # and a positional merge of the survivors, replacing the legacy
+        # per-round ``np.unique(concatenate(...))`` + full-table re-sort
+        # (``fused=False``, kept as the per-step reference the benches
+        # compare against).  Both paths maintain the same invariant —
+        # ``facts[pred]`` lex-sorted unique — and produce bit-identical
+        # materialisations.
         self.program = program
         self.max_rounds = max_rounds
         self.plan_bodies = plan_bodies
         self.plan_cache = plan_cache if plan_cache is not None else PlanCache()
+        self.fused = fused
         self.facts: dict[str, np.ndarray] = {}
         self.rounds = 0
         self.time_total = 0.0
@@ -110,7 +127,7 @@ class FlatEngine:
             rows = np.asarray(rows, dtype=np.int64)
             if rows.ndim == 1:
                 rows = rows.reshape(-1, 1)
-            self.facts[pred] = np.unique(rows, axis=0)
+            self.facts[pred] = unique_rows(rows)
 
     def materialise(self) -> dict[str, np.ndarray]:
         t0 = time.perf_counter()
@@ -129,31 +146,75 @@ class FlatEngine:
                                 derived.setdefault(
                                     rule.head.predicate, []
                                 ).append(rows)
-                    new_delta: dict[str, np.ndarray] = {}
-                    for pred, blocks in derived.items():
-                        cand = np.unique(np.concatenate(blocks), axis=0)
-                        old = self.facts.get(pred)
-                        if old is not None and old.shape[0]:
-                            fresh = cand[~multicol_member(cand, old)]
-                        else:
-                            fresh = cand
-                        if fresh.shape[0]:
-                            new_delta[pred] = fresh
-                            self.facts[pred] = (
-                                np.concatenate([old, fresh])
-                                if old is not None and old.size
-                                else fresh
-                            )
-                    # facts stay sorted-unique per predicate
-                    for pred in new_delta:
-                        self.facts[pred] = np.unique(self.facts[pred], axis=0)
-                    delta = new_delta
+                    if self.fused:
+                        delta = self._absorb_fused(derived)
+                    else:
+                        delta = self._absorb_per_step(derived)
         self.rounds = rounds
         self.time_total = time.perf_counter() - t0
         reg = get_registry()
         reg.counter("flat.rounds").inc(rounds)
         reg.counter("flat.time_total").inc(self.time_total)
+        if self.fused:
+            reg.counter("flat.fused_rounds").inc(rounds)
         return self.facts
+
+    def _absorb_per_step(self, derived: dict) -> dict[str, np.ndarray]:
+        """Legacy round tail: dedup via a fresh ``np.unique`` of the
+        concatenated candidates and a full-table re-sort per predicate —
+        the per-step reference the fused path is benched against."""
+        new_delta: dict[str, np.ndarray] = {}
+        for pred, blocks in derived.items():
+            cand = np.unique(np.concatenate(blocks), axis=0)
+            old = self.facts.get(pred)
+            if old is not None and old.shape[0]:
+                fresh = cand[~multicol_member(cand, old)]
+            else:
+                fresh = cand
+            if fresh.shape[0]:
+                new_delta[pred] = fresh
+                self.facts[pred] = (
+                    np.concatenate([old, fresh])
+                    if old is not None and old.size
+                    else fresh
+                )
+        # facts stay sorted-unique per predicate
+        for pred in new_delta:
+            self.facts[pred] = np.unique(self.facts[pred], axis=0)
+        return new_delta
+
+    def _absorb_fused(self, derived: dict) -> dict[str, np.ndarray]:
+        """Fused round tail (host analogue of the ``fused_join_dedup`` +
+        ``merge_sorted_unique`` kernel pair): the facts table is kept
+        lex-sorted unique across rounds, so one joint factorisation per
+        predicate yields (a) the anti-join — a sorted-membership probe
+        against the *already sorted* fact codes, no re-sort — and (b)
+        the placement positions for an O(n+m) positional merge of the
+        survivors.  The full-table ``np.unique`` re-sort the per-step
+        path pays every round disappears entirely."""
+        new_delta: dict[str, np.ndarray] = {}
+        for pred, blocks in derived.items():
+            cand = unique_rows(
+                blocks[0] if len(blocks) == 1 else np.concatenate(blocks)
+            )
+            old = self.facts.get(pred)
+            if old is None or old.shape[0] == 0:
+                if cand.shape[0]:
+                    new_delta[pred] = cand
+                    self.facts[pred] = cand
+                continue
+            codes_cand, codes_old = factorize_rows(cand, old)
+            # facts are lex-sorted and factorize codes are order-
+            # consistent, so codes_old is already ascending
+            keep = ~sorted_member(codes_cand, codes_old)
+            if not keep.any():
+                continue
+            fresh = cand[keep]
+            new_delta[pred] = fresh
+            self.facts[pred] = merge_sorted_rows_np(
+                old, fresh, codes_old, codes_cand[keep]
+            )
+        return new_delta
 
     def _source_rows(self, pred: str, source: str, delta: dict) -> np.ndarray | None:
         """The plan's old/delta/all partitions over flat arrays."""

@@ -13,7 +13,10 @@ __all__ = [
     "factorize_rows",
     "multicol_member",
     "first_occurrence_mask",
+    "merge_sorted_rows_np",
+    "merge_sorted_unique_np",
     "sorted_member",
+    "unique_rows",
 ]
 
 
@@ -65,6 +68,78 @@ def multicol_member(a_rows: np.ndarray, b_rows: np.ndarray) -> np.ndarray:
         return sorted_member(a_rows, np.sort(b_rows))
     codes_a, codes_b = factorize_rows(a_rows, b_rows)
     return sorted_member(codes_a, np.sort(codes_b))
+
+
+def unique_rows(rows: np.ndarray, return_inverse: bool = False):
+    """Lexicographically sorted unique rows of an ``(n, k)`` block.
+
+    Drop-in for ``np.unique(rows, axis=0)`` with the packed-int64 fast
+    path of :func:`factorize_rows` for k <= 2: packing ``(a << 32) | b``
+    preserves lexicographic order for dictionary-range ids, so the
+    axis-unique void-view sort (~2x slower, measured in PR 3) is only
+    needed for wider rows or out-of-range values.
+    """
+    rows = np.asarray(rows)
+    n, k = rows.shape
+    if k == 1:
+        u, inv = np.unique(rows[:, 0], return_inverse=True)
+        out = u.reshape(-1, 1).astype(rows.dtype, copy=False)
+        return (out, inv) if return_inverse else out
+    if k == 2 and n and rows.min() >= 0 and rows.max() < 2**31:
+        codes = (rows[:, 0].astype(np.int64) << 32) | rows[:, 1].astype(np.int64)
+        u, inv = np.unique(codes, return_inverse=True)
+        out = np.stack([u >> 32, u & 0xFFFFFFFF], axis=1).astype(
+            rows.dtype, copy=False
+        )
+        return (out, inv) if return_inverse else out
+    if return_inverse:
+        out, inv = np.unique(rows, axis=0, return_inverse=True)
+        return out, inv.reshape(-1)
+    return np.unique(rows, axis=0)
+
+
+def merge_sorted_unique_np(old: np.ndarray, fresh: np.ndarray) -> np.ndarray:
+    """Positional merge of sorted-unique ``fresh`` values into the
+    sorted-unique array ``old`` — ``fresh`` must be disjoint from
+    ``old`` (anti-joined first).  O(m log n + n) instead of the
+    re-sort-everything O((n+m) log(n+m)) the per-round ``np.unique``
+    pays; this is the host analogue of the ``merge_sorted_unique``
+    Pallas kernel."""
+    if fresh.shape[0] == 0:
+        return old
+    if old.shape[0] == 0:
+        return fresh
+    dest = np.searchsorted(old, fresh) + np.arange(fresh.shape[0])
+    out = np.empty(old.shape[0] + fresh.shape[0], dtype=old.dtype)
+    taken = np.zeros(out.shape[0], dtype=bool)
+    taken[dest] = True
+    out[dest] = fresh
+    out[~taken] = old
+    return out
+
+
+def merge_sorted_rows_np(
+    old: np.ndarray,
+    fresh: np.ndarray,
+    codes_old: np.ndarray,
+    codes_fresh: np.ndarray,
+) -> np.ndarray:
+    """Row-block analogue of :func:`merge_sorted_unique_np`: positionally
+    merge lex-sorted-unique, disjoint ``fresh`` rows into lex-sorted-
+    unique ``old`` rows.  ``codes_*`` are jointly order-consistent row
+    codes (one :func:`factorize_rows` call) used for the placement
+    search, so no column is re-sorted."""
+    if fresh.shape[0] == 0:
+        return old
+    if old.shape[0] == 0:
+        return fresh
+    dest = np.searchsorted(codes_old, codes_fresh) + np.arange(fresh.shape[0])
+    out = np.empty((old.shape[0] + fresh.shape[0], old.shape[1]), dtype=old.dtype)
+    taken = np.zeros(out.shape[0], dtype=bool)
+    taken[dest] = True
+    out[dest] = fresh
+    out[~taken] = old
+    return out
 
 
 def first_occurrence_mask(codes: np.ndarray) -> np.ndarray:

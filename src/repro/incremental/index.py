@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from ..core.util import factorize_rows, multicol_member
+from ..core.util import factorize_rows, multicol_member, unique_rows
 
 __all__ = ["RowIndex", "merge_rows", "setdiff_rows"]
 
@@ -32,7 +32,7 @@ def merge_rows(a: np.ndarray | None, b: np.ndarray) -> np.ndarray:
     """Sorted-unique union of two row sets (``a`` may be absent)."""
     if a is None or a.shape[0] == 0:
         return b
-    return np.unique(np.concatenate([a, b]), axis=0)
+    return unique_rows(np.concatenate([a, b]))
 
 
 def setdiff_rows(a: np.ndarray, b: np.ndarray) -> np.ndarray:
@@ -56,8 +56,8 @@ class RowIndex:
         self._rows: dict[str, np.ndarray] = {}
 
     def seed(self, pred: str, rows: np.ndarray) -> None:
-        self._rows[pred] = np.unique(
-            np.asarray(rows, dtype=np.int64), axis=0
+        self._rows[pred] = unique_rows(
+            np.asarray(rows, dtype=np.int64)
         )
 
     def seed_sorted(self, pred: str, rows: np.ndarray) -> None:

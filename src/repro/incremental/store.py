@@ -54,7 +54,7 @@ from ..core.engine import CMatEngine, MaterialisationStats
 from ..core.frozen import FrozenFacts
 from ..core.metafacts import MetaFact
 from ..core.program_graph import is_recursive, stratify, stratum_predicates
-from ..core.util import multicol_member
+from ..core.util import multicol_member, unique_rows
 from ..obs import publish_incremental, span
 from .dred import dred_stratum
 from .eval import (
@@ -105,7 +105,7 @@ def normalise_batch(batch) -> dict[str, np.ndarray]:
         if rows.ndim == 1:
             rows = rows.reshape(-1, 1)
         if rows.shape[0]:
-            out[pred] = np.unique(rows, axis=0)
+            out[pred] = unique_rows(rows)
     return out
 
 
@@ -518,7 +518,7 @@ class IncrementalStore:
         for pred, blocks in acc.items():
             all_rows = np.concatenate([r for r, _ in blocks])
             all_cnts = np.concatenate([c for _, c in blocks])
-            uniq, inv = np.unique(all_rows, axis=0, return_inverse=True)
+            uniq, inv = unique_rows(all_rows, return_inverse=True)
             lost = np.bincount(inv, weights=all_cnts).astype(np.int64)
             pos = self.rows.positions(pred, uniq)
             np.subtract.at(self.counts[pred], pos, lost)
@@ -592,7 +592,7 @@ class IncrementalStore:
         for pred, blocks in acc.items():
             all_rows = np.concatenate([r for r, _ in blocks])
             all_cnts = np.concatenate([c for _, c in blocks])
-            uniq, inv = np.unique(all_rows, axis=0, return_inverse=True)
+            uniq, inv = unique_rows(all_rows, return_inverse=True)
             gained = np.bincount(inv, weights=all_cnts).astype(np.int64)
             present = self.rows.member_mask(pred, uniq)
             if present.any():
@@ -656,7 +656,7 @@ class IncrementalStore:
 
             new_delta: dict[str, list] = {}
             for pred, blocks in derived.items():
-                cand = np.unique(np.concatenate(blocks), axis=0)
+                cand = unique_rows(np.concatenate(blocks))
                 fresh = cand[~self.rows.member_mask(pred, cand)]
                 if fresh.shape[0]:
                     mfs = self.add_rows(pred, fresh)

@@ -16,7 +16,18 @@ from .lookup import in_set
 
 __all__ = ["in_set", "ops", "ref"]
 
-_LAZY_MODULES = ("join_bounds", "lookup", "ops", "ref", "rle_expand", "sorted_member")
+_LAZY_MODULES = (
+    "backend",
+    "buffers",
+    "fused",
+    "join_bounds",
+    "lookup",
+    "ops",
+    "ref",
+    "rle_expand",
+    "sorted_member",
+    "tune",
+)
 
 
 def __getattr__(name):

@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .backend import resolve_interpret
+
 DEFAULT_BLOCK_L = 512
 DEFAULT_BLOCK_R = 1024
 _SENTINEL = jnp.iinfo(jnp.int32).max
@@ -60,18 +62,37 @@ def _bounds_kernel(l_ref, r_ref, lo_ref, hi_ref, *, block_r: int):
         )
 
 
-@functools.partial(
-    jax.jit, static_argnames=("block_l", "block_r", "interpret")
-)
 def join_bounds(
     l_keys: jax.Array,
     r_sorted: jax.Array,
     *,
     block_l: int = DEFAULT_BLOCK_L,
     block_r: int = DEFAULT_BLOCK_R,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
-    """Return (lo, hi) spans of each left key in the sorted right keys."""
+    """Return (lo, hi) spans of each left key in the sorted right keys.
+
+    ``interpret=None`` resolves per backend/env outside the jit."""
+    return _join_bounds_jit(
+        l_keys,
+        r_sorted,
+        block_l=block_l,
+        block_r=block_r,
+        interpret=resolve_interpret(interpret),
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_l", "block_r", "interpret")
+)
+def _join_bounds_jit(
+    l_keys: jax.Array,
+    r_sorted: jax.Array,
+    *,
+    block_l: int,
+    block_r: int,
+    interpret: bool,
+) -> tuple[jax.Array, jax.Array]:
     n, m = l_keys.shape[0], r_sorted.shape[0]
     if n == 0:
         z = jnp.zeros((0,), dtype=jnp.int32)

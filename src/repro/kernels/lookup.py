@@ -20,14 +20,14 @@ def in_set(
     constants: np.ndarray,
     *,
     use_pallas: bool = False,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> np.ndarray:
     """Boolean mask ``values[i] in constants``.
 
-    ``use_pallas=True`` routes through the ``sorted_member`` Pallas kernel
-    (``interpret=True`` runs its body on CPU for validation; pass
-    ``interpret=False`` on TPU).  The numpy path is the default for the
-    host-only serving driver.
+    ``use_pallas=True`` routes through the ``sorted_member`` Pallas
+    kernel; ``interpret=None`` resolves per backend/env (see
+    :mod:`repro.kernels.backend`).  The numpy path is the default for
+    the host-only serving driver.
     """
     values = np.asarray(values, dtype=np.int64)
     constants = np.asarray(constants, dtype=np.int64)

@@ -26,3 +26,52 @@ def join_bounds_ref(l_keys: jax.Array, r_sorted: jax.Array):
     lo = jnp.searchsorted(r_sorted, l_keys, side="left").astype(jnp.int32)
     hi = jnp.searchsorted(r_sorted, l_keys, side="right").astype(jnp.int32)
     return lo, hi
+
+
+_BIG = np.iinfo(np.int32).max
+
+
+def fused_join_dedup_ref(
+    l_keys, l_payload, r_keys_sorted, r_payload, *, capacity: int
+):
+    """Host reference for the fused join→dedup kernel.
+
+    Mirrors the kernel exactly — including the truncation contract: pairs
+    are enumerated in left-major order and only the first ``capacity``
+    survive before dedup, so a truncated kernel call and this reference
+    stay bit-identical.  Returns ``(out, count, total)`` as numpy.
+    """
+    l_keys = np.asarray(l_keys, dtype=np.int64)
+    l_payload = np.asarray(l_payload, dtype=np.int64)
+    r_keys = np.asarray(r_keys_sorted, dtype=np.int64)
+    r_payload = np.asarray(r_payload, dtype=np.int64)
+    out = np.full(capacity, _BIG, dtype=np.int32)
+    if l_keys.shape[0] == 0 or r_keys.shape[0] == 0 or capacity == 0:
+        return out, 0, 0
+    lo = np.searchsorted(r_keys, l_keys, side="left")
+    hi = np.searchsorted(r_keys, l_keys, side="right")
+    pairs = []
+    for i in range(l_keys.shape[0]):
+        for j in range(int(lo[i]), int(hi[i])):
+            pairs.append((int(l_payload[i]) << 16) | (int(r_payload[j]) & 0xFFFF))
+    total = len(pairs)
+    uniq = np.unique(np.asarray(pairs[:capacity], dtype=np.int32))
+    out[: uniq.shape[0]] = uniq
+    return out, int(uniq.shape[0]), total
+
+
+def merge_sorted_unique_ref(buf, fresh):
+    """Host reference for the in-place sorted-unique merge.
+
+    ``buf`` is sorted unique padded with int32-max; ``fresh`` likewise.
+    Returns ``(merged, count, n_new)`` with ``merged`` the same length
+    as ``buf``.
+    """
+    buf = np.asarray(buf, dtype=np.int32)
+    fresh = np.asarray(fresh, dtype=np.int32)
+    cap = buf.shape[0]
+    old = buf[buf != _BIG]
+    merged = np.unique(np.concatenate([old, fresh[fresh != _BIG]]))
+    out = np.full(cap, _BIG, dtype=np.int32)
+    out[: min(cap, merged.shape[0])] = merged[:cap]
+    return out, int(merged.shape[0]), int(merged.shape[0] - old.shape[0])

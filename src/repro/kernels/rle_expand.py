@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .backend import resolve_interpret
+
 DEFAULT_BLOCK_OUT = 1024
 _END_SENTINEL = jnp.iinfo(jnp.int32).max
 
@@ -38,22 +40,40 @@ def _rle_kernel(ends_ref, vals_ref, o_ref, *, block_out: int):
     o_ref[...] = jnp.take(vals, run)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("total", "block_out", "interpret")
-)
 def rle_expand(
     run_values: jax.Array,
     run_counts: jax.Array,
     *,
     total: int,
     block_out: int = DEFAULT_BLOCK_OUT,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Expand RLE runs into ``total`` output elements.
 
     ``total`` must equal ``run_counts.sum()`` (static, host-known — meta-
     constant lengths are part of the representation).
+    ``interpret=None`` resolves per backend/env outside the jit.
     """
+    return _rle_expand_jit(
+        run_values,
+        run_counts,
+        total=total,
+        block_out=block_out,
+        interpret=resolve_interpret(interpret),
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("total", "block_out", "interpret")
+)
+def _rle_expand_jit(
+    run_values: jax.Array,
+    run_counts: jax.Array,
+    *,
+    total: int,
+    block_out: int,
+    interpret: bool,
+) -> jax.Array:
     r = run_values.shape[0]
     if total == 0 or r == 0:
         return jnp.zeros((0,), dtype=jnp.int32)

@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .backend import resolve_interpret
+
 DEFAULT_BLOCK_A = 512
 DEFAULT_BLOCK_B = 1024
 _SENTINEL = jnp.iinfo(jnp.int32).max  # caller guarantees ids < sentinel
@@ -50,22 +52,40 @@ def _member_kernel(a_ref, b_ref, o_ref):
         o_ref[...] = jnp.logical_or(o_ref[...], hit)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("block_a", "block_b", "interpret")
-)
 def sorted_member(
     a: jax.Array,
     b_sorted: jax.Array,
     *,
     block_a: int = DEFAULT_BLOCK_A,
     block_b: int = DEFAULT_BLOCK_B,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """``out[i] = a[i] in b_sorted``; ``b_sorted`` ascending int32.
 
-    ``interpret=True`` runs the kernel body on CPU (validation); on TPU
-    pass ``interpret=False``.
+    ``interpret=None`` resolves per backend/env (see
+    :mod:`repro.kernels.backend`) — outside the jit, so the trace cache
+    keys on the concrete bool and an env flip takes effect immediately.
     """
+    return _sorted_member_jit(
+        a,
+        b_sorted,
+        block_a=block_a,
+        block_b=block_b,
+        interpret=resolve_interpret(interpret),
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_a", "block_b", "interpret")
+)
+def _sorted_member_jit(
+    a: jax.Array,
+    b_sorted: jax.Array,
+    *,
+    block_a: int,
+    block_b: int,
+    interpret: bool,
+) -> jax.Array:
     n, m = a.shape[0], b_sorted.shape[0]
     if n == 0:
         return jnp.zeros((0,), dtype=bool)

@@ -93,7 +93,7 @@ class QueryEngine:
         plan_cache_size: int = 256,
         result_cache_size: int = 1024,
         use_pallas: bool = False,
-        interpret: bool = True,
+        interpret: bool | None = None,
     ):
         self.frozen = self._resolve_frozen(source)
         self.dictionary = dictionary

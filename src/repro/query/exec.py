@@ -39,6 +39,7 @@ from ..core.compress import compress_rows
 from ..core.datalog import Atom
 from ..core.frozen import FrozenFacts
 from ..core.joins import SubstSet, _unfold_cols, match, sjoin, xjoin
+from ..core.util import unique_rows
 from ..kernels.lookup import in_set
 from .ast import Query
 from .plan import SCAN_INDEX, Plan, ScanStep
@@ -123,12 +124,14 @@ def execute(
     frozen: FrozenFacts,
     *,
     use_pallas: bool = False,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> tuple[np.ndarray, ExecStats]:
     """Evaluate a plan; returns ``(answers, stats)``.
 
     ``answers`` is a sorted, duplicate-free ``(n, len(projection))`` int64
     array; for ASK queries the shape is ``(1, 0)`` (true) or ``(0, 0)``.
+    ``interpret=None`` resolves per backend/env when the Pallas path is
+    used (see :mod:`repro.kernels.backend`).
     """
     stats = ExecStats()
     t0 = time.perf_counter()
@@ -180,7 +183,7 @@ def _scan(
     counting: _CountingStore,
     stats: ExecStats,
     use_pallas: bool,
-    interpret: bool,
+    interpret: bool | None,
 ) -> SubstSet:
     atom = step.atom
     pred = atom.predicate
@@ -221,7 +224,7 @@ def _indexed_rows(
     frozen: FrozenFacts,
     atom: Atom,
     use_pallas: bool,
-    interpret: bool,
+    interpret: bool | None,
     stats: ExecStats,
 ) -> np.ndarray:
     """Flat snapshot rows matching an atom's constants / repeated vars,
@@ -263,7 +266,7 @@ def _project(query: Query, L: SubstSet | None, counting: _CountingStore) -> np.n
         return np.zeros((1, 0), dtype=np.int64)
     idx = [L.vars.index(v) for v in query.projection]
     rows = _unfold_cols(counting, L.items, idx)
-    return np.unique(rows, axis=0)
+    return unique_rows(rows)
 
 
 def _empty_answers(query: Query) -> np.ndarray:

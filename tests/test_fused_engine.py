@@ -1,0 +1,130 @@
+"""Engine-level parity for the PR 7 fused fast path.
+
+Both fused round tails (FlatEngine's host analogue and CMatEngine's
+flat-tail xjoin emission) must produce materialisations bit-identical
+to their per-step references on every generator workload — including
+the cross-product-heavy ones where the fused path is slower but must
+still be correct — plus the ``unique_rows`` / positional-merge helpers
+they are built from."""
+
+import numpy as np
+import pytest
+from numpy.testing import assert_array_equal
+
+from repro.core import CMatEngine, FlatEngine
+from repro.core.generators import (
+    bipartite,
+    chain,
+    lubm_like,
+    paper_example,
+    star,
+)
+from repro.core.util import (
+    factorize_rows,
+    merge_sorted_rows_np,
+    merge_sorted_unique_np,
+    unique_rows,
+)
+
+WORKLOADS = [
+    ("paper", lambda: paper_example(n=30, m=20)),
+    ("chain", lambda: chain(n=60)),
+    ("lubm", lambda: lubm_like(n_dept=4, n_students=60, n_courses=10)),
+    ("star", lambda: star(n_spokes=80, n_hubs=3)),
+    ("bipartite", lambda: bipartite(n_left=30, n_right=30)),
+]
+
+
+def _flat_mat(program, dataset, fused):
+    eng = FlatEngine(program, fused=fused)
+    eng.load(dataset)
+    return eng.materialise()
+
+
+def _cmat_mat(program, dataset, **kw):
+    eng = CMatEngine(program, **kw)
+    eng.load(dataset)
+    eng.materialise()
+    return {p: np.unique(r, axis=0) for p, r in eng.materialisation().items()}
+
+
+@pytest.mark.parametrize("name,gen", WORKLOADS)
+def test_flat_fused_round_tail_bit_identical(name, gen):
+    program, dataset, _ = gen()
+    per_step = _flat_mat(program, dataset, fused=False)
+    fused = _flat_mat(program, dataset, fused=True)
+    assert set(per_step) == set(fused)
+    for pred in per_step:
+        assert_array_equal(per_step[pred], fused[pred])
+
+
+@pytest.mark.parametrize("name,gen", WORKLOADS)
+def test_cmat_fused_parity(name, gen):
+    program, dataset, _ = gen()
+    base = _cmat_mat(program, dataset)
+    fused = _cmat_mat(program, dataset, fused=True)
+    flat = _flat_mat(program, dataset, fused=True)
+    assert set(base) == set(fused) == set(flat)
+    for pred in base:
+        assert_array_equal(base[pred], fused[pred])
+        assert_array_equal(base[pred], np.asarray(flat[pred]))
+
+
+def test_cmat_fused_wide_join_falls_back():
+    """fused_max_pairs=0 forces every final xjoin over the cap, so the
+    structure-shared fallback carries the whole round — results must
+    not change."""
+    program, dataset, _ = chain(n=40)
+    base = _cmat_mat(program, dataset)
+    capped = _cmat_mat(program, dataset, fused=True, fused_max_pairs=0)
+    for pred in base:
+        assert_array_equal(base[pred], capped[pred])
+
+
+def test_cmat_fused_counts_fused_rounds():
+    from repro.obs import get_registry
+
+    reg = get_registry()
+    reg.reset("cmat.")
+    program, dataset, _ = chain(n=20)
+    _cmat_mat(program, dataset, fused=True)
+    assert reg.snapshot("cmat.").get("cmat.fused_rounds", 0) > 0
+
+
+class TestUniqueRows:
+    @pytest.mark.parametrize("k", [1, 2, 3])
+    def test_matches_np_unique_axis0(self, k):
+        rng = np.random.default_rng(k)
+        rows = rng.integers(0, 50, size=(200, k)).astype(np.int64)
+        u, inv = unique_rows(rows, return_inverse=True)
+        ru, rinv = np.unique(rows, axis=0, return_inverse=True)
+        assert_array_equal(u, ru)
+        assert_array_equal(inv, rinv.reshape(-1))
+        assert_array_equal(unique_rows(rows), ru)
+
+    def test_wide_values_fall_back(self):
+        rows = np.array([[2**40, 1], [0, 2], [2**40, 1]], dtype=np.int64)
+        assert_array_equal(unique_rows(rows), np.unique(rows, axis=0))
+
+    def test_empty(self):
+        rows = np.zeros((0, 2), dtype=np.int64)
+        assert unique_rows(rows).shape == (0, 2)
+
+
+class TestPositionalMerge:
+    def test_merge_sorted_unique_np(self):
+        rng = np.random.default_rng(0)
+        old = np.unique(rng.integers(0, 1000, size=80))
+        fresh = np.setdiff1d(np.unique(rng.integers(0, 1000, size=40)), old)
+        out = merge_sorted_unique_np(old, fresh)
+        assert_array_equal(out, np.union1d(old, fresh))
+
+    def test_merge_sorted_rows_np(self):
+        rng = np.random.default_rng(1)
+        old = unique_rows(rng.integers(0, 60, size=(50, 2)).astype(np.int64))
+        cand = unique_rows(rng.integers(0, 60, size=(30, 2)).astype(np.int64))
+        codes_cand, codes_old = factorize_rows(cand, old)
+        keep = ~np.isin(codes_cand, codes_old)
+        out = merge_sorted_rows_np(old, cand[keep], codes_old, codes_cand[keep])
+        expect = np.unique(np.concatenate([old, cand]), axis=0)
+        assert_array_equal(out, expect)

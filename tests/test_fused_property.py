@@ -1,0 +1,58 @@
+"""Hypothesis property tests for the fused Pallas kernels vs the
+numpy oracles in :mod:`repro.kernels.ref` (the seeded-loop versions in
+``test_fused_kernels.py`` cover containers without hypothesis)."""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from numpy.testing import assert_array_equal
+
+from repro.kernels import ref
+from repro.kernels.buffers import BIG_NP
+from repro.kernels.fused import fused_join_dedup, merge_sorted_unique
+
+keys_st = st.lists(st.integers(0, 50), min_size=0, max_size=80)
+
+
+@given(
+    lk=keys_st,
+    rk=keys_st,
+    seed=st.integers(0, 2**31 - 1),
+    capacity=st.sampled_from([1, 7, 64, 256, 1000]),
+)
+@settings(max_examples=60, deadline=None)
+def test_fused_join_dedup_matches_ref(lk, rk, seed, capacity):
+    rng = np.random.default_rng(seed)
+    l_keys = np.asarray(lk, dtype=np.int32)
+    r_keys = np.sort(np.asarray(rk, dtype=np.int32))
+    l_pay = rng.integers(0, 2**15, size=l_keys.size).astype(np.int32)
+    r_pay = rng.integers(0, 2**16, size=r_keys.size).astype(np.int32)
+    out, cnt, tot = fused_join_dedup(
+        l_keys, l_pay, r_keys, r_pay, capacity=capacity
+    )
+    r_out, r_cnt, r_tot = ref.fused_join_dedup_ref(
+        l_keys, l_pay, r_keys, r_pay, capacity=capacity
+    )
+    assert int(tot[0]) == r_tot
+    assert int(cnt[0]) == r_cnt
+    assert_array_equal(np.asarray(out), r_out)
+
+
+@given(
+    buf_vals=st.lists(st.integers(0, 2**30), max_size=60, unique=True),
+    fresh_vals=st.lists(st.integers(0, 2**30), max_size=60, unique=True),
+)
+@settings(max_examples=60, deadline=None)
+def test_merge_sorted_unique_matches_ref(buf_vals, fresh_vals):
+    buf = np.full(128, BIG_NP, np.int32)
+    sv = np.sort(np.asarray(buf_vals, dtype=np.int32))
+    buf[: sv.size] = sv
+    fresh = np.sort(np.asarray(fresh_vals, dtype=np.int32))
+    merged, cnt, n_new = merge_sorted_unique(buf, fresh)
+    r_merged, r_cnt, r_new = ref.merge_sorted_unique_ref(buf, fresh)
+    assert int(cnt[0]) == r_cnt
+    assert int(n_new[0]) == r_new
+    assert_array_equal(np.asarray(merged), r_merged)
