@@ -1,0 +1,107 @@
+"""Memory bench: per-predicate compressed-vs-flat bytes + peak watermarks.
+
+The paper's Tables 1/3 argue by *final* representation size; this bench
+adds the obs.memory view of the same runs — what the store costs per
+predicate (mu-DAG bytes vs the flat-equivalent rows x arity x 8, the
+cross-predicate sharing factor, the RLE run length) and what the
+materialisation costs at its *peak* (the high-water resident bytes the
+:class:`repro.obs.memory.MemorySampler` records at round boundaries).
+
+Rows come in two shapes, keyed by ``pred``:
+
+- one row per predicate (plus the ``_total`` cross-predicate summary)
+  with the compression-effectiveness columns,
+- one ``_peak`` row per KB with resident/peak-resident bytes and the
+  sampler's self-metered overhead.
+
+Peaks are reporter-derived byte counts (``rss=False``), so the numbers
+are deterministic and the regression gate can hold them to ±10%
+(``peak_resident_bytes`` / ``compression_ratio`` in
+:mod:`benchmarks.compare`); kernel RSS never enters the rows.
+"""
+
+from __future__ import annotations
+
+import gc
+
+from repro.core import CMatEngine
+from repro.core.generators import chain, lubm_like
+from repro.obs.memory import (
+    MemorySampler,
+    predicate_effectiveness,
+    publish_predicate_effectiveness,
+    sample_memory,
+)
+
+WORKLOADS = [
+    ("lubm-like", lambda: lubm_like(n_dept=30, n_students=1500, n_courses=120)),
+    ("chain-TC", lambda: chain(n=300)),
+]
+
+SMOKE_WORKLOADS = [
+    ("lubm-like", lambda: lubm_like(n_dept=4, n_students=60, n_courses=10)),
+    ("chain-TC", lambda: chain(n=30)),
+]
+
+
+def run_one(name, gen):
+    program, dataset, _ = gen()
+    with MemorySampler(rss=False) as sampler:
+        eng = CMatEngine(program)
+        eng.load(dataset)
+        eng.materialise()
+    final = sample_memory(rss=False)
+    eff = predicate_effectiveness(eng.facts)
+    publish_predicate_effectiveness(eng.facts)  # mem.pred.* for the gate
+    rows = [
+        {
+            "kb": name,
+            "pred": pred,
+            "flat_bytes": int(e["flat_bytes"]),
+            "mu_bytes": int(e["mu_bytes"]),
+            "compression_ratio": round(e["compression_ratio"], 4),
+            "sharing_factor": round(e["sharing_factor"], 4),
+            "rle_ratio": round(e["rle_ratio"], 4),
+        }
+        for pred, e in sorted(eff.items())
+    ]
+    peak_row = {
+        "kb": name,
+        "pred": "_peak",
+        "resident_bytes": int(final["resident_bytes"]),
+        "peak_resident_bytes": int(
+            max([*sampler.peaks.values(), final["resident_bytes"]])
+        ),
+        "samples": sampler.samples,
+        "sampler_s": round(sampler.time_ns / 1e9, 4),
+    }
+    return rows, peak_row
+
+
+def run(csv=True, smoke=False):
+    # previous benches' engines register weakly with the accountant;
+    # collect them so this bench's resident/peak numbers start clean
+    gc.collect()
+    rows: list[dict] = []
+    peaks: list[dict] = []
+    for name, gen in (SMOKE_WORKLOADS if smoke else WORKLOADS):
+        pred_rows, peak_row = run_one(name, gen)
+        rows.extend(pred_rows)
+        peaks.append(peak_row)
+    if csv:
+        cols = ["kb", "pred", "flat_bytes", "mu_bytes", "compression_ratio",
+                "sharing_factor", "rle_ratio"]
+        print(",".join(cols))
+        for r in rows:
+            print(",".join(str(r[c]) for c in cols))
+        for p in peaks:
+            print(
+                f"{p['kb']}: resident {p['resident_bytes']}B, "
+                f"peak {p['peak_resident_bytes']}B "
+                f"({p['samples']} samples, {p['sampler_s']}s in sampler)"
+            )
+    return rows + peaks
+
+
+if __name__ == "__main__":
+    run()

@@ -16,8 +16,11 @@ For every bench present in both files the gate compares
 * **counter metrics** — each bench's ``"metrics"`` registry snapshot
   (written by ``run.py``) is gated for the counters in
   :data:`METRIC_GATES` — ``rows_joined``, ``exchanges_skipped``,
-  ``rule_applications_skipped`` — with per-metric relative tolerances
-  (override with ``--metric-tolerance name=tol``).  These counters are
+  ``rule_applications_skipped``, plus the obs.memory byte gates
+  ``peak_resident_bytes`` / ``compression_ratio`` — with per-metric
+  relative tolerances (override with ``--metric-tolerance name=tol``;
+  NAME may be a bare last segment, a full dotted name, or a glob such
+  as ``mem.*=0.2``).  These counters are
   deterministic for a fixed seed, so movement in *either* direction
   beyond tolerance fails the gate: silently joining 2x more rows is a
   planner regression even when wall time hides it in CI jitter.
@@ -48,6 +51,7 @@ are runner-measured rather than laptop-measured.
 from __future__ import annotations
 
 import argparse
+import fnmatch
 import json
 import sys
 
@@ -69,7 +73,26 @@ METRIC_GATES: dict[str, float] = {
     # rounds served by the fused tail (flat.fused_rounds /
     # cmat.fused_rounds): dropping to zero means the fast path un-wired
     "fused_rounds": 0.10,
+    # obs.memory gates: reporter-derived byte counts, deterministic for
+    # a fixed seed (kernel RSS never enters the gated snapshots).  The
+    # peak watermark catches a materialisation that silently starts
+    # holding 2x the store; the per-predicate compression ratio catches
+    # the mu-representation losing its edge over flat rows.
+    "peak_resident_bytes": 0.10,
+    "compression_ratio": 0.10,
 }
+
+
+def _gate_tolerance(name: str, gates: dict[str, float]) -> float | None:
+    """Tolerance for a metric: exact dotted name first, then glob
+    patterns (``mem.*``), then the bare last dotted segment."""
+    tol = gates.get(name)
+    if tol is not None:
+        return tol
+    for pat, t in gates.items():
+        if any(ch in pat for ch in "*?[") and fnmatch.fnmatch(name, pat):
+            return t
+    return gates.get(name.rsplit(".", 1)[-1])
 
 
 def _rows(bench: dict) -> list[dict]:
@@ -104,7 +127,7 @@ def _gated_metrics(new: dict, old: dict, gates: dict[str, float]):
     new_m = new.get("metrics") or {}
     old_m = old.get("metrics") or {}
     for name in sorted(set(new_m) | set(old_m)):
-        tol = gates.get(name.rsplit(".", 1)[-1])
+        tol = _gate_tolerance(name, gates)
         if tol is None:
             continue
         yield name, tol, float(old_m.get(name, 0)), float(new_m.get(name, 0))
@@ -253,7 +276,9 @@ def main(argv=None) -> int:
                     metavar="NAME=TOL",
                     help="override a gated counter's relative tolerance "
                          "(e.g. rows_joined=0.2); repeatable.  NAME is "
-                         "the metric's last dotted segment")
+                         "the metric's last dotted segment, a full "
+                         "dotted name, or a glob over full names "
+                         "(e.g. 'mem.*=0.2')")
     ap.add_argument("--json-out", default=None, metavar="PATH",
                     help="write the structured diff (CI uploads it)")
     ap.add_argument("--update-baseline", action="store_true",

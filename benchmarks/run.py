@@ -110,6 +110,7 @@ def main() -> None:
         bench_distributed,
         bench_incremental,
         bench_kernels,
+        bench_memory,
         bench_query,
         bench_representation,
         bench_roofline,
@@ -127,6 +128,7 @@ def main() -> None:
         "incremental": bench_incremental.run,        # update vs rematerialise
         "storage": bench_storage.run,                # cold vs restore, compaction
         "distributed": bench_distributed.run,        # naive vs semi-naive shards
+        "memory": bench_memory.run,                  # obs.memory accounting
     }
     from repro.obs import get_registry
 
@@ -152,6 +154,15 @@ def main() -> None:
             results[name] = {"status": "ok", "seconds": round(dt, 2)}
             if isinstance(rows, (list, dict)):
                 results[name]["rows"] = rows
+            # best-effort memory roll-up: publish mem.* gauges from
+            # whatever reporters the bench left alive (rss excluded —
+            # kernel numbers are not comparable across runners)
+            try:
+                from repro.obs import sample_memory
+
+                sample_memory(rss=False)
+            except Exception:  # noqa: BLE001 — telemetry must not fail a bench
+                pass
             metrics = {
                 k: v for k, v in registry.snapshot().items() if v
             }

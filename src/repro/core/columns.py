@@ -24,6 +24,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from ..obs.memory import register_reporter, split_owned_backed
+
 __all__ = ["ColumnStore", "rle_encode"]
 
 
@@ -71,6 +73,76 @@ class ColumnStore:
         # running counters for instrumentation
         self.n_splits = 0
         self.n_inplace_redefs = 0
+        # running byte accounting (O(1) memory_report; the invariant
+        # owned + backed == total_nbytes() is pinned in tests).  Backed
+        # = views into a snapshot blob (see obs.memory double-count
+        # rules); per-id backed bytes remembered for removal.
+        self._nbytes_owned = 0
+        self._nbytes_backed = 0
+        self._backed_by_id: dict[int, int] = {}
+        self._cache_nbytes = 0
+        register_reporter("columns", self)
+
+    # ------------------------------------------------------------------ #
+    # byte accounting (obs.memory reporter protocol)
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def _node_nbytes_of(node) -> int:
+        if isinstance(node, _Leaf):
+            return int(node.run_values.nbytes + node.run_counts.nbytes)
+        return 8 * len(node.children)
+
+    def _account_add(self, cid: int, node) -> None:
+        if isinstance(node, _Leaf):
+            owned, backed = split_owned_backed(
+                (node.run_values, node.run_counts)
+            )
+        else:
+            owned, backed = 8 * len(node.children), 0
+        self._nbytes_owned += owned
+        self._nbytes_backed += backed
+        if backed:
+            self._backed_by_id[cid] = backed
+
+    def _account_remove(self, cid: int, node) -> None:
+        backed = self._backed_by_id.pop(cid, 0)
+        self._nbytes_backed -= backed
+        self._nbytes_owned -= self._node_nbytes_of(node) - backed
+
+    def _cache_set(self, cid: int, values: np.ndarray) -> None:
+        prev = self._unfold_cache.get(cid)
+        if prev is not None:
+            self._cache_nbytes -= int(prev.nbytes)
+        self._unfold_cache[cid] = values
+        self._cache_nbytes += int(values.nbytes)
+
+    def _cache_drop(self, cid: int) -> None:
+        prev = self._unfold_cache.pop(cid, None)
+        if prev is not None:
+            self._cache_nbytes -= int(prev.nbytes)
+
+    def recount_bytes(self) -> None:
+        """Rebuild the running counters from the node table — used after
+        compaction swaps the guts of a store wholesale."""
+        self._nbytes_owned = 0
+        self._nbytes_backed = 0
+        self._backed_by_id = {}
+        for cid, node in self._nodes.items():
+            self._account_add(cid, node)
+        self._cache_nbytes = sum(
+            int(a.nbytes) for a in self._unfold_cache.values()
+        )
+
+    def memory_report(self) -> dict[str, int]:
+        """O(1) byte report (obs.memory): owned node payload bytes,
+        snapshot-backed node bytes (views into a blob, counted once),
+        unfold-cache bytes, and the node count."""
+        return {
+            "nodes_bytes": self._nbytes_owned,
+            "nodes_snapshot_backed_bytes": self._nbytes_backed,
+            "unfold_cache_bytes": self._cache_nbytes,
+            "n_nodes": len(self._nodes),
+        }
 
     # ------------------------------------------------------------------ #
     # constructors
@@ -91,16 +163,20 @@ class ColumnStore:
         values = np.asarray(values, dtype=np.int64)
         rv, rc = rle_encode(values)
         cid = self._fresh()
-        self._nodes[cid] = _Leaf(rv, rc)
-        self._unfold_cache[cid] = values
+        node = _Leaf(rv, rc)
+        self._nodes[cid] = node
+        self._account_add(cid, node)
+        self._cache_set(cid, values)
         return cid
 
     def new_leaf_rle(self, run_values: np.ndarray, run_counts: np.ndarray) -> int:
         cid = self._fresh()
-        self._nodes[cid] = _Leaf(
+        node = _Leaf(
             np.asarray(run_values, dtype=np.int64),
             np.asarray(run_counts, dtype=np.int64),
         )
+        self._nodes[cid] = node
+        self._account_add(cid, node)
         return cid
 
     def new_constant(self, value: int, count: int) -> int:
@@ -114,7 +190,9 @@ class ColumnStore:
             return children[0]
         length = sum(self.length(c) for c in children)
         cid = self._fresh()
-        self._nodes[cid] = _Concat(list(children), length)
+        node = _Concat(list(children), length)
+        self._nodes[cid] = node
+        self._account_add(cid, node)
         for c in children:
             self._parents.setdefault(c, set()).add(cid)
         return cid
@@ -261,6 +339,69 @@ class ColumnStore:
         return self._nodes.keys()
 
     # ------------------------------------------------------------------ #
+    # on-demand deep stats (compression effectiveness; O(n) — called at
+    # compaction epochs and by the memory bench, never per-sample)
+    # ------------------------------------------------------------------ #
+    def leaf_rle_stats(self, ids) -> tuple[int, int]:
+        """``(cells, runs)`` over the leaf nodes among ``ids`` — the RLE
+        ratio ``cells / runs`` is the average run length."""
+        cells = runs = 0
+        for cid in ids:
+            node = self._nodes[cid]
+            if isinstance(node, _Leaf):
+                cells += node.length
+                runs += int(node.run_values.shape[0])
+        return cells, runs
+
+    def expanded_nbytes(self, roots) -> int:
+        """Tree-expanded bytes: each node counted once per *path* from
+        the roots — what storage would cost with no DAG sharing.  The
+        ratio against the deduplicated byte count is the sharing factor."""
+        memo: dict[int, int] = {}
+        total = 0
+        for root in roots:
+            stack: list[tuple[int, bool]] = [(root, False)]
+            while stack:
+                cid, expanded = stack.pop()
+                if not expanded and cid in memo:
+                    continue
+                node = self._nodes[cid]
+                if isinstance(node, _Leaf):
+                    memo[cid] = self._node_nbytes_of(node)
+                elif expanded:
+                    memo[cid] = 8 * len(node.children) + sum(
+                        memo[c] for c in node.children
+                    )
+                else:
+                    stack.append((cid, True))
+                    stack.extend(
+                        (c, False) for c in node.children if c not in memo
+                    )
+            total += memo[root]
+        return total
+
+    def live_dead_nbytes(self, roots) -> tuple[int, int]:
+        """``(live_bytes, dead_bytes)``: bytes reachable from ``roots``
+        vs bytes of garbage nodes compaction would reclaim."""
+        live = sum(self.node_nbytes(c) for c in self.reachable(roots))
+        return live, self.total_nbytes() - live
+
+    def dedup_savings_bytes(self) -> int:
+        """Bytes duplicate leaf payloads currently waste — what the
+        compactor's content-hash resharing would reclaim."""
+        seen: set[tuple[bytes, bytes]] = set()
+        save = 0
+        for node in self._nodes.values():
+            if not isinstance(node, _Leaf):
+                continue
+            key = (node.run_values.tobytes(), node.run_counts.tobytes())
+            if key in seen:
+                save += self._node_nbytes_of(node)
+            else:
+                seen.add(key)
+        return save
+
+    # ------------------------------------------------------------------ #
     # unfolding
     # ------------------------------------------------------------------ #
     def unfold(self, cid: int) -> np.ndarray:
@@ -274,18 +415,18 @@ class ColumnStore:
         else:
             parts = [self.unfold(c) for c in node.children]
             out = np.concatenate(parts) if parts else np.zeros(0, dtype=np.int64)
-        self._unfold_cache[cid] = out
+        self._cache_set(cid, out)
         return out
 
     def drop_caches(self) -> None:
         self._unfold_cache.clear()
+        self._cache_nbytes = 0
 
     def _invalidate_up(self, cid: int) -> None:
         stack = [cid]
         while stack:
             c = stack.pop()
-            if c in self._unfold_cache:
-                del self._unfold_cache[c]
+            self._cache_drop(c)
             stack.extend(self._parents.get(c, ()))
 
     # ------------------------------------------------------------------ #
@@ -356,7 +497,10 @@ class ColumnStore:
             b_out = self.new_leaf(vals[~sub])
             visited[cid] = b_in
             # redefine mu(cid) := b_in . b_out  (paper, Alg. 4 line 51)
-            self._nodes[cid] = _Concat([b_in, b_out], n)
+            self._account_remove(cid, node)
+            redefined = _Concat([b_in, b_out], n)
+            self._nodes[cid] = redefined
+            self._account_add(cid, redefined)
             self._parents.setdefault(b_in, set()).add(cid)
             self._parents.setdefault(b_out, set()).add(cid)
             self._invalidate_up(cid)
@@ -397,7 +541,8 @@ class ColumnStore:
             node = self._nodes.pop(cid, None)
             if node is None:
                 continue
-            self._unfold_cache.pop(cid, None)
+            self._account_remove(cid, node)
+            self._cache_drop(cid)
             self._parents.pop(cid, None)
             if isinstance(node, _Concat):
                 for child in node.children:

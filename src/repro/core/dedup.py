@@ -86,6 +86,11 @@ class DedupIndex:
             self._packed[pred] = np.sort(index)
         return keep
 
+    def nbytes(self) -> int:
+        """Resident bytes of the packed index — the O(|I|) extra memory
+        this speed trade costs (obs.memory accounting)."""
+        return sum(int(a.nbytes) for a in self._packed.values())
+
 
 def elim_dup(
     candidates: dict[str, list[tuple[tuple[int, ...], int]]],

@@ -26,6 +26,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from ..obs import get_registry, publish_materialisation, span
+from ..obs.memory import register_reporter
 from .columns import ColumnStore
 from .compile import FactStoreStats, Plan, PlanCache, compile_body, stats_bucket
 from .compress import compress_rows
@@ -195,6 +196,28 @@ class CMatEngine:
             from .dedup import DedupIndex
 
             self._dedup_index = DedupIndex() if dedup_index else None
+        # obs.memory: the engine reports its side structures; the
+        # ColumnStore and a FactBuffers dedup index self-register
+        register_reporter("cmat", self)
+
+    def memory_report(self) -> dict[str, int]:
+        """obs.memory reporter: explicit rows, lazy old-partition
+        snapshots, and a ``DedupIndex`` (which, unlike ``FactBuffers``,
+        does not register itself)."""
+        out = {
+            "explicit_bytes": sum(
+                int(r.nbytes) for r in self._explicit.values()
+            ),
+            "old_snapshot_bytes": (
+                0
+                if self._old_snaps is None
+                else sum(sr.nbytes for sr in self._old_snaps._snap.values())
+            ),
+        }
+        idx = self._dedup_index
+        if idx is not None and not hasattr(idx, "memory_report"):
+            out["dedup_index_bytes"] = idx.nbytes()
+        return out
 
     # ------------------------------------------------------------------ #
     def load(self, dataset: dict[str, np.ndarray]) -> None:
@@ -514,7 +537,12 @@ class CMatEngine:
         if R.is_empty():
             return None
         t0 = time.perf_counter()
-        rows = self._xjoin_head_rows(L, R, last.key_vars, rule.head)
+        with span("cmat.fused_tail", head=rule.head.predicate) as sp:
+            rows = self._xjoin_head_rows(L, R, last.key_vars, rule.head, sp)
+            sp.set(
+                rows=0 if rows is None else int(rows.shape[0]),
+                fallback=rows is None,
+            )
         self.stats.time_join += time.perf_counter() - t0
         if rows is None:  # too wide: fall back to the compressed xjoin
             t0 = time.perf_counter()
@@ -529,6 +557,7 @@ class CMatEngine:
         right: SubstSet,
         key_vars: tuple[str, ...],
         head,
+        sp=None,
     ) -> np.ndarray | None:
         """Cross-join ``left`` x ``right`` on ``key_vars`` and project the
         rule head in one pass, returning flat ``(n, arity)`` rows — no
@@ -546,6 +575,8 @@ class CMatEngine:
         hi = np.searchsorted(codes_r_s, codes_l, side="right")
         counts = hi - lo
         total = int(counts.sum())
+        if sp is not None:
+            sp.set(pairs=total)
         if total == 0:
             return np.zeros((0, len(head.terms)), dtype=np.int64)
         if total > self.fused_max_pairs:
@@ -587,18 +618,27 @@ class CMatEngine:
         are caught) and compress only the genuinely-new rows — once per
         predicate, not once per leaf group."""
         delta: list[MetaFact] = []
-        for pred, blocks in sorted(flat_candidates.items()):
-            rows = blocks[0] if len(blocks) == 1 else np.concatenate(blocks)
-            keep = self._dedup_index.fresh_mask(pred, rows)
-            # arity <= 2 is guaranteed by the fused-tail gate, so the
-            # packed fast path never falls back
-            assert keep is not None, "fused tail emitted unpackable arity"
-            if not keep.any():
-                continue
-            # fresh_mask already dropped in-block duplicates (first-
-            # occurrence) — survivors are unique, compress sorts its way
-            for cols, length in compress_rows(rows[keep], self.store):
-                delta.append(MetaFact(pred, cols, length, round=round_no))
+        rows_in = rows_fresh = 0
+        with span(
+            "cmat.fused_dedup", round=round_no, preds=len(flat_candidates)
+        ) as sp:
+            for pred, blocks in sorted(flat_candidates.items()):
+                rows = (
+                    blocks[0] if len(blocks) == 1 else np.concatenate(blocks)
+                )
+                rows_in += int(rows.shape[0])
+                keep = self._dedup_index.fresh_mask(pred, rows)
+                # arity <= 2 is guaranteed by the fused-tail gate, so the
+                # packed fast path never falls back
+                assert keep is not None, "fused tail emitted unpackable arity"
+                if not keep.any():
+                    continue
+                rows_fresh += int(keep.sum())
+                # fresh_mask already dropped in-block duplicates (first-
+                # occurrence) — survivors are unique, compress sorts its way
+                for cols, length in compress_rows(rows[keep], self.store):
+                    delta.append(MetaFact(pred, cols, length, round=round_no))
+            sp.set(rows_in=rows_in, rows_fresh=rows_fresh)
         get_registry().counter("cmat.fused_rounds").inc()
         return delta
 

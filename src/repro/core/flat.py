@@ -20,6 +20,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from ..obs import get_registry, span
+from ..obs.memory import register_reporter
 from .compile import ArrayStats, PlanCache, compile_body, stats_bucket
 from .datalog import Program, Rule
 from .util import (
@@ -121,6 +122,14 @@ class FlatEngine:
         self.facts: dict[str, np.ndarray] = {}
         self.rounds = 0
         self.time_total = 0.0
+        register_reporter("flat", self)
+
+    def memory_report(self) -> dict[str, int]:
+        """obs.memory reporter: the flat baseline *is* its fact arrays."""
+        return {
+            "facts_bytes": sum(int(r.nbytes) for r in self.facts.values()),
+            "n_predicates": len(self.facts),
+        }
 
     def load(self, dataset: dict[str, np.ndarray]) -> None:
         for pred, rows in dataset.items():
@@ -193,27 +202,33 @@ class FlatEngine:
         survivors.  The full-table ``np.unique`` re-sort the per-step
         path pays every round disappears entirely."""
         new_delta: dict[str, np.ndarray] = {}
-        for pred, blocks in derived.items():
-            cand = unique_rows(
-                blocks[0] if len(blocks) == 1 else np.concatenate(blocks)
-            )
-            old = self.facts.get(pred)
-            if old is None or old.shape[0] == 0:
-                if cand.shape[0]:
-                    new_delta[pred] = cand
-                    self.facts[pred] = cand
-                continue
-            codes_cand, codes_old = factorize_rows(cand, old)
-            # facts are lex-sorted and factorize codes are order-
-            # consistent, so codes_old is already ascending
-            keep = ~sorted_member(codes_cand, codes_old)
-            if not keep.any():
-                continue
-            fresh = cand[keep]
-            new_delta[pred] = fresh
-            self.facts[pred] = merge_sorted_rows_np(
-                old, fresh, codes_old, codes_cand[keep]
-            )
+        rows_in = rows_fresh = 0
+        with span("flat.fused_absorb", preds=len(derived)) as sp:
+            for pred, blocks in derived.items():
+                cand = unique_rows(
+                    blocks[0] if len(blocks) == 1 else np.concatenate(blocks)
+                )
+                rows_in += int(cand.shape[0])
+                old = self.facts.get(pred)
+                if old is None or old.shape[0] == 0:
+                    if cand.shape[0]:
+                        rows_fresh += int(cand.shape[0])
+                        new_delta[pred] = cand
+                        self.facts[pred] = cand
+                    continue
+                codes_cand, codes_old = factorize_rows(cand, old)
+                # facts are lex-sorted and factorize codes are order-
+                # consistent, so codes_old is already ascending
+                keep = ~sorted_member(codes_cand, codes_old)
+                if not keep.any():
+                    continue
+                fresh = cand[keep]
+                rows_fresh += int(fresh.shape[0])
+                new_delta[pred] = fresh
+                self.facts[pred] = merge_sorted_rows_np(
+                    old, fresh, codes_old, codes_cand[keep]
+                )
+            sp.set(rows_in=rows_in, rows_fresh=rows_fresh)
         return new_delta
 
     def _source_rows(self, pred: str, source: str, delta: dict) -> np.ndarray | None:

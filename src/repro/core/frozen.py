@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from ..obs.memory import array_is_backed, register_reporter, split_owned_backed
 from .metafacts import FactStore
 
 __all__ = ["FrozenFacts", "SortedRows"]
@@ -55,6 +56,27 @@ class SortedRows:
         total += sum(a.nbytes for a in self._col_order.values())
         total += sum(a.nbytes for a in self._sorted_col.values())
         return total
+
+    @property
+    def snapshot_backed(self) -> bool:
+        """True when ``rows`` is a view into a decompressed snapshot
+        blob rather than an owned copy (see obs.memory double-count
+        rules — such bytes are reported separately so a blob shared
+        with the mu-DAG counts each region once)."""
+        return array_is_backed(self.rows)
+
+    def memory_report(self) -> dict[str, int]:
+        """obs.memory reporter: ``sum(parts) == self.nbytes`` (pinned in
+        tests).  Lazily built orders are always owned (argsort/gather
+        allocate fresh arrays); only ``rows`` can be snapshot-backed."""
+        owned, backed = split_owned_backed((self.rows,))
+        lazy = sum(int(a.nbytes) for a in self._col_order.values())
+        lazy += sum(int(a.nbytes) for a in self._sorted_col.values())
+        return {
+            "rows_bytes": owned,
+            "rows_snapshot_backed_bytes": backed,
+            "lazy_order_bytes": lazy,
+        }
 
     def col_order(self, pos: int) -> np.ndarray:
         """Stable argsort of the rows on column ``pos``."""
@@ -131,6 +153,7 @@ class FrozenFacts:
         # instrumentation: cells unfolded while *building* snapshots —
         # a one-time warmup cost, reported separately from per-query work.
         self.snapshot_cells = 0
+        register_reporter("frozen", self)
         if seed_rows:
             # pre-built snapshots (the incremental store maintains sorted
             # unique rows across epochs — freezing then costs nothing)
@@ -186,8 +209,43 @@ class FrozenFacts:
         return pred in self._sorted
 
     def snapshot_resident_bytes(self) -> int:
-        """Bytes held by the sorted snapshots built so far."""
-        return sum(sr.nbytes for sr in self._sorted.values())
+        """Bytes *owned* by the sorted snapshots built so far.
+
+        Snapshot-backed rows (``frombuffer`` views into a restore blob)
+        are excluded — those bytes belong to the shared blob that also
+        backs the mu-DAG leaves, and counting them here as well as in
+        ``ColumnStore.total_nbytes`` double-counted restored stores.
+        They are reported separately (:meth:`snapshot_backed_bytes`);
+        ``snapshot_resident_bytes + snapshot_backed_bytes`` equals the
+        old all-in total."""
+        return sum(
+            sum(sr.memory_report()[k] for k in ("rows_bytes", "lazy_order_bytes"))
+            for sr in self._sorted.values()
+        )
+
+    def snapshot_backed_bytes(self) -> int:
+        """Bytes of snapshot rows that are views into a restore blob."""
+        return sum(
+            sr.memory_report()["rows_snapshot_backed_bytes"]
+            for sr in self._sorted.values()
+        )
+
+    def memory_report(self) -> dict[str, int]:
+        """obs.memory reporter, aggregated over the built snapshots."""
+        merged = {
+            "snapshots_bytes": 0,
+            "snapshots_snapshot_backed_bytes": 0,
+            "n_snapshots": len(self._sorted),
+        }
+        for sr in self._sorted.values():
+            parts = sr.memory_report()
+            merged["snapshots_bytes"] += (
+                parts["rows_bytes"] + parts["lazy_order_bytes"]
+            )
+            merged["snapshots_snapshot_backed_bytes"] += parts[
+                "rows_snapshot_backed_bytes"
+            ]
+        return merged
 
     def col_order(self, pred: str, pos: int) -> np.ndarray:
         """Stable argsort of the snapshot on column ``pos``."""

@@ -22,6 +22,7 @@ from __future__ import annotations
 import numpy as np
 
 from ..core.util import factorize_rows, multicol_member, unique_rows
+from ..obs.memory import split_owned_backed
 
 __all__ = ["RowIndex", "merge_rows", "setdiff_rows"]
 
@@ -114,4 +115,18 @@ class RowIndex:
     def to_dict(self) -> dict[str, np.ndarray]:
         return {
             p: r.copy() for p, r in self._rows.items() if r.shape[0]
+        }
+
+    # ------------------------------------------------------------------ #
+    def nbytes(self) -> int:
+        return sum(int(r.nbytes) for r in self._rows.values())
+
+    def memory_report(self) -> dict[str, int]:
+        """obs.memory reporter: owned rows vs rows adopted as snapshot
+        views (:meth:`seed_sorted` on a restore blob), counted once."""
+        owned, backed = split_owned_backed(self._rows.values())
+        return {
+            "rows_bytes": owned,
+            "rows_snapshot_backed_bytes": backed,
+            "n_predicates": len(self._rows),
         }

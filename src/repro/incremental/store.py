@@ -56,6 +56,7 @@ from ..core.metafacts import MetaFact
 from ..core.program_graph import is_recursive, stratify, stratum_predicates
 from ..core.util import multicol_member, unique_rows
 from ..obs import publish_incremental, span
+from ..obs.memory import register_reporter, split_owned_backed
 from .dred import dred_stratum
 from .eval import (
     PhaseStats,
@@ -200,6 +201,10 @@ class IncrementalStore:
         self.stats_view = PhaseStats(self.facts, self.arities)
         # per-apply pre-update meta-fact snapshots (read by the phases)
         self.pre_mfs: dict[str, list] = {}
+        # obs.memory: the store reports its side structures only — the
+        # ColumnStore registers itself, so its node bytes are never
+        # counted twice
+        register_reporter("inc", self)
 
     # ------------------------------------------------------------------ #
     # initial build
@@ -698,6 +703,21 @@ class IncrementalStore:
         """Resident bytes of the journal (JSON size of the scalar
         records, maintained incrementally; cap is ``journal_max``)."""
         return self._journal_nbytes
+
+    def memory_report(self) -> dict[str, int]:
+        """obs.memory reporter: maintained row index, derivation-count
+        columns, explicit facts, and the bounded journal.  Mu-DAG node
+        bytes are *not* here — the ``ColumnStore`` self-reports them."""
+        idx = self.rows.memory_report()
+        expl_owned, expl_backed = split_owned_backed(self.explicit.values())
+        return {
+            "index_bytes": idx["rows_bytes"],
+            "index_snapshot_backed_bytes": idx["rows_snapshot_backed_bytes"],
+            "counts_bytes": sum(int(a.nbytes) for a in self.counts.values()),
+            "explicit_bytes": expl_owned,
+            "explicit_snapshot_backed_bytes": expl_backed,
+            "journal_bytes": self._journal_nbytes,
+        }
 
     def mu_usage(self):
         """Dead-node accounting over the mu-store (deletion splits

@@ -45,6 +45,7 @@ from ..core.util import (
     sorted_member,
 )
 from ..obs import get_registry
+from ..obs.memory import register_reporter
 
 __all__ = ["FactBuffers", "BIG_NP"]
 
@@ -77,6 +78,12 @@ class FactBuffers:
         self.device = bool(device)
         self._initial_capacity = _round_capacity(initial_capacity)
         self._reg = get_registry()
+        # per-instance regrow history + peak-occupancy watermark
+        # (obs.memory: capacity vs occupancy is the padding waste the
+        # power-of-two policy trades for bounded retraces)
+        self.regrows = 0
+        self._peak_occupied_bytes = 0
+        register_reporter("buffers", self)
         if self.device:
             from .backend import backend_name, resolve_interpret
 
@@ -90,6 +97,42 @@ class FactBuffers:
             self._count: dict[str, int] = {}
         else:
             self._codes: dict[str, np.ndarray] = {}
+
+    # ------------------------------------------------------------------ #
+    # byte accounting (obs.memory reporter protocol)
+    # ------------------------------------------------------------------ #
+    def occupied_bytes(self) -> int:
+        """Bytes of live codes (device: below the watermark)."""
+        if self.device:
+            return 4 * sum(self._count.values())
+        return sum(int(c.nbytes) for c in self._codes.values())
+
+    def capacity_bytes(self) -> int:
+        """Bytes allocated (device: BIG-padded power-of-two buffers;
+        host: exact-size arrays, so capacity == occupancy)."""
+        if self.device:
+            return sum(int(b.nbytes) for b in self._buf.values())
+        return self.occupied_bytes()
+
+    def _note_occupancy(self) -> None:
+        occ = self.occupied_bytes()
+        if occ > self._peak_occupied_bytes:
+            self._peak_occupied_bytes = occ
+
+    def memory_report(self) -> dict[str, int]:
+        """Disjoint parts — ``occupied + padding == capacity`` — plus
+        the peak-occupancy watermark and regrow history as auxiliaries
+        (non-``_bytes`` keys stay out of the resident roll-up)."""
+        occ = self.occupied_bytes()
+        cap = self.capacity_bytes()
+        self._note_occupancy()
+        return {
+            "occupied_bytes": occ,
+            "padding_bytes": cap - occ,
+            "peak_occupied": self._peak_occupied_bytes,
+            "regrows": self.regrows,
+            "n_predicates": len(self._buf if self.device else self._codes),
+        }
 
     # ------------------------------------------------------------------ #
     # host mode: DedupIndex-compatible surface over int64 packed codes
@@ -117,6 +160,7 @@ class FactBuffers:
             [existing, packed]
         )
         self._codes[pred] = np.unique(merged)
+        self._note_occupancy()
 
     def fresh_mask(self, pred: str, rows: np.ndarray) -> np.ndarray | None:
         """Keep-mask over ``rows``: not already buffered AND first
@@ -140,6 +184,7 @@ class FactBuffers:
                 if index is None
                 else merge_sorted_unique_np(index, survivors)
             )
+            self._note_occupancy()
         return keep
 
     def codes(self, pred: str) -> np.ndarray:
@@ -174,6 +219,7 @@ class FactBuffers:
         buf = jnp.full((cap,), BIG_NP, dtype=jnp.int32)
         if old is not None:
             buf = buf.at[: old.shape[0]].set(old)
+            self.regrows += 1
             self._reg.counter(f"{_SCOPE}regrows").inc()
         self._buf[pred] = buf
         self._count.setdefault(pred, 0)
@@ -218,6 +264,7 @@ class FactBuffers:
         new_count = int(cnt[0])
         assert new_count <= merged.shape[0], "merge overflowed capacity"
         self._count[pred] = new_count
+        self._note_occupancy()
         self._reg.counter(f"{_SCOPE}merges").inc()
         self._reg.counter(f"{_SCOPE}rows_merged").inc(int(fresh.shape[0]))
         self._reg.counter("kernels.kernel_launches").inc()

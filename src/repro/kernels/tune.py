@@ -35,7 +35,7 @@ import json
 import os
 import time
 
-from ..obs import get_registry
+from ..obs import get_registry, span
 from .backend import backend_name, resolve_interpret
 
 __all__ = [
@@ -178,19 +178,26 @@ def _runner(kernel: str, bucket: int, blocks: dict[str, int], interpret: bool):
 
 
 def _sweep(kernel: str, bucket: int, interpret: bool) -> dict[str, int]:
-    best_blocks, best_t = DEFAULTS[kernel], float("inf")
-    for blocks in CANDIDATES[kernel]:
-        try:
-            _runner(kernel, bucket, blocks, interpret)  # compile + warm
-            t = float("inf")
-            for _ in range(3):
-                t0 = time.perf_counter()
-                _runner(kernel, bucket, blocks, interpret)
-                t = min(t, time.perf_counter() - t0)
-        except Exception:  # noqa: BLE001 — an invalid tiling just loses
-            continue
-        if t < best_t:
-            best_blocks, best_t = blocks, t
+    with span(
+        "kernels.tune.sweep",
+        kernel=kernel,
+        bucket=bucket,
+        candidates=len(CANDIDATES[kernel]),
+    ) as sp:
+        best_blocks, best_t = DEFAULTS[kernel], float("inf")
+        for blocks in CANDIDATES[kernel]:
+            try:
+                _runner(kernel, bucket, blocks, interpret)  # compile + warm
+                t = float("inf")
+                for _ in range(3):
+                    t0 = time.perf_counter()
+                    _runner(kernel, bucket, blocks, interpret)
+                    t = min(t, time.perf_counter() - t0)
+            except Exception:  # noqa: BLE001 — an invalid tiling just loses
+                continue
+            if t < best_t:
+                best_blocks, best_t = blocks, t
+        sp.set(best=str(dict(best_blocks)), best_s=best_t)
     return dict(best_blocks)
 
 

@@ -59,7 +59,9 @@ from ..incremental import IncrementalStore
 from ..obs import (
     get_registry,
     get_tracer,
+    publish_predicate_effectiveness,
     publish_query_cache,
+    sample_memory,
     span,
     write_chrome_trace,
     write_metrics,
@@ -189,7 +191,7 @@ def make_update_batches(dataset, n_updates: int, size: int, seed: int):
     return batches
 
 
-def main(argv=None):
+def _main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--kb", default="lubm", choices=["lubm", "chain", "star", "paper"])
     ap.add_argument("--scale", type=int, default=2)
@@ -350,6 +352,14 @@ def main(argv=None):
             {"snapshot": static_snap, "seconds": t_mat},
         )
 
+    # high-water mark for the load/materialise/restore phase; the
+    # per-predicate compression gauges start from the fresh store
+    # (compaction epochs re-sample them as structure is re-shared)
+    sample_memory(phase="restore" if stats is None else "materialise")
+    facts_obj = inc.facts if inc is not None else getattr(source, "facts", None)
+    if facts_obj is not None:
+        publish_predicate_effectiveness(facts_obj)
+
     dist = None
     if args.distributed:
         import jax
@@ -483,6 +493,7 @@ def main(argv=None):
                 ):
                     ckpt.checkpoint(inc)
                     n_checkpoints += 1
+                sample_memory(phase="serve_batch", rss=False)
             # live telemetry: the trace/metrics files track the serving
             # loop batch by batch, not only at exit
             flush_telemetry()
@@ -651,6 +662,17 @@ def main(argv=None):
             traffic or "no kernel launches",
             get_registry().snapshot("kernels."),
         )
+    # final roll-up: resident bytes from the reporter registry, RSS from
+    # the kernel, and the peak watermarks the phase samples accumulated
+    mem_rep = sample_memory()
+    mem_snap = get_registry().snapshot("mem.")
+    report.emit(
+        "memory",
+        f"resident {mem_rep['resident_bytes'] / 1024:.1f}KiB "
+        f"(peak {int(mem_snap.get('mem.peak_resident_bytes', 0)) / 1024:.1f}"
+        f"KiB), rss {mem_rep['rss_bytes'] / (1 << 20):.1f}MiB",
+        mem_snap,
+    )
     flush_telemetry()
     if args.trace_out:
         tr = get_tracer()
@@ -670,6 +692,18 @@ def main(argv=None):
         )
     report.close()
     return 0
+
+
+def main(argv=None):
+    # --trace-out enables the process tracer; restore it on every exit
+    # path so in-process callers (tests, drivers) see no state leak
+    tr = get_tracer()
+    was_enabled = tr.enabled
+    try:
+        return _main(argv)
+    finally:
+        if not was_enabled:
+            tr.disable()
 
 
 if __name__ == "__main__":

@@ -28,6 +28,17 @@ from .adapters import (
     publish_query_cache,
 )
 from .export import chrome_trace, write_chrome_trace, write_metrics
+from .memory import (
+    MemoryAccountant,
+    MemoryReporter,
+    MemorySampler,
+    get_accountant,
+    publish_predicate_effectiveness,
+    register_reporter,
+    rss_bytes,
+    sample_memory,
+    set_accountant,
+)
 from .metrics import (
     Counter,
     Gauge,
@@ -50,6 +61,15 @@ __all__ = [
     "Histogram",
     "get_registry",
     "set_registry",
+    "MemoryAccountant",
+    "MemoryReporter",
+    "MemorySampler",
+    "get_accountant",
+    "set_accountant",
+    "register_reporter",
+    "sample_memory",
+    "rss_bytes",
+    "publish_predicate_effectiveness",
     "chrome_trace",
     "write_chrome_trace",
     "write_metrics",

@@ -1,0 +1,552 @@
+"""Process-wide memory accountant: byte reports, peaks, effectiveness.
+
+The paper's headline claim is *space* — structure sharing and RLE "can
+require less space" than flat storage — so bytes get the same treatment
+wall-time got in DESIGN.md §Observability: one canonical accounting
+protocol, one roll-up, one gate.
+
+Three layers (DESIGN.md §Observability / Memory Accounting):
+
+* **Reporters.**  Every byte-holding subsystem implements
+  :class:`MemoryReporter` — ``memory_report() -> dict[str, int]`` — and
+  registers itself (weakly) with the process-wide
+  :class:`MemoryAccountant` under a *kind* (``columns``, ``frozen``,
+  ``buffers``, ``inc``, ``cmat``, ``flat``, ``storage``).  Reports from
+  live instances of a kind are summed part-wise, so gauge names stay
+  stable however many engines a process creates.
+
+  Conventions (the double-count rules):
+
+  - Keys ending ``_bytes`` are resident payload bytes and sum into
+    ``mem.resident_bytes``; other keys (``n_nodes``, ``regrows``, ...)
+    are auxiliary integers.
+  - Keys ending ``_disk_bytes`` are on-disk (WAL, snapshot files) —
+    published as gauges but excluded from the resident roll-up.
+  - Each reporter reports only arrays *it* owns; containers never
+    re-count a child that registers itself (an engine reports its
+    explicit rows, not its ``ColumnStore``).
+  - Arrays that are views into a decompressed snapshot blob
+    (``OWNDATA == False``) are reported under ``*snapshot_backed_bytes``
+    parts, never mixed into owned counts.  Backed parts are excluded
+    from ``mem.resident_bytes`` (on-disk payload dedup lets many leaves
+    view one blob region, so summing views would over-count) and roll
+    into their own ``mem.snapshot_backed_bytes`` gauge — an upper bound
+    on the shared blob's footprint.
+
+* **Sampler.**  :class:`MemorySampler` is the opt-in peak tracker: it
+  attaches a tracer *hook* (:meth:`Tracer.add_hook`) and re-samples the
+  accountant + RSS at phase/round span boundaries — never inside
+  jitted code — recording high-water marks per phase (materialise,
+  apply, restore, compact, serve_batch).  It meters its own cost
+  (``time_ns``) so the <2% overhead budget is asserted, not assumed.
+
+* **Effectiveness.**  :func:`publish_predicate_effectiveness` computes,
+  per predicate, mu-DAG bytes vs the flat-equivalent bytes, the DAG
+  sharing factor (tree bytes / DAG bytes), and the RLE ratio (cells per
+  run) as ``mem.pred.*`` gauges — re-sampled at compaction epochs.
+  These are the observed inputs the ROADMAP's adaptive hybrid storage
+  item needs to pick layouts per predicate.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+import weakref
+from typing import Protocol, runtime_checkable
+
+from .metrics import MetricsRegistry, get_registry
+from .trace import Tracer, get_tracer
+
+__all__ = [
+    "MemoryReporter",
+    "MemoryAccountant",
+    "MemorySampler",
+    "get_accountant",
+    "set_accountant",
+    "register_reporter",
+    "sample_memory",
+    "rss_bytes",
+    "array_is_backed",
+    "split_owned_backed",
+    "predicate_effectiveness",
+    "publish_predicate_effectiveness",
+    "PHASE_SPANS",
+    "ROUND_SPANS",
+]
+
+
+@runtime_checkable
+class MemoryReporter(Protocol):
+    """Anything that can say where its bytes live."""
+
+    def memory_report(self) -> dict[str, int]:  # pragma: no cover - protocol
+        ...
+
+
+# --------------------------------------------------------------------- #
+# array classification helpers (the double-count rules)
+# --------------------------------------------------------------------- #
+def array_is_backed(arr) -> bool:
+    """True when ``arr`` is a view over a buffer it does not own — e.g.
+    a ``np.frombuffer`` slice of a decompressed snapshot blob.  Such
+    arrays keep the whole base alive; accounting splits them out so a
+    shared blob is never counted once per view-holder as owned bytes."""
+    flags = getattr(arr, "flags", None)
+    if flags is None:  # device arrays own their buffers
+        return False
+    return not flags["OWNDATA"] and arr.base is not None
+
+
+def split_owned_backed(arrays) -> tuple[int, int]:
+    """Sum ``(owned_bytes, snapshot_backed_bytes)`` over arrays."""
+    owned = backed = 0
+    for a in arrays:
+        if a is None:
+            continue
+        if array_is_backed(a):
+            backed += int(a.nbytes)
+        else:
+            owned += int(a.nbytes)
+    return owned, backed
+
+
+# --------------------------------------------------------------------- #
+# RSS (stdlib only; psutil is not a dependency)
+# --------------------------------------------------------------------- #
+_PAGE_SIZE = None
+
+
+def rss_bytes() -> int:
+    """Current resident set size.  Linux: ``/proc/self/statm`` (cheap —
+    one read + split).  Fallback: ``ru_maxrss`` (the *peak*, close
+    enough for the platforms without procfs).  0 if neither works."""
+    global _PAGE_SIZE
+    try:
+        with open("/proc/self/statm", "rb") as f:
+            resident_pages = int(f.read().split()[1])
+        if _PAGE_SIZE is None:
+            _PAGE_SIZE = os.sysconf("SC_PAGE_SIZE")
+        return resident_pages * _PAGE_SIZE
+    except (OSError, ValueError, IndexError):
+        try:
+            import resource
+
+            return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss * 1024
+        except Exception:  # pragma: no cover - exotic platforms
+            return 0
+
+
+# --------------------------------------------------------------------- #
+# the accountant
+# --------------------------------------------------------------------- #
+def _is_resident_key(key: str) -> bool:
+    """``*_bytes`` parts roll into ``mem.resident_bytes`` except disk
+    bytes (not RAM) and snapshot-backed bytes (views over a shared
+    decompressed blob: on-disk payload dedup means several leaves can
+    view one region, so summing views would over-count the blob — they
+    get their own ``mem.snapshot_backed_bytes`` roll-up instead, an
+    upper bound on the blob's footprint)."""
+    return (
+        key.endswith("_bytes")
+        and not key.endswith("_disk_bytes")
+        and not key.endswith("_snapshot_backed_bytes")
+    )
+
+
+class MemoryAccountant:
+    """Weak registry of :class:`MemoryReporter` instances, grouped by
+    kind; one :meth:`sample` rolls everything up into ``mem.*`` gauges.
+
+    Reporters are held by ``weakref`` — registration never extends a
+    lifetime, and dead instances silently leave the roll-up (their kind
+    keeps publishing, at zero, so leak checks can see it drain)."""
+
+    def __init__(self):
+        self._kinds: dict[str, list[weakref.ref]] = {}
+
+    # ------------------------------------------------------------------ #
+    def register(self, kind: str, reporter: MemoryReporter) -> None:
+        refs = self._kinds.setdefault(kind, [])
+        if not any(r() is reporter for r in refs):
+            refs.append(weakref.ref(reporter))
+
+    def unregister(self, kind: str, reporter: MemoryReporter) -> None:
+        refs = self._kinds.get(kind, [])
+        self._kinds[kind] = [r for r in refs if r() is not reporter]
+
+    def live(self) -> dict[str, list]:
+        """Live reporters per kind (prunes dead weakrefs in place)."""
+        out: dict[str, list] = {}
+        for kind, refs in self._kinds.items():
+            objs = [o for o in (r() for r in refs) if o is not None]
+            self._kinds[kind] = [weakref.ref(o) for o in objs]
+            out[kind] = objs
+        return out
+
+    def clear(self) -> None:
+        self._kinds.clear()
+
+    # ------------------------------------------------------------------ #
+    def collect(self) -> dict[str, dict[str, int]]:
+        """Part-wise sums of ``memory_report()`` over live reporters,
+        per kind.  Kinds with no survivors report ``{}`` (still listed,
+        so their gauges are driven back to zero)."""
+        out: dict[str, dict[str, int]] = {}
+        for kind, objs in self.live().items():
+            merged: dict[str, int] = {}
+            for obj in objs:
+                for key, val in obj.memory_report().items():
+                    merged[key] = merged.get(key, 0) + int(val)
+            out[kind] = merged
+        return out
+
+    def resident_bytes(self, collected: dict | None = None) -> int:
+        if collected is None:
+            collected = self.collect()
+        return sum(
+            val
+            for parts in collected.values()
+            for key, val in parts.items()
+            if _is_resident_key(key)
+        )
+
+    # ------------------------------------------------------------------ #
+    def sample(
+        self,
+        registry: MetricsRegistry | None = None,
+        phase: str | None = None,
+        rss: bool = True,
+    ) -> dict[str, int]:
+        """One roll-up: publish ``mem.<kind>.<part>`` gauges, the
+        ``mem.resident_bytes`` total, RSS, and max-update the peak
+        gauges (globally and, when ``phase`` is given, per phase)."""
+        reg = registry if registry is not None else get_registry()
+        collected = self.collect()
+        flat: dict[str, int] = {}
+        for kind, parts in collected.items():
+            stale = self._known_parts(kind)
+            for key in stale - parts.keys():
+                reg.gauge(f"mem.{kind}.{key}").set(0)
+            for key, val in parts.items():
+                reg.gauge(f"mem.{kind}.{key}").set(val)
+                flat[f"{kind}.{key}"] = val
+            self._remember_parts(kind, parts.keys())
+        resident = self.resident_bytes(collected)
+        backed = sum(
+            val
+            for parts in collected.values()
+            for key, val in parts.items()
+            if key.endswith("_snapshot_backed_bytes")
+        )
+        reg.gauge("mem.resident_bytes").set(resident)
+        reg.gauge("mem.snapshot_backed_bytes").set(backed)
+        _gauge_max(reg, "mem.peak_resident_bytes", resident)
+        flat["resident_bytes"] = resident
+        flat["snapshot_backed_bytes"] = backed
+        if phase:
+            _gauge_max(reg, f"mem.peak.{phase}.resident_bytes", resident)
+        if rss:
+            r = rss_bytes()
+            reg.gauge("mem.rss_bytes").set(r)
+            _gauge_max(reg, "mem.peak_rss_bytes", r)
+            if phase:
+                _gauge_max(reg, f"mem.peak.{phase}.rss_bytes", r)
+            flat["rss_bytes"] = r
+        return flat
+
+    # parts seen per kind, so gauges of dead parts are zeroed not stale
+    def _known_parts(self, kind: str) -> set[str]:
+        return getattr(self, "_parts_seen", {}).get(kind, set())
+
+    def _remember_parts(self, kind: str, keys) -> None:
+        seen = getattr(self, "_parts_seen", None)
+        if seen is None:
+            seen = self._parts_seen = {}
+        seen.setdefault(kind, set()).update(keys)
+
+
+def _gauge_max(reg: MetricsRegistry, name: str, value) -> None:
+    g = reg.gauge(name)
+    if value > g.value:
+        g.set(value)
+
+
+#: the process-wide accountant every subsystem registers with
+_ACCOUNTANT = MemoryAccountant()
+
+
+def get_accountant() -> MemoryAccountant:
+    return _ACCOUNTANT
+
+
+def set_accountant(acc: MemoryAccountant) -> MemoryAccountant:
+    """Swap the process-wide accountant (returns the previous one)."""
+    global _ACCOUNTANT
+    prev = _ACCOUNTANT
+    _ACCOUNTANT = acc
+    return prev
+
+
+def register_reporter(kind: str, reporter: MemoryReporter) -> None:
+    """Register with the *current* process-wide accountant (the call
+    every ``__init__`` uses — re-reads the global, so tests can swap)."""
+    _ACCOUNTANT.register(kind, reporter)
+
+
+def sample_memory(phase: str | None = None, rss: bool = True) -> dict:
+    """One-shot roll-up on the process-wide accountant + registry."""
+    return _ACCOUNTANT.sample(phase=phase, rss=rss)
+
+
+# --------------------------------------------------------------------- #
+# the peak sampler (tracer-hook driven)
+# --------------------------------------------------------------------- #
+#: span names that *are* a phase: sampling at their exit records the
+#: phase's closing watermark under ``mem.peak.<phase>.*``
+PHASE_SPANS: dict[str, str] = {
+    "cmat.materialise": "materialise",
+    "flat.materialise": "materialise",
+    "dist.stratum": "materialise",
+    "inc.seminaive_insert": "apply",
+    "inc.insertion_sweep": "apply",
+    "inc.deletion_sweep": "apply",
+    "inc.counting_insert": "apply",
+    "inc.counting_delete": "apply",
+    "inc.dred_stratum": "apply",
+    "storage.restore": "restore",
+    "storage.compact": "compact",
+    "serve.update_batch": "serve_batch",
+}
+
+#: intra-phase boundaries: sampled too (peaks live *inside* a fixpoint,
+#: not at its end), attributed to the innermost enclosing phase span
+ROUND_SPANS: frozenset = frozenset(
+    {"cmat.round", "flat.round", "cmat.recompress"}
+)
+
+
+class MemorySampler:
+    """Opt-in peak tracker riding span boundaries (module docstring).
+
+    ``attach()`` registers a hook on the tracer (enabling it if it was
+    off; ``detach()`` restores the flag).  The hook fires only for span
+    names in ``PHASE_SPANS`` / ``ROUND_SPANS`` — one set lookup for
+    every other span — and each firing is self-metered into
+    ``time_ns`` / ``samples`` so the overhead budget is testable.
+
+    The hook path is deliberately light: it only folds the accountant's
+    resident total (and RSS) into in-memory peak dicts — no gauge
+    traffic per round.  ``detach()`` then publishes one full roll-up
+    plus the accumulated ``mem.peak.<phase>.*`` watermarks.
+
+    On top of that the hook is **self-throttling**: after a sample that
+    cost ``c`` ns, the next hook sample is allowed no sooner than
+    ``c / budget`` ns later (default budget 1 %).  Workloads whose span
+    cadence outpaces the sampling cost — tiny KBs with many rounds —
+    skip intermediate boundaries instead of taxing the fixpoint, so the
+    sampler's share of wall time is bounded by ``budget`` no matter the
+    workload shape.  Skips are counted in ``throttled``."""
+
+    def __init__(
+        self,
+        accountant: MemoryAccountant | None = None,
+        registry: MetricsRegistry | None = None,
+        extra_spans: dict[str, str] | None = None,
+        rss: bool = True,
+        budget: float = 0.01,
+    ):
+        self._accountant = accountant
+        self._registry = registry
+        self._rss = rss
+        self._budget = budget
+        self._next_ns = 0
+        self._phases = dict(PHASE_SPANS)
+        if extra_spans:
+            self._phases.update(extra_spans)
+        self._watch = frozenset(self._phases) | ROUND_SPANS
+        self.samples = 0
+        self.throttled = 0
+        self.time_ns = 0
+        self.peaks: dict[str, int] = {}
+        self._rss_peaks: dict[str, int] = {}
+        self._tracer: Tracer | None = None
+        self._was_enabled = False
+
+    # ------------------------------------------------------------------ #
+    def attach(self, tracer: Tracer | None = None) -> MemorySampler:
+        self._tracer = tracer if tracer is not None else get_tracer()
+        self._was_enabled = self._tracer.enabled
+        self._tracer.enable()
+        self._tracer.add_hook(self._hook)
+        self.sample()  # baseline watermark before any phase runs
+        return self
+
+    def detach(self) -> None:
+        if self._tracer is None:
+            return
+        self._tracer.remove_hook(self._hook)
+        if not self._was_enabled:
+            self._tracer.disable()
+        self._tracer = None
+        self._publish()
+
+    def __enter__(self) -> MemorySampler:
+        return self.attach()
+
+    def __exit__(self, *exc) -> bool:
+        self.detach()
+        return False
+
+    # ------------------------------------------------------------------ #
+    def _hook(self, tracer: Tracer, rec) -> None:
+        name = rec.name
+        if name not in self._watch:
+            return
+        t0 = time.perf_counter_ns()
+        if t0 < self._next_ns:
+            self.throttled += 1
+            return
+        phase = self._phases.get(name)
+        if phase is None:
+            # round boundary: attribute to the innermost open phase —
+            # children exit before parents, so the phase span is still
+            # on the live stack
+            for live in reversed(tracer._stack()):
+                phase = self._phases.get(live.name)
+                if phase is not None:
+                    break
+        self._sample_light(phase)
+        cost = time.perf_counter_ns() - t0
+        self.time_ns += cost
+        if self._budget > 0:
+            self._next_ns = t0 + cost + int(cost / self._budget)
+
+    def _sample_light(self, phase: str | None) -> None:
+        """Hook-path sample: peaks only, no per-part gauge traffic."""
+        acc = self._accountant if self._accountant is not None else get_accountant()
+        self.samples += 1
+        key = phase or "(unphased)"
+        resident = acc.resident_bytes()
+        if resident > self.peaks.get(key, -1):
+            self.peaks[key] = resident
+        if self._rss:
+            r = rss_bytes()
+            if r > self._rss_peaks.get(key, -1):
+                self._rss_peaks[key] = r
+
+    def sample(self, phase: str | None = None) -> dict:
+        """Full roll-up (gauges included) — the explicit-call path."""
+        acc = self._accountant if self._accountant is not None else get_accountant()
+        reg = self._registry if self._registry is not None else get_registry()
+        flat = acc.sample(registry=reg, phase=phase, rss=self._rss)
+        self.samples += 1
+        resident = flat.get("resident_bytes", 0)
+        key = phase or "(unphased)"
+        if resident > self.peaks.get(key, -1):
+            self.peaks[key] = resident
+        if self._rss:
+            r = flat.get("rss_bytes", 0)
+            if r > self._rss_peaks.get(key, -1):
+                self._rss_peaks[key] = r
+        reg.gauge("mem.sampler.samples").set(self.samples)
+        reg.gauge("mem.sampler.throttled").set(self.throttled)
+        reg.gauge("mem.sampler.time_s").set(self.time_ns / 1e9)
+        return flat
+
+    def _publish(self) -> None:
+        """One full roll-up + the accumulated per-phase watermarks."""
+        acc = self._accountant if self._accountant is not None else get_accountant()
+        reg = self._registry if self._registry is not None else get_registry()
+        acc.sample(registry=reg, rss=self._rss)
+        for key, v in self.peaks.items():
+            _gauge_max(reg, "mem.peak_resident_bytes", v)
+            if key != "(unphased)":
+                _gauge_max(reg, f"mem.peak.{key}.resident_bytes", v)
+        for key, v in self._rss_peaks.items():
+            _gauge_max(reg, "mem.peak_rss_bytes", v)
+            if key != "(unphased)":
+                _gauge_max(reg, f"mem.peak.{key}.rss_bytes", v)
+        reg.gauge("mem.sampler.samples").set(self.samples)
+        reg.gauge("mem.sampler.throttled").set(self.throttled)
+        reg.gauge("mem.sampler.time_s").set(self.time_ns / 1e9)
+
+
+# --------------------------------------------------------------------- #
+# per-predicate compression effectiveness
+# --------------------------------------------------------------------- #
+def predicate_effectiveness(facts) -> dict[str, dict[str, float]]:
+    """Per-predicate compression statistics over a ``FactStore``:
+
+    - ``flat_bytes``       — rows x arity x 8, the flat-equivalent
+    - ``mu_bytes``         — bytes of mu-DAG nodes reachable from the
+      predicate's columns (each node once)
+    - ``compression_ratio``— flat / mu (higher = compression winning)
+    - ``sharing_factor``   — tree-expanded bytes / mu bytes (how much
+      DAG sharing saves over a no-sharing tree; 1.0 = no sharing)
+    - ``rle_ratio``        — unfolded cells per stored run over the
+      reachable leaves (average run length; 1.0 = RLE not helping)
+
+    A ``_total`` pseudo-predicate summarises the whole store with the
+    **cross-predicate** view: derived predicates mostly reference the
+    source predicate's column nodes wholesale (the paper's taxonomic
+    rules), so per-predicate reachable bytes charge each shared node to
+    every predicate that uses it, while ``_total``'s ``mu_bytes`` counts
+    it once.  Its ``sharing_factor`` is the sum of per-predicate
+    ``mu_bytes`` over the global deduplicated ``mu_bytes`` — how many
+    predicates, on average, each byte of the store serves.
+    """
+    store = facts.store
+    out: dict[str, dict[str, float]] = {}
+    all_roots: list[int] = []
+    sum_pred_mu = 0
+    for pred in facts.predicates():
+        mfs = facts.all(pred)
+        if not mfs:
+            continue
+        arity = mfs[0].arity
+        n_rows = sum(mf.length for mf in mfs)
+        flat_bytes = n_rows * arity * 8
+        roots = [c for mf in mfs for c in mf.columns]
+        all_roots.extend(roots)
+        reach = store.reachable(roots)
+        mu_bytes = sum(store.node_nbytes(c) for c in reach)
+        sum_pred_mu += mu_bytes
+        cells, runs = store.leaf_rle_stats(reach)
+        tree_bytes = store.expanded_nbytes(roots)
+        out[pred] = {
+            "flat_bytes": flat_bytes,
+            "mu_bytes": mu_bytes,
+            "compression_ratio": flat_bytes / mu_bytes if mu_bytes else 0.0,
+            "sharing_factor": tree_bytes / mu_bytes if mu_bytes else 0.0,
+            "rle_ratio": cells / runs if runs else 0.0,
+        }
+    if out:
+        reach = store.reachable(all_roots)
+        mu_total = sum(store.node_nbytes(c) for c in reach)
+        cells, runs = store.leaf_rle_stats(reach)
+        flat_total = sum(int(p["flat_bytes"]) for p in out.values())
+        out["_total"] = {
+            "flat_bytes": flat_total,
+            "mu_bytes": mu_total,
+            "compression_ratio": flat_total / mu_total if mu_total else 0.0,
+            "sharing_factor": sum_pred_mu / mu_total if mu_total else 0.0,
+            "rle_ratio": cells / runs if runs else 0.0,
+        }
+    return out
+
+
+def publish_predicate_effectiveness(
+    facts, registry: MetricsRegistry | None = None
+) -> dict[str, dict[str, float]]:
+    """Publish :func:`predicate_effectiveness` as ``mem.pred.*`` gauges
+    (called after load/materialise and re-sampled at every compaction
+    epoch, so the stats track resharing)."""
+    reg = registry if registry is not None else get_registry()
+    stats = predicate_effectiveness(facts)
+    for pred, parts in stats.items():
+        for key, val in parts.items():
+            reg.gauge(f"mem.pred.{pred}.{key}").set(
+                round(val, 4) if isinstance(val, float) else val
+            )
+    return stats

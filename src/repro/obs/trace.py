@@ -149,6 +149,14 @@ class Tracer:
         self.dropped = 0
         #: spans exited out of LIFO order (a bug in instrumentation)
         self.misnested = 0
+        #: observers called as ``hook(tracer, record)`` on every span
+        #: close / instant — the attachment point for samplers that need
+        #: span *boundaries* (e.g. memory watermarks) without touching
+        #: the instrumentation sites.  Hooks run on the recording thread
+        #: and must be cheap; exceptions are swallowed and counted so a
+        #: broken observer can never take an engine down.
+        self.hooks: list = []
+        self.hook_errors = 0
         self._local = threading.local()
         #: perf-counter origin for relative timestamps in exports
         self.origin_ns = time.perf_counter_ns()
@@ -165,8 +173,25 @@ class Tracer:
     def _record(self, rec: SpanRecord) -> None:
         if len(self.events) >= self.max_events:
             self.dropped += 1
-            return
-        self.events.append(rec)
+        else:
+            self.events.append(rec)
+        # hooks still see boundaries once the event buffer is full —
+        # watermark samplers must not stop with the recording.
+        if self.hooks:
+            for hook in tuple(self.hooks):
+                try:
+                    hook(self, rec)
+                except Exception:
+                    self.hook_errors += 1
+
+    def add_hook(self, hook) -> None:
+        """Register a ``hook(tracer, record)`` span-boundary observer."""
+        if hook not in self.hooks:
+            self.hooks.append(hook)
+
+    def remove_hook(self, hook) -> None:
+        if hook in self.hooks:
+            self.hooks.remove(hook)
 
     # ------------------------------------------------------------------ #
     def span(self, name: str, **args):

@@ -35,6 +35,7 @@ from dataclasses import dataclass
 from ..core.columns import ColumnStore
 from ..core.metafacts import FactStore, MetaFact
 from ..obs import get_registry, span
+from ..obs.memory import publish_predicate_effectiveness
 
 __all__ = ["MuUsage", "CompactionStats", "mu_usage", "compact_store"]
 
@@ -116,6 +117,10 @@ def compact_store(inc) -> CompactionStats:
     reg.counter("gc.time_s").inc(stats.time_s)
     reg.gauge("gc.nodes").set(stats.nodes_after)
     reg.gauge("gc.bytes").set(stats.bytes_after)
+    # compaction epochs re-share structure, so the per-predicate
+    # compression-effectiveness gauges are re-sampled here (obs.memory:
+    # the adaptive-hybrid-storage inputs track resharing, not staleness)
+    publish_predicate_effectiveness(inc.facts, reg)
     return stats
 
 
@@ -169,6 +174,7 @@ def _compact_store(inc) -> CompactionStats:
     store._parents = fresh._parents
     store._unfold_cache = fresh._unfold_cache
     store._next_id = fresh._next_id
+    store.recount_bytes()  # running byte counters track the new table
     facts._facts = new_facts
     inc.pre_mfs = {}
     inc.stats_view.refresh()

@@ -30,6 +30,7 @@ import time
 from dataclasses import dataclass
 
 from ..obs import get_registry, span
+from ..obs.memory import register_reporter
 from .format import (
     SnapshotError,
     _fsync_dir,
@@ -67,6 +68,7 @@ class CheckpointManager:
         self.label = label
         os.makedirs(root, exist_ok=True)
         self.wal = WriteAheadLog(os.path.join(root, _WAL))
+        register_reporter("storage", self)
 
     def reset(self) -> None:
         """Wipe the checkpoint root: all snapshots, the LATEST pointer,
@@ -222,3 +224,17 @@ class CheckpointManager:
         for name in self.snapshots():
             total += snapshot_nbytes(os.path.join(self.root, name))
         return total
+
+    def memory_report(self) -> dict[str, int]:
+        """obs.memory reporter.  Everything here is on disk, so the
+        ``_disk_bytes`` suffix keeps it out of the resident roll-up
+        while still publishing under ``mem.storage.*``."""
+        snaps = self.snapshots()
+        snap_bytes = sum(
+            snapshot_nbytes(os.path.join(self.root, name)) for name in snaps
+        )
+        return {
+            "wal_disk_bytes": self.wal.nbytes(),
+            "snapshots_disk_bytes": snap_bytes,
+            "n_snapshots": len(snaps),
+        }

@@ -1,0 +1,333 @@
+"""obs.memory accounting invariants.
+
+Four families, mirroring the double-count rules in DESIGN.md:
+
+* **running counters** — ``ColumnStore`` maintains owned/backed/cache
+  byte counters incrementally; after any workload they must equal a
+  from-scratch recount and sum to ``total_nbytes()``,
+* **part sums** — every ``memory_report()`` splits a subsystem into
+  disjoint parts, so the parts must sum back to the subsystem's own
+  total (``SortedRows.nbytes``, ``FrozenFacts.snapshot_*_bytes``),
+* **the snapshot double-count rule** — rows restored as ``frombuffer``
+  views over a decompressed blob are *backed*, never resident: a
+  restored store reports them under ``*_snapshot_backed_bytes`` and the
+  accountant's resident roll-up excludes them,
+* **conservation** — the fact set's flat-equivalent bytes are invariant
+  across freeze / save-snapshot / restore / compact (compaction may
+  only shrink the mu side), property-tested over random KBs when
+  hypothesis is available.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import CMatEngine
+from repro.core.frozen import SortedRows
+from repro.core.generators import lubm_like, paper_example
+from repro.incremental import IncrementalStore
+from repro.obs.memory import (
+    MemoryAccountant,
+    array_is_backed,
+    predicate_effectiveness,
+    split_owned_backed,
+)
+from repro.storage import compact_store, restore_incremental, write_snapshot
+
+
+def _pick_batch(dataset, k, seed=0):
+    rng = np.random.default_rng(seed)
+    pred = sorted(dataset)[0]
+    rows = np.asarray(dataset[pred]).reshape(len(dataset[pred]), -1)
+    sel = rng.choice(rows.shape[0], size=min(k, rows.shape[0]), replace=False)
+    return {pred: rows[sel]}
+
+
+def _assert_counters_in_sync(store):
+    """Running owned/backed/cache counters == a from-scratch recount."""
+    before = (store._nbytes_owned, store._nbytes_backed, store._cache_nbytes)
+    store.recount_bytes()
+    after = (store._nbytes_owned, store._nbytes_backed, store._cache_nbytes)
+    assert before == after, f"running counters drifted: {before} != {after}"
+    assert store._nbytes_owned + store._nbytes_backed == store.total_nbytes()
+
+
+# --------------------------------------------------------------------- #
+# running counters
+# --------------------------------------------------------------------- #
+def test_column_counters_survive_materialise_and_churn():
+    program, dataset, _ = lubm_like(3, 40, 8)
+    inc = IncrementalStore(program)
+    inc.load(dataset)
+    _assert_counters_in_sync(inc.store)
+    batch = _pick_batch(dataset, 4)
+    inc.apply(deletions=batch)  # copy-splits redefine + add nodes
+    inc.apply(additions=batch)
+    _assert_counters_in_sync(inc.store)
+
+
+def test_column_counters_after_release_and_cache_drop():
+    program, dataset, _ = paper_example(n=6, m=4)
+    eng = CMatEngine(program)
+    eng.load(dataset)
+    eng.materialise()
+    store = eng.facts.store
+    _assert_counters_in_sync(store)
+    store.drop_caches()
+    assert store._cache_nbytes == 0
+    _assert_counters_in_sync(store)
+
+
+# --------------------------------------------------------------------- #
+# part sums
+# --------------------------------------------------------------------- #
+def test_sorted_rows_parts_sum_to_nbytes():
+    rows = np.arange(24, dtype=np.int64).reshape(12, 2).copy()
+    sr = SortedRows(rows)
+    sr.col_order(1)  # build a lazy order so lazy_order_bytes is non-zero
+    parts = sr.memory_report()
+    assert sum(parts.values()) == sr.nbytes
+    assert parts["rows_snapshot_backed_bytes"] == 0
+    assert parts["lazy_order_bytes"] > 0
+
+
+def test_sorted_rows_backed_parts_sum_to_nbytes():
+    owned = np.arange(24, dtype=np.int64).reshape(12, 2).copy()
+    backed = np.frombuffer(owned.tobytes(), dtype=np.int64).reshape(12, 2)
+    assert array_is_backed(backed) and not array_is_backed(owned)
+    sr = SortedRows(backed)
+    parts = sr.memory_report()
+    assert sum(parts.values()) == sr.nbytes
+    assert parts["rows_bytes"] == 0
+    assert parts["rows_snapshot_backed_bytes"] == backed.nbytes
+
+
+def test_split_owned_backed_partitions():
+    owned = np.arange(10, dtype=np.int64)
+    backed = np.frombuffer(owned.tobytes(), dtype=np.int64)
+    o, b = split_owned_backed([owned, backed])
+    assert o == owned.nbytes and b == backed.nbytes
+
+
+def test_frozen_report_matches_per_snapshot_sums():
+    program, dataset, _ = lubm_like(3, 40, 8)
+    eng = CMatEngine(program)
+    eng.load(dataset)
+    eng.materialise()
+    frozen = eng.facts.freeze()
+    for pred in frozen.predicates():
+        frozen.sorted_rows(pred)  # build every snapshot
+    parts = frozen.memory_report()
+    assert parts["snapshots_bytes"] == frozen.snapshot_resident_bytes()
+    assert (
+        parts["snapshots_snapshot_backed_bytes"]
+        == frozen.snapshot_backed_bytes()
+    )
+    total = sum(
+        frozen.sorted_rows(p).nbytes for p in frozen.predicates()
+    )
+    assert (
+        frozen.snapshot_resident_bytes() + frozen.snapshot_backed_bytes()
+        == total
+    )
+
+
+# --------------------------------------------------------------------- #
+# the snapshot double-count rule
+# --------------------------------------------------------------------- #
+def test_restored_store_reports_blob_views_as_backed(tmp_path):
+    program, dataset, _ = lubm_like(3, 40, 8)
+    inc = IncrementalStore(program)
+    inc.load(dataset)
+    write_snapshot(
+        str(tmp_path / "snap"), inc.facts,
+        epoch=inc.epoch, round_tag=inc._round,
+        rows=inc.rows.to_dict(), counts=inc.counts,
+        explicit=inc.explicit, arities=inc.arities,
+    )
+    inc2, _ = restore_incremental(program, str(tmp_path / "snap"))
+    _assert_counters_in_sync(inc2.store)
+    col = inc2.store.memory_report()
+    assert col["nodes_snapshot_backed_bytes"] > 0, "restore must adopt views"
+    row = inc2.memory_report()
+    assert row["index_snapshot_backed_bytes"] > 0
+
+    # the accountant's resident roll-up excludes every backed part, so a
+    # restored store no longer double-counts the blob it shares with the
+    # side tables (each blob region counts at most once, as backed)
+    acc = MemoryAccountant()
+    acc.register("columns", inc2.store)
+    acc.register("inc", inc2)
+    collected = acc.collect()
+    resident = acc.resident_bytes(collected)
+    backed = sum(
+        v
+        for parts in collected.values()
+        for k, v in parts.items()
+        if k.endswith("_snapshot_backed_bytes")
+    )
+    all_bytes = sum(
+        v
+        for parts in collected.values()
+        for k, v in parts.items()
+        if k.endswith("_bytes")
+    )
+    assert backed > 0
+    assert resident + backed == all_bytes
+
+
+# --------------------------------------------------------------------- #
+# conservation across freeze / save / restore / compact
+# --------------------------------------------------------------------- #
+def _flat_bytes(facts):
+    return {
+        p: e["flat_bytes"] for p, e in predicate_effectiveness(facts).items()
+    }
+
+
+def test_flat_bytes_conserved_across_roundtrip_and_compact(tmp_path):
+    program, dataset, _ = lubm_like(3, 40, 8)
+    inc = IncrementalStore(program)
+    inc.load(dataset)
+    batch = _pick_batch(dataset, 4)
+    inc.apply(deletions=batch)
+    inc.apply(additions=batch)
+    want = _flat_bytes(inc.facts)
+    mu_before = predicate_effectiveness(inc.facts)["_total"]["mu_bytes"]
+
+    write_snapshot(
+        str(tmp_path / "snap"), inc.facts,
+        epoch=inc.epoch, round_tag=inc._round,
+        rows=inc.rows.to_dict(), counts=inc.counts,
+        explicit=inc.explicit, arities=inc.arities,
+    )
+    inc2, _ = restore_incremental(program, str(tmp_path / "snap"))
+    assert _flat_bytes(inc2.facts) == want
+
+    compact_store(inc)
+    _assert_counters_in_sync(inc.store)
+    eff = predicate_effectiveness(inc.facts)
+    assert _flat_bytes(inc.facts) == want
+    # compaction hash-conses: the mu side may only shrink
+    assert eff["_total"]["mu_bytes"] <= mu_before
+
+
+def test_total_row_summarises_cross_predicate_sharing():
+    program, dataset, _ = lubm_like(4, 60, 10)
+    eng = CMatEngine(program)
+    eng.load(dataset)
+    eng.materialise()
+    eff = predicate_effectiveness(eng.facts)
+    total = eff["_total"]
+    per_pred_mu = sum(
+        e["mu_bytes"] for p, e in eff.items() if p != "_total"
+    )
+    assert total["flat_bytes"] == sum(
+        e["flat_bytes"] for p, e in eff.items() if p != "_total"
+    )
+    # derived taxonomic predicates share source columns wholesale, so
+    # the global deduplicated store is smaller than the per-pred sums
+    assert total["mu_bytes"] < per_pred_mu
+    assert total["sharing_factor"] > 1.0
+    assert total["compression_ratio"] > 1.0
+
+
+# --------------------------------------------------------------------- #
+# property-based conservation (hypothesis, optional)
+# --------------------------------------------------------------------- #
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as hst
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - hypothesis is in requirements-dev
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    from repro.core.datalog import Atom, Program, Rule
+
+    PREDS = [("P", 2), ("Q", 2), ("R", 1)]
+    VARS = ["x", "y", "z"]
+
+    @hst.composite
+    def hyp_programs(draw):
+        rules = []
+        for _ in range(draw(hst.integers(min_value=1, max_value=3))):
+            body = []
+            for _ in range(draw(hst.integers(min_value=1, max_value=2))):
+                name, arity = draw(hst.sampled_from(PREDS))
+                body.append(
+                    Atom(
+                        name,
+                        tuple(
+                            draw(hst.sampled_from(VARS)) for _ in range(arity)
+                        ),
+                    )
+                )
+            body_vars = [v for a in body for v in a.variables()]
+            name, arity = draw(hst.sampled_from(PREDS))
+            head = Atom(
+                name,
+                tuple(draw(hst.sampled_from(body_vars)) for _ in range(arity)),
+            )
+            rules.append(Rule(tuple(body), head))
+        return Program(rules)
+
+    @hst.composite
+    def hyp_datasets(draw):
+        out = {}
+        for name, arity in PREDS:
+            n = draw(hst.integers(min_value=0, max_value=8))
+            if n == 0:
+                continue
+            rows = draw(
+                hst.lists(
+                    hst.tuples(
+                        *[hst.integers(min_value=0, max_value=5)] * arity
+                    ),
+                    min_size=n,
+                    max_size=n,
+                )
+            )
+            out[name] = np.unique(np.asarray(rows, dtype=np.int64), axis=0)
+        return out
+
+    @settings(
+        max_examples=25,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    @given(program=hyp_programs(), dataset=hyp_datasets())
+    def test_hypothesis_memory_conserved_roundtrip(
+        program, dataset, tmp_path_factory
+    ):
+        """For random KBs: running counters stay in sync through load /
+        churn / snapshot / restore / compact, report part-sums hold, and
+        the fact set's flat-equivalent bytes are conserved end to end."""
+        if not dataset:
+            return
+        inc = IncrementalStore(program)
+        inc.load(dataset)
+        _assert_counters_in_sync(inc.store)
+        dels = {p: r[: max(1, r.shape[0] // 2)] for p, r in dataset.items()}
+        inc.apply(deletions=dels)
+        inc.apply(additions=dels)
+        _assert_counters_in_sync(inc.store)
+        want = _flat_bytes(inc.facts)
+
+        snap = str(tmp_path_factory.mktemp("memhyp") / "snap")
+        write_snapshot(
+            snap, inc.facts, epoch=inc.epoch, round_tag=inc._round,
+            rows=inc.rows.to_dict(), counts=inc.counts,
+            explicit=inc.explicit, arities=inc.arities,
+        )
+        inc2, _ = restore_incremental(program, snap)
+        _assert_counters_in_sync(inc2.store)
+        assert _flat_bytes(inc2.facts) == want
+        for parts in (inc2.store.memory_report(), inc2.memory_report()):
+            assert all(v >= 0 for v in parts.values()), parts
+
+        compact_store(inc2)
+        _assert_counters_in_sync(inc2.store)
+        assert _flat_bytes(inc2.facts) == want
