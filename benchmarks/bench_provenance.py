@@ -1,0 +1,111 @@
+"""Provenance bench: what the derivation journal costs to keep on.
+
+DESIGN.md §Provenance promises the journal is cheap enough to leave on
+in serving builds — compact per-(rule, round) records, not per-fact
+traces.  This bench measures that claim directly: the same CMat
+materialisation runs with the journal off and on, interleaved (so
+machine drift hits both modes equally), and the median wall times give
+the journal's relative overhead.
+
+The gateable result is the boolean gauge ``prov.<kb>.overhead_ok``
+(1.0 iff the measured overhead is under :data:`OVERHEAD_BUDGET`, with a
+small absolute floor so sub-20ms deltas on tiny smoke KBs never flap) —
+:mod:`benchmarks.compare` holds it at ±10%, i.e. it must stay 1.0.  The
+raw fraction is published ungated (``prov.<kb>.overhead_frac``) so the
+artifact shows the trend before it breaches.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import CMatEngine
+from repro.core.generators import chain, lubm_like
+from repro.obs import get_registry
+from repro.obs.provenance import get_journal
+
+#: relative journal overhead budget (DESIGN.md §Provenance)
+OVERHEAD_BUDGET = 0.05
+#: absolute wall-time floor: deltas under this never fail the gate
+#: (timer jitter on a sub-second materialisation, not journal cost)
+ABS_FLOOR_S = 0.02
+
+WORKLOADS = [
+    ("lubm-like", lambda: lubm_like(n_dept=10, n_students=400, n_courses=40)),
+    ("chain-TC", lambda: chain(n=200)),
+]
+
+SMOKE_WORKLOADS = [
+    ("lubm-like", lambda: lubm_like(n_dept=4, n_students=60, n_courses=10)),
+    ("chain-TC", lambda: chain(n=60)),
+]
+
+
+def _materialise_once(program, dataset) -> float:
+    t0 = time.perf_counter()
+    eng = CMatEngine(program)
+    eng.load(dataset)
+    eng.materialise()
+    return time.perf_counter() - t0
+
+
+def _median(xs: list[float]) -> float:
+    xs = sorted(xs)
+    n = len(xs)
+    return xs[n // 2] if n % 2 else 0.5 * (xs[n // 2 - 1] + xs[n // 2])
+
+
+def measure_overhead(program, dataset, reps: int = 5) -> dict:
+    """Interleaved off/on repeats -> median overhead of the journal."""
+    journal = get_journal()
+    was = journal.enabled
+    off_s: list[float] = []
+    on_s: list[float] = []
+    records = journal_bytes = 0
+    try:
+        for _ in range(reps):
+            journal.enabled = False
+            off_s.append(_materialise_once(program, dataset))
+            journal.enabled = True
+            journal.clear()
+            on_s.append(_materialise_once(program, dataset))
+            rep = journal.memory_report()
+            records = rep["n_records"]
+            journal_bytes = rep["journal_bytes"]
+    finally:
+        journal.enabled = was
+        journal.clear()
+    med_off, med_on = _median(off_s), _median(on_s)
+    delta = med_on - med_off
+    frac = delta / med_off if med_off > 0 else 0.0
+    ok = frac < OVERHEAD_BUDGET or delta < ABS_FLOOR_S
+    return {
+        "off_s": round(med_off, 4),
+        "on_s": round(med_on, 4),
+        "overhead_frac": round(frac, 4),
+        "overhead_ok": bool(ok),
+        "records": records,
+        "journal_bytes": journal_bytes,
+    }
+
+
+def run(csv=True, smoke=False):
+    reg = get_registry()
+    rows = []
+    for name, gen in (SMOKE_WORKLOADS if smoke else WORKLOADS):
+        program, dataset, _ = gen()
+        res = measure_overhead(program, dataset, reps=3 if smoke else 5)
+        rows.append({"kb": name, **res})
+        reg.gauge(f"prov.{name}.overhead_ok").set(1.0 if res["overhead_ok"] else 0.0)
+        reg.gauge(f"prov.{name}.overhead_frac").set(max(res["overhead_frac"], 0.0))
+    if csv:
+        cols = ["kb", "off_s", "on_s", "overhead_frac", "overhead_ok",
+                "records", "journal_bytes"]
+        print(",".join(cols))
+        for r in rows:
+            print(",".join(str(r[c]) for c in cols))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

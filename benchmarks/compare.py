@@ -80,6 +80,10 @@ METRIC_GATES: dict[str, float] = {
     # the mu-representation losing its edge over flat rows.
     "peak_resident_bytes": 0.10,
     "compression_ratio": 0.10,
+    # provenance journal overhead verdict (prov.<kb>.overhead_ok): a
+    # boolean gauge, 1.0 iff the measured journal overhead stayed under
+    # bench_provenance.OVERHEAD_BUDGET — any flip to 0.0 fails the gate
+    "overhead_ok": 0.10,
 }
 
 

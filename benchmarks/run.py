@@ -97,12 +97,35 @@ def check_schema(payload: dict) -> list[str]:
     return errs
 
 
+def write_history(payload: dict, history_dir: str,
+                  now: float | None = None) -> str:
+    """Append one timestamped ``BENCH_<UTC>.json`` artifact to
+    ``history_dir`` (created if missing) and return its path.  CI
+    uploads the directory, so green runs accumulate a dated series of
+    bench results next to the latest ``bench-results.json``."""
+    import datetime
+    import os
+
+    ts = datetime.datetime.fromtimestamp(
+        time.time() if now is None else now, tz=datetime.timezone.utc
+    )
+    name = f"BENCH_{ts.strftime('%Y%m%dT%H%M%SZ')}.json"
+    os.makedirs(history_dir, exist_ok=True)
+    path = os.path.join(history_dir, name)
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=2, default=str)
+    return path
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write per-bench results as JSON")
+    ap.add_argument("--history", default=None, metavar="DIR",
+                    help="also append a timestamped BENCH_<date>.json "
+                         "copy of the results to this directory")
     args = ap.parse_args()
 
     from . import (
@@ -111,6 +134,7 @@ def main() -> None:
         bench_incremental,
         bench_kernels,
         bench_memory,
+        bench_provenance,
         bench_query,
         bench_representation,
         bench_roofline,
@@ -129,6 +153,7 @@ def main() -> None:
         "storage": bench_storage.run,                # cold vs restore, compaction
         "distributed": bench_distributed.run,        # naive vs semi-naive shards
         "memory": bench_memory.run,                  # obs.memory accounting
+        "provenance": bench_provenance.run,          # journal overhead gate
     }
     from repro.obs import get_registry
 
@@ -176,12 +201,13 @@ def main() -> None:
                 "seconds": round(time.time() - t0, 2),
                 "error": f"{type(e).__name__}: {e}",
             }
-    if args.json:
+    if args.json or args.history:
         payload = {
             "smoke": bool(args.smoke),
             "failures": failures,
             "benches": results,
         }
+    if args.json:
         with open(args.json, "w") as fh:
             json.dump(payload, fh, indent=2, default=str)
         print(f"[json] wrote {args.json}")
@@ -193,6 +219,9 @@ def main() -> None:
                   "machine-comparable across PRs):")
             for err in schema_errs:
                 print(f"  - {err}")
+    if args.history:
+        path = write_history(payload, args.history)
+        print(f"[json] history appended: {path}")
     if failures:
         sys.exit(1)
 

@@ -99,12 +99,17 @@ def elim_dup(
     round_tag: int,
     inplace_splits: bool = False,
     index: "DedupIndex | None" = None,
+    fresh_counts: dict[str, list[int]] | None = None,
 ) -> list[MetaFact]:
     """Return meta-facts for every candidate fact not already in ``M``.
 
     ``candidates`` maps predicate -> list of (column ids, length).
     With ``index`` (a :class:`DedupIndex`) the anti-join runs against the
     persistent sorted index instead of re-unfolding ``M`` each round.
+    When ``fresh_counts`` is given, the per-candidate-group survivor
+    counts are appended to ``fresh_counts[pred]`` in candidate order
+    (provenance attribution: group i of ``candidates[pred]`` kept
+    ``fresh_counts[pred][i]`` fresh facts).
     """
     delta: list[MetaFact] = []
     for pred, cand in candidates.items():
@@ -134,10 +139,15 @@ def elim_dup(
                 not_in_m = np.ones(rows.shape[0], dtype=bool)
             keep = not_in_m & first_occurrence_mask(codes_new)
 
+        counts_out = (
+            fresh_counts.setdefault(pred, []) if fresh_counts is not None else None
+        )
         off = 0
         for cand_cols, length in cand:
             sub = keep[off : off + length]
             off += length
+            if counts_out is not None:
+                counts_out.append(int(sub.sum()))
             if sub.all():
                 delta.append(MetaFact(pred, cand_cols, length, round_tag))
             elif sub.any():

@@ -317,6 +317,48 @@ class DistributedEngine:
         #: leaves shards and the explicit set inconsistent, so further
         #: applies are refused until the next materialise()
         self._dirty = False
+        # provenance (obs.provenance): rule ids are program positions —
+        # the id namespace shared with the host engines and the journal
+        self._rule_ids: dict = {}
+        for k, rule in enumerate(program):
+            self._rule_ids.setdefault(rule, k)
+        self._pjournal = None  # bound per-materialise/apply when enabled
+
+    def _record_dist(
+        self,
+        kind: str,
+        pred: str,
+        *,
+        stratum: int = -1,
+        round_no: int = 0,
+        rule_id: int = -1,
+        pivot: int = -1,
+        n_new: int = 0,
+        shard: int = -1,
+    ) -> None:
+        """Journal one host-visible distributed event (no-op when
+        recording is off).  Per-shard growth records carry the shard tag
+        and are coalesced by ``journal.merge_shard_records()`` at
+        differential verify; per-(rule, pivot) schedule records carry
+        the rule lineage (device kernels do not expose per-rule emit
+        counts, so counts live on the shard records)."""
+        j = self._pjournal
+        if j is None:
+            return
+        from ..obs.provenance import DerivationRecord
+
+        j.record(DerivationRecord(
+            kind=kind,
+            engine="dist",
+            stratum=stratum,
+            round=round_no,
+            rule_id=rule_id,
+            pivot=pivot,
+            pred=pred,
+            n_new=int(n_new),
+            shard=int(shard),
+            epoch=j.epoch,
+        ))
 
     # -------------------------------------------------------------- #
     # sharding / routing
@@ -1076,14 +1118,44 @@ class DistributedEngine:
                 self.stats.rule_applications_skipped += skipped
                 if not pairs:
                     break
+                round_no = len(self.stats.per_round) + 1
+                rule_ids = sorted({
+                    self._rule_ids.get(rule, -1) for rule, _p, _pl in pairs
+                })
+                counts_before = (
+                    {
+                        p: np.asarray(self._state[p][1]).copy()
+                        for p in self._preds
+                    }
+                    if self._pjournal is not None
+                    else None
+                )
                 with span(
                     "dist.round",
-                    round=len(self.stats.per_round) + 1,
+                    round=round_no,
                     stratum=si,
                     rule_applications=len(pairs),
+                    rule_ids=rule_ids,
                 ) as sp:
                     total_new, joined = self._mat_round(pairs)
                     sp.set(new_facts=total_new, rows_joined=joined)
+                if counts_before is not None:
+                    for rule, pivot, _plan in pairs:
+                        self._record_dist(
+                            "schedule", rule.head.predicate,
+                            stratum=si, round_no=round_no,
+                            rule_id=self._rule_ids.get(rule, -1),
+                            pivot=-1 if pivot is None else pivot,
+                        )
+                    for p in self._preds:
+                        grow = (
+                            np.asarray(self._state[p][1]) - counts_before[p]
+                        )
+                        for s in np.nonzero(grow)[0]:
+                            self._record_dist(
+                                "apply", p, stratum=si, round_no=round_no,
+                                n_new=int(grow[s]), shard=int(s),
+                            )
                 rounds += 1
                 self.stats.n_rule_applications += len(pairs)
                 self.stats.per_round.append(
@@ -1175,6 +1247,12 @@ class DistributedEngine:
         """Run rounds to fixpoint; returns per-predicate host arrays."""
         self._prepare(dataset)
         self.stats = DistributedStats()
+        from ..obs.provenance import get_journal
+
+        journal = get_journal()
+        self._pjournal = journal if journal.enabled else None
+        if self._pjournal is not None:
+            self._pjournal.attach_program(self.program)
         strata = (
             stratify(self.program) if self.seminaive else [list(self.program)]
         )
@@ -1198,6 +1276,8 @@ class DistributedEngine:
         self.stats.rounds = rounds
         self.stats.plan_cache = self._plan_cache.counters()
         publish_distributed(self.stats)
+        if self._pjournal is not None:
+            self._pjournal.publish()
         result = {}
         for p in self._preds:
             rows, cnt, _lo = self._state[p]
@@ -1328,6 +1408,13 @@ class DistributedEngine:
         t0 = time.perf_counter()
         st = DistributedStats()
         self.stats = st
+        from ..obs.provenance import get_journal
+
+        journal = get_journal()
+        self._pjournal = journal if journal.enabled else None
+        if self._pjournal is not None:
+            self._pjournal.begin_epoch(self.epoch + 1)
+            self._pjournal.attach_program(self.program)
         adds = normalise_batch(additions)
         dels = normalise_batch(deletions)
         unknown = (set(adds) | set(dels)) - set(self._preds)
@@ -1368,6 +1455,8 @@ class DistributedEngine:
         st.plan_cache = self._plan_cache.counters()
         st.time_total = time.perf_counter() - t0
         publish_distributed(st)
+        if self._pjournal is not None:
+            self._pjournal.publish()
         return st
 
     def _deletion_sweep(self, dels: dict[str, np.ndarray], st) -> None:
@@ -1396,6 +1485,11 @@ class DistributedEngine:
             n_over = sum(int(r.shape[0]) for r in over.values())
             st.n_overdeleted += n_over
             sp.set(n_overdeleted=n_over)
+            for pred, rows in over.items():
+                if rows.shape[0]:
+                    self._record_dist(
+                        "overdelete", pred, n_new=int(rows.shape[0])
+                    )
 
         # --- delete: drop overdeleted rows from every shard ------------ #
         with span("dist.delete"):
@@ -1440,6 +1534,11 @@ class DistributedEngine:
             n_restored = sum(int(r.shape[0]) for r in restored.values())
             st.n_rederived += n_restored
             sp.set(n_rederived=n_restored)
+            for pred, rows in restored.items():
+                if rows.shape[0]:
+                    self._record_dist(
+                        "rederive", pred, n_new=int(rows.shape[0])
+                    )
 
             # --- fold restorations back into the base partitions ------- #
             if n_restored:
@@ -1524,6 +1623,8 @@ class DistributedEngine:
         host engine maintained with the same batches (an
         :class:`~repro.incremental.IncrementalStore`, or any object with
         ``to_dict()``, or a plain ``{pred: rows}`` dict)."""
+        if self._pjournal is not None:
+            self._pjournal.merge_shard_records()
         want = host.to_dict() if hasattr(host, "to_dict") else dict(host)
         got = self.to_dict()
         want = {p: r for p, r in want.items() if np.asarray(r).shape[0]}

@@ -196,6 +196,12 @@ class CMatEngine:
             from .dedup import DedupIndex
 
             self._dedup_index = DedupIndex() if dedup_index else None
+        # rule ids are program positions (shared by every engine and the
+        # provenance journal); duplicates keep their first position
+        self._rule_ids: dict[Rule, int] = {}
+        for k, rule in enumerate(program):
+            self._rule_ids.setdefault(rule, k)
+        self._journal = None  # bound per-materialise when recording is on
         # obs.memory: the engine reports its side structures; the
         # ColumnStore and a FactBuffers dedup index self-register
         register_reporter("cmat", self)
@@ -244,6 +250,12 @@ class CMatEngine:
         so far (none of its rules has ever run), and subsequent rounds
         are standard delta-restricted semi-naive iterations."""
         t_start = time.perf_counter()
+        from ..obs.provenance import get_journal
+
+        journal = get_journal()
+        self._journal = journal if journal.enabled else None
+        if self._journal is not None:
+            journal.attach_program(self.program)
         strata = (
             stratify(self.program)
             if self.stratify_program
@@ -267,7 +279,8 @@ class CMatEngine:
                             "cmat.round", round=round_no, stratum=si
                         ) as sp:
                             round_stats = self._round(
-                                round_no, stratum, naive=naive
+                                round_no, stratum, naive=naive,
+                                stratum_idx=si,
                             )
                             sp.set(
                                 new_facts=round_stats["new_facts"],
@@ -298,16 +311,27 @@ class CMatEngine:
         self.stats.plan_cache = self.plan_cache.counters()
         self.stats.time_total = time.perf_counter() - t_start
         publish_materialisation(self.stats)
+        if self._journal is not None:
+            self._journal.publish()
         return self.stats
 
     # ------------------------------------------------------------------ #
-    def _round(self, round_no: int, rules: list[Rule], naive: bool = False) -> dict:
+    def _round(
+        self,
+        round_no: int,
+        rules: list[Rule],
+        naive: bool = False,
+        stratum_idx: int = 0,
+    ) -> dict:
         facts, store = self.facts, self.store
         candidates: dict[str, list[tuple[tuple[int, ...], int]]] = {}
         flat_candidates: dict[str, list[np.ndarray]] = {}
         match_cache: dict = {}
         n_apps = 0
         n_skipped = 0
+        # provenance: one pending entry per rule application; resolved
+        # into DerivationRecords after dedup assigns fresh counts
+        prov: list[dict] | None = [] if self._journal is not None else None
         self._stats_view.refresh()
         if naive:
             delta_preds = {p for p in facts.predicates() if facts.all(p)}
@@ -358,8 +382,11 @@ class CMatEngine:
                     and plan.joins[-1].kind == "xjoin"
                     and len(rule.head.terms) <= 2
                 )
+                rid = self._rule_ids.get(rule, -1)
+                t_app = time.perf_counter_ns() if prov is not None else 0
                 with span(
-                    "cmat.rule", head=rule.head.predicate, pivot=i
+                    "cmat.rule", head=rule.head.predicate, pivot=i,
+                    rule_id=rid, stratum=stratum_idx,
                 ):
                     if fused_tail:
                         result = self._eval_plan_fused(
@@ -369,8 +396,25 @@ class CMatEngine:
                         if isinstance(result, np.ndarray):
                             if result.shape[0]:
                                 n_apps += 1
+                                pred = rule.head.predicate
+                                if prov is not None:
+                                    prov.append({
+                                        "rule_id": rid,
+                                        "pivot": -1 if naive else i,
+                                        "pred": pred,
+                                        "path": "flat",
+                                        "block": len(
+                                            flat_candidates.get(pred, [])
+                                        ),
+                                        "n_emitted": int(result.shape[0]),
+                                        "in_ids": self._pivot_mf_ids(
+                                            rule, i, naive
+                                        ),
+                                        "time_ns": time.perf_counter_ns()
+                                        - t_app,
+                                    })
                                 flat_candidates.setdefault(
-                                    rule.head.predicate, []
+                                    pred, []
                                 ).append(result)
                             continue
                         # wide join fell back to the structure-shared path
@@ -381,15 +425,36 @@ class CMatEngine:
                 if result is None or result.is_empty():
                     continue
                 n_apps += 1
+                pred = rule.head.predicate
+                g0 = len(candidates.get(pred, []))
                 self._emit_head(rule, result, candidates)
+                if prov is not None:
+                    groups = candidates.get(pred, [])[g0:]
+                    prov.append({
+                        "rule_id": rid,
+                        "pivot": -1 if naive else i,
+                        "pred": pred,
+                        "path": "mu",
+                        "groups": (g0, g0 + len(groups)),
+                        "n_emitted": int(sum(ln for _, ln in groups)),
+                        "in_ids": self._pivot_mf_ids(rule, i, naive),
+                        "time_ns": time.perf_counter_ns() - t_app,
+                    })
 
         t0 = time.perf_counter()
+        fresh_mu: dict[str, list[int]] | None = {} if prov is not None else None
+        fresh_flat: dict[str, list[int]] | None = (
+            {} if prov is not None else None
+        )
         with span("cmat.dedup", round=round_no):
             delta = elim_dup(candidates, facts, store, round_no,
-                             self.inplace_splits, index=self._dedup_index)
+                             self.inplace_splits, index=self._dedup_index,
+                             fresh_counts=fresh_mu)
             if flat_candidates:
                 delta.extend(
-                    self._dedup_flat(flat_candidates, round_no)
+                    self._dedup_flat(
+                        flat_candidates, round_no, fresh_counts=fresh_flat
+                    )
                 )
         self.stats.time_dedup += time.perf_counter() - t0
 
@@ -401,6 +466,10 @@ class CMatEngine:
 
         for mf in delta:
             facts.add(mf)
+        if prov:
+            self._record_round(
+                prov, fresh_mu, fresh_flat, delta, round_no, stratum_idx
+            )
         self.stats.n_rule_applications += n_apps
         self.stats.rule_applications_skipped += n_skipped
         return {
@@ -609,8 +678,63 @@ class CMatEngine:
                 cols.append(r_cols[t][r_sel])
         return np.stack(cols, axis=1)
 
+    def _pivot_mf_ids(self, rule: Rule, pivot: int, naive: bool) -> tuple:
+        """Input lineage for one application: the meta-fact ids of the
+        pivot predicate's source partition (capped — best-effort)."""
+        pred = rule.body[pivot].predicate
+        mfs = self.facts.all(pred) if naive else self.facts.delta(pred)
+        return tuple(mf.mf_id for mf in mfs[:16])
+
+    def _record_round(
+        self,
+        prov: list[dict],
+        fresh_mu: dict[str, list[int]] | None,
+        fresh_flat: dict[str, list[int]] | None,
+        delta: list[MetaFact],
+        round_no: int,
+        stratum_idx: int,
+    ) -> None:
+        """Resolve the round's pending applications into journal records:
+        dedup's per-group/per-block survivor counts give each record its
+        ``n_new``; the stored delta gives output meta-fact ids per head
+        predicate (round granularity — singleton recompression merges
+        groups, so finer ownership would be fiction)."""
+        from ..obs.provenance import DerivationRecord
+
+        out_ids: dict[str, list[int]] = {}
+        for mf in delta:
+            out_ids.setdefault(mf.predicate, []).append(mf.mf_id)
+        for p in prov:
+            pred = p["pred"]
+            if p["path"] == "mu":
+                counts = (fresh_mu or {}).get(pred, [])
+                g0, g1 = p["groups"]
+                n_new = int(sum(counts[g0:g1]))
+            else:
+                counts = (fresh_flat or {}).get(pred, [])
+                b = p["block"]
+                n_new = int(counts[b]) if b < len(counts) else 0
+            self._journal.record(DerivationRecord(
+                kind="apply",
+                engine="cmat",
+                stratum=stratum_idx,
+                round=round_no,
+                rule_id=p["rule_id"],
+                pivot=p["pivot"],
+                pred=pred,
+                n_emitted=p["n_emitted"],
+                n_new=n_new,
+                in_mf_ids=p["in_ids"],
+                out_mf_ids=tuple(out_ids.get(pred, [])[:16]),
+                epoch=self._journal.epoch,
+                time_ns=p["time_ns"],
+            ))
+
     def _dedup_flat(
-        self, flat_candidates: dict[str, list[np.ndarray]], round_no: int
+        self,
+        flat_candidates: dict[str, list[np.ndarray]],
+        round_no: int,
+        fresh_counts: dict[str, list[int]] | None = None,
     ) -> list[MetaFact]:
         """Dedup the round's flat head rows against the persistent
         ``FactBuffers`` index (which :func:`elim_dup` has already updated
@@ -631,6 +755,12 @@ class CMatEngine:
                 # arity <= 2 is guaranteed by the fused-tail gate, so the
                 # packed fast path never falls back
                 assert keep is not None, "fused tail emitted unpackable arity"
+                if fresh_counts is not None:
+                    counts, off = [], 0
+                    for b in blocks:
+                        counts.append(int(keep[off:off + b.shape[0]].sum()))
+                        off += b.shape[0]
+                    fresh_counts[pred] = counts
                 if not keep.any():
                     continue
                 rows_fresh += int(keep.sum())
@@ -649,6 +779,18 @@ class CMatEngine:
         return compile_body(
             rule.body, self._stats_view, pivot=pivot, reorder=self.plan_bodies
         ).explain()
+
+    def explain_fact(self, pred: str, terms, decode=None) -> dict | None:
+        """Verified proof tree for a materialised fact (obs.provenance):
+        explicit facts are leaves, derived facts are re-derived step by
+        step with the journal as a search accelerator."""
+        from ..obs.provenance import Explainer, get_journal
+
+        ex = Explainer.from_fact_store(
+            self.program, self.facts, self._explicit,
+            journal=get_journal(), decode=decode,
+        )
+        return ex.explain(pred, terms)
 
     # ------------------------------------------------------------------ #
     def _emit_head(self, rule: Rule, L: SubstSet, candidates: dict) -> None:

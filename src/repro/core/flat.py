@@ -122,6 +122,14 @@ class FlatEngine:
         self.facts: dict[str, np.ndarray] = {}
         self.rounds = 0
         self.time_total = 0.0
+        self._rule_ids: dict[Rule, int] = {}
+        for k, rule in enumerate(program):
+            self._rule_ids.setdefault(rule, k)
+        self._journal = None  # bound per-materialise when recording is on
+        # provenance: per-predicate (round, fresh rows) append log — the
+        # flat engine's round tags (facts arrays carry no per-row round)
+        self._prov_fresh: dict[str, list[tuple[int, np.ndarray]]] = {}
+        self._explicit: dict[str, np.ndarray] = {}
         register_reporter("flat", self)
 
     def memory_report(self) -> dict[str, int]:
@@ -137,9 +145,19 @@ class FlatEngine:
             if rows.ndim == 1:
                 rows = rows.reshape(-1, 1)
             self.facts[pred] = unique_rows(rows)
+            self._explicit[pred] = self.facts[pred]
 
     def materialise(self) -> dict[str, np.ndarray]:
         t0 = time.perf_counter()
+        from ..obs.provenance import get_journal
+
+        journal = get_journal()
+        self._journal = journal if journal.enabled else None
+        if self._journal is not None:
+            journal.attach_program(self.program)
+            self._prov_fresh = {
+                p: [(0, r)] for p, r in self.facts.items()
+            }
         delta = {p: r for p, r in self.facts.items()}
         rounds = 0
         with span("flat.materialise"):
@@ -148,17 +166,46 @@ class FlatEngine:
                 with span("flat.round", round=rounds):
                     stats_view = ArrayStats(self.facts)
                     derived: dict[str, list[np.ndarray]] = {}
+                    pending: list[dict] = []
                     for rule in self.program:
                         for i in range(len(rule.body)):
+                            t_app = (
+                                time.perf_counter_ns()
+                                if self._journal is not None
+                                else 0
+                            )
                             rows = self._eval(rule, i, delta, stats_view)
                             if rows is not None and rows.shape[0]:
+                                if self._journal is not None:
+                                    pending.append({
+                                        "rule_id": self._rule_ids.get(
+                                            rule, -1
+                                        ),
+                                        "pivot": i,
+                                        "pred": rule.head.predicate,
+                                        "rows": rows,
+                                        "time_ns": time.perf_counter_ns()
+                                        - t_app,
+                                    })
                                 derived.setdefault(
                                     rule.head.predicate, []
                                 ).append(rows)
+                    watermarks = (
+                        {
+                            p: self.facts.get(p, np.zeros((0, 1))).shape[0]
+                            for p in derived
+                        }
+                        if self._journal is not None
+                        else {}
+                    )
                     if self.fused:
                         delta = self._absorb_fused(derived)
                     else:
                         delta = self._absorb_per_step(derived)
+                    if self._journal is not None:
+                        self._record_round(
+                            pending, delta, watermarks, rounds
+                        )
         self.rounds = rounds
         self.time_total = time.perf_counter() - t0
         reg = get_registry()
@@ -166,7 +213,65 @@ class FlatEngine:
         reg.counter("flat.time_total").inc(self.time_total)
         if self.fused:
             reg.counter("flat.fused_rounds").inc(rounds)
+        if self._journal is not None:
+            self._journal.publish()
         return self.facts
+
+    def _record_round(
+        self,
+        pending: list[dict],
+        fresh: dict[str, np.ndarray],
+        watermarks: dict[str, int],
+        round_no: int,
+    ) -> None:
+        """Resolve the round's rule applications into journal records.
+        ``n_new`` credits each application with the fresh rows it emitted
+        (co-deriving rules both get credit); ``row_span`` carries the
+        predicate's sorted-table watermarks across the absorb."""
+        from ..obs.provenance import DerivationRecord
+
+        for pred, rows in fresh.items():
+            self._prov_fresh.setdefault(pred, []).append((round_no, rows))
+        for p in pending:
+            pred = p["pred"]
+            f = fresh.get(pred)
+            if f is None or f.shape[0] == 0:
+                n_new = 0
+            else:
+                n_new = int(multicol_member(f, p["rows"]).sum())
+            after = self.facts.get(pred)
+            self._journal.record(DerivationRecord(
+                kind="apply",
+                engine="flat",
+                stratum=-1,  # the flat oracle runs unstratified
+                round=round_no,
+                rule_id=p["rule_id"],
+                pivot=p["pivot"],
+                pred=pred,
+                n_emitted=int(p["rows"].shape[0]),
+                n_new=n_new,
+                row_span=(
+                    watermarks.get(pred, 0),
+                    0 if after is None else int(after.shape[0]),
+                ),
+                epoch=self._journal.epoch,
+                time_ns=p["time_ns"],
+            ))
+
+    def explain_fact(self, pred: str, terms, decode=None) -> dict | None:
+        """Verified proof tree over the flat materialisation (the
+        per-round fresh log supplies round tags when recording was on;
+        without it every fact falls back to round 0 and recursive
+        explanations may be unavailable)."""
+        from ..obs.provenance import Explainer, get_journal
+
+        ex = Explainer.from_flat(
+            self.program, self.facts,
+            fresh_log=self._prov_fresh or None,
+            explicit=self._explicit,
+            journal=get_journal(), decode=decode,
+        )
+        return ex.explain(pred, terms)
 
     def _absorb_per_step(self, derived: dict) -> dict[str, np.ndarray]:
         """Legacy round tail: dedup via a fresh ``np.unique`` of the

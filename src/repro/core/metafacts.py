@@ -22,6 +22,7 @@ class MetaFact:
     columns: tuple[int, ...]  # meta-constant ids
     length: int
     round: int = 0  # semi-naive round in which it was derived
+    mf_id: int = -1  # store-assigned lineage id (-1 = not yet stored)
 
     @property
     def arity(self) -> int:
@@ -43,9 +44,13 @@ class FactStore:
         self.store = store
         self._facts: dict[str, list[MetaFact]] = {}
         self.current_round = 0
+        self._next_mf_id = 0
 
     # ------------------------------------------------------------------ #
     def add(self, mf: MetaFact) -> None:
+        if mf.mf_id < 0:
+            mf.mf_id = self._next_mf_id
+            self._next_mf_id += 1
         self._facts.setdefault(mf.predicate, []).append(mf)
 
     def predicates(self):

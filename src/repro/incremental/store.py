@@ -201,6 +201,13 @@ class IncrementalStore:
         self.stats_view = PhaseStats(self.facts, self.arities)
         # per-apply pre-update meta-fact snapshots (read by the phases)
         self.pre_mfs: dict[str, list] = {}
+        # provenance (obs.provenance — distinct from the maintenance
+        # journal above): bound per-apply when recording is on
+        self._pjournal = None
+        self._cur_stratum = -1
+        self._rule_ids: dict = {}
+        for k, rule in enumerate(program):
+            self._rule_ids.setdefault(rule, k)
         # obs.memory: the store reports its side structures only — the
         # ColumnStore registers itself, so its node bytes are never
         # counted twice
@@ -357,6 +364,13 @@ class IncrementalStore:
         facts are ignored (idempotent batches)."""
         t_start = time.perf_counter()
         st = IncrementalStats()
+        from ..obs.provenance import get_journal
+
+        pj = get_journal()
+        self._pjournal = pj if pj.enabled else None
+        if self._pjournal is not None:
+            self._pjournal.begin_epoch(self.epoch + 1)
+            self._pjournal.attach_program(self.program)
         adds = normalise_batch(additions)
         dels = normalise_batch(deletions)
         if self.wal is not None:
@@ -417,7 +431,44 @@ class IncrementalStore:
         )
         st.journal_bytes = self.journal_bytes()
         publish_incremental(st)
+        if self._pjournal is not None:
+            self._pjournal.publish()
         return st
+
+    def record_provenance(
+        self,
+        kind: str,
+        pred: str,
+        *,
+        n_emitted: int = 0,
+        n_new: int = 0,
+        rule_id: int = -1,
+        out_mfs=(),
+        time_ns: int = 0,
+    ) -> None:
+        """Journal one maintenance-phase step (no-op unless recording is
+        on).  The DRed phases call this to answer *why a fact survived*:
+        ``survive_explicit`` / ``survive_backward`` / ``rederive``
+        records carry the restoring rule and the restored meta-facts."""
+        j = self._pjournal
+        if j is None:
+            return
+        from ..obs.provenance import DerivationRecord
+
+        j.record(DerivationRecord(
+            kind=kind,
+            engine="inc",
+            stratum=self._cur_stratum,
+            round=self._round,
+            rule_id=rule_id,
+            pivot=-1,
+            pred=pred,
+            n_emitted=int(n_emitted),
+            n_new=int(n_new),
+            out_mf_ids=tuple(mf.mf_id for mf in list(out_mfs)[:16]),
+            epoch=j.epoch,
+            time_ns=time_ns,
+        ))
 
     # ------------------------------------------------------------------ #
     # deletion sweep
@@ -438,9 +489,12 @@ class IncrementalStore:
                 self.delete_rows(pred, rows)
                 removed[pred] = rows
                 st.n_deleted += int(rows.shape[0])
+                self.record_provenance(
+                    "delete_explicit", pred, n_new=rows.shape[0]
+                )
         st.time_delete += time.perf_counter() - t0
 
-        for stratum in self.strata:
+        for s_idx, stratum in enumerate(self.strata):
             stratum_heads, body_preds = stratum_predicates(stratum)
             seeds = {
                 p: removed[p] for p in body_preds if p in removed
@@ -450,6 +504,7 @@ class IncrementalStore:
             }
             if not seeds and not head_dels:
                 continue
+            self._cur_stratum = s_idx
             self.stats_view.refresh()
             if self.counting and not is_recursive(stratum):
                 with span("inc.counting_delete", rules=len(stratum)):
@@ -533,6 +588,10 @@ class IncrementalStore:
                 self.delete_rows(pred, dead)
                 net[pred] = dead
                 st.n_deleted += int(dead.shape[0])
+            self.record_provenance(
+                "count_delete", pred,
+                n_emitted=uniq.shape[0], n_new=dead.shape[0],
+            )
         st.time_counting += time.perf_counter() - t0
         return net
 
@@ -555,9 +614,13 @@ class IncrementalStore:
         for pred, rows in adds.items():
             if pred in self._head_preds:
                 continue  # handled by the predicate's stratum
-            note_added(pred, rows, self.add_rows(pred, rows))
+            mfs = self.add_rows(pred, rows)
+            note_added(pred, rows, mfs)
+            self.record_provenance(
+                "insert_explicit", pred, n_new=rows.shape[0], out_mfs=mfs
+            )
 
-        for stratum in self.strata:
+        for s_idx, stratum in enumerate(self.strata):
             stratum_heads, body_preds = stratum_predicates(stratum)
             seeds = {
                 p: added_mfs[p] for p in body_preds if p in added_mfs
@@ -568,6 +631,7 @@ class IncrementalStore:
             }
             if not seeds and not head_adds:
                 continue
+            self._cur_stratum = s_idx
             self.stats_view.refresh()
             if self.counting and not is_recursive(stratum):
                 with span("inc.counting_insert", rules=len(stratum)):
@@ -608,6 +672,11 @@ class IncrementalStore:
             if fresh.shape[0]:
                 mfs = self.add_rows(pred, fresh, counts=gained[~present])
                 note_added(pred, fresh, mfs)
+                self.record_provenance(
+                    "insert", pred,
+                    n_emitted=uniq.shape[0], n_new=fresh.shape[0],
+                    out_mfs=mfs,
+                )
         st.time_counting += time.perf_counter() - t0
 
     def _seminaive_insert(self, stratum, seeds, head_adds, st, note_added):
@@ -657,6 +726,11 @@ class IncrementalStore:
                         continue
                     rows, _ = project_head(rule.head, L, self.store)
                     derived.setdefault(rule.head.predicate, []).append(rows)
+                    self.record_provenance(
+                        "apply", rule.head.predicate,
+                        rule_id=self._rule_ids.get(rule, -1),
+                        n_emitted=rows.shape[0],
+                    )
             self.store.release(mark)
 
             new_delta: dict[str, list] = {}
@@ -667,6 +741,11 @@ class IncrementalStore:
                     mfs = self.add_rows(pred, fresh)
                     new_delta[pred] = mfs
                     note_added(pred, fresh, mfs)
+                    self.record_provenance(
+                        "insert", pred,
+                        n_emitted=cand.shape[0], n_new=fresh.shape[0],
+                        out_mfs=mfs,
+                    )
             delta_mfs = new_delta
 
     # ------------------------------------------------------------------ #
@@ -778,6 +857,19 @@ class IncrementalStore:
     def to_dict(self) -> dict[str, np.ndarray]:
         """Flat per-predicate materialisation (sorted unique rows)."""
         return self.rows.to_dict()
+
+    def explain_fact(self, pred: str, terms, decode=None) -> dict | None:
+        """Verified proof tree for a maintained fact (obs.provenance) —
+        works on a freshly-loaded, updated, or restored store: rounds
+        persist through snapshots, and the journal is only a search
+        accelerator."""
+        from ..obs.provenance import Explainer, get_journal
+
+        ex = Explainer.from_fact_store(
+            self.program, self.facts, self.explicit,
+            journal=get_journal(), decode=decode,
+        )
+        return ex.explain(pred, terms)
 
     def check_integrity(self) -> None:
         """Test/debug invariants: the row index matches the unfolded

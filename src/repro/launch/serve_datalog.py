@@ -168,6 +168,60 @@ def _rows_by_pred(items):
     return {p: np.asarray(r, dtype=np.int64) for p, r in out.items()}
 
 
+def _parse_fact_spec(spec: str, dictionary):
+    """``pred(t1, t2)`` -> ``(pred, (id1, id2))``; terms resolve through
+    the KB dictionary, falling back to raw integer ids."""
+    spec = spec.strip()
+    if "(" not in spec or not spec.endswith(")"):
+        raise ValueError(
+            f"bad --explain spec {spec!r}; expected pred(term, term)"
+        )
+    pred, rest = spec.split("(", 1)
+    terms = []
+    for tok in rest[:-1].split(","):
+        tok = tok.strip().strip("'\"")
+        if dictionary is not None and tok in dictionary:
+            terms.append(dictionary.id_of(tok))
+        else:
+            terms.append(int(tok))
+    return pred.strip(), tuple(terms)
+
+
+def _proof_summary(node: dict) -> dict:
+    depth, n_nodes, all_verified = 0, 0, True
+    stack = [(node, 1)]
+    while stack:
+        nd, d = stack.pop()
+        n_nodes += 1
+        depth = max(depth, d)
+        all_verified = all_verified and bool(nd.get("verified"))
+        for child in nd.get("children", ()):
+            stack.append((child, d + 1))
+    return {"depth": depth, "nodes": n_nodes, "verified": all_verified}
+
+
+def _sample_derived(mat, explicit, n: int, seed: int):
+    """Up to ``n`` (pred, terms) pairs drawn from the materialisation
+    minus the explicit set — the facts a proof tree is non-trivial for."""
+    from ..core.util import multicol_member
+
+    pool = []
+    for pred in sorted(mat):
+        rows = np.asarray(mat[pred], dtype=np.int64)
+        rows = rows.reshape(rows.shape[0], -1)
+        exp = np.asarray(explicit.get(pred, np.zeros((0, 0))), dtype=np.int64)
+        if exp.shape[0]:
+            exp = exp.reshape(exp.shape[0], -1)
+            if exp.shape[1] == rows.shape[1]:
+                rows = rows[~multicol_member(rows, exp)]
+        pool.extend((pred, tuple(int(v) for v in row)) for row in rows)
+    if not pool:
+        return []
+    rng = np.random.default_rng(seed)
+    idx = rng.choice(len(pool), size=min(n, len(pool)), replace=False)
+    return [pool[int(i)] for i in idx]
+
+
 def make_update_batches(dataset, n_updates: int, size: int, seed: int):
     """Rotating explicit-fact update batches: each batch deletes ``size``
     facts from a shuffled pool and re-inserts the batch deleted one
@@ -238,7 +292,33 @@ def _main(argv=None):
                          "here (periodic in --live mode, final always)")
     ap.add_argument("--report-json", default=None, metavar="PATH",
                     help="append one JSON object per report block here")
+    ap.add_argument("--provenance", action="store_true",
+                    help="record the derivation journal during "
+                         "materialisation/updates (implied by --explain, "
+                         "--explain-sample, --hot-rules)")
+    ap.add_argument("--explain", action="append", default=[],
+                    metavar="FACT",
+                    help="explain one materialised fact, e.g. "
+                         "'path(v000000, v000003)' — repeatable; terms "
+                         "resolve through the KB dictionary (or raw ids)")
+    ap.add_argument("--explain-sample", type=int, default=0, metavar="N",
+                    help="explain N randomly sampled derived "
+                         "(non-explicit) facts and verify their proofs")
+    ap.add_argument("--hot-rules", action="store_true",
+                    help="render the per-rule cost attribution table "
+                         "(derived/redundant/time) from the journal")
     args = ap.parse_args(argv)
+
+    want_prov = bool(
+        args.provenance or args.explain or args.explain_sample
+        or args.hot_rules
+    )
+    if want_prov:
+        from ..obs.provenance import get_journal
+
+        journal = get_journal()
+        journal.enabled = True
+        journal.clear()
 
     if args.trace_out:
         get_tracer().enable()
@@ -650,6 +730,87 @@ def _main(argv=None):
             )
             if not ok:
                 return 1
+    if want_prov:
+        from ..obs.provenance import get_journal
+
+        journal = get_journal()
+        explain_src = (
+            inc if inc is not None
+            else source if hasattr(source, "explain_fact") else None
+        )
+
+        def _decode(tid):
+            try:
+                return dictionary.term_of(int(tid))
+            except (KeyError, IndexError):  # id outside the dictionary
+                return int(tid)
+
+        targets = []
+        parse_errors = []
+        for spec in args.explain:
+            try:
+                targets.append(_parse_fact_spec(spec, dictionary))
+            except ValueError as e:
+                parse_errors.append(str(e))
+        if args.explain_sample and explain_src is not None:
+            mat = (
+                inc.to_dict() if inc is not None
+                else source.materialisation()
+            )
+            explicit = inc.explicit if inc is not None else source._explicit
+            targets += _sample_derived(
+                mat, explicit, args.explain_sample, args.seed
+            )
+
+        explanations = []
+        if explain_src is not None:
+            for pred, terms in targets:
+                node = explain_src.explain_fact(pred, terms, decode=_decode)
+                if node is None:
+                    shown = ", ".join(str(_decode(t)) for t in terms)
+                    explanations.append({
+                        "fact": f"{pred}({shown})",
+                        "found": False, "verified": False,
+                    })
+                else:
+                    explanations.append({
+                        "fact": node["fact"], "found": True,
+                        **_proof_summary(node),
+                    })
+        hot = journal.hot_rules(10) if args.hot_rules else []
+        n_ok = sum(1 for e in explanations if e["verified"])
+        prov_bytes = journal.memory_report()["journal_bytes"]
+        text = (
+            f"journal {len(journal.records)} records "
+            f"({journal.dropped} dropped, {prov_bytes / 1024:.1f}KiB)"
+        )
+        if explanations:
+            text += f"; {n_ok}/{len(explanations)} explanations verified"
+        elif targets and explain_src is None:
+            text += "; explain skipped (frozen snapshot serving, no engine)"
+        report.emit(
+            "provenance", text,
+            {"records": len(journal.records), "dropped": journal.dropped,
+             "journal_bytes": prov_bytes, "explanations": explanations,
+             "hot_rules": hot, "parse_errors": parse_errors,
+             "explain_available": explain_src is not None},
+        )
+        for e in explanations:
+            mark = "ok" if e["verified"] else (
+                "NOT FOUND" if not e["found"] else "UNVERIFIED"
+            )
+            extra = (
+                f" depth={e['depth']} nodes={e['nodes']}" if e["found"] else ""
+            )
+            print(f"  explain {e['fact']}: {mark}{extra}")
+        if hot:
+            print("  hot rules (by recorded time):")
+            for h in hot:
+                print(
+                    f"    R{h['rule_id']:<3} {h['time_ns'] / 1e6:8.2f}ms  "
+                    f"derived={h['derived']:<8} redundant={h['redundant']:<8} "
+                    f"rounds={h['rounds_active']:<3} {h['rule']}"
+                )
     if args.pallas:
         from ..kernels import ops
 
@@ -695,15 +856,23 @@ def _main(argv=None):
 
 
 def main(argv=None):
-    # --trace-out enables the process tracer; restore it on every exit
-    # path so in-process callers (tests, drivers) see no state leak
+    # --trace-out enables the process tracer and the provenance flags
+    # enable the journal; restore both on every exit path so in-process
+    # callers (tests, drivers) see no state leak
+    from ..obs.provenance import get_journal
+
     tr = get_tracer()
     was_enabled = tr.enabled
+    journal = get_journal()
+    prov_was = journal.enabled
     try:
         return _main(argv)
     finally:
         if not was_enabled:
             tr.disable()
+        if not prov_was:
+            journal.enabled = False
+            journal.clear()
 
 
 if __name__ == "__main__":

@@ -47,6 +47,14 @@ from .metrics import (
     get_registry,
     set_registry,
 )
+from .provenance import (
+    DerivationJournal,
+    DerivationRecord,
+    Explainer,
+    get_journal,
+    proof_to_dot,
+    proof_to_json,
+)
 from .trace import Tracer, get_tracer, instant, set_tracer, span
 
 __all__ = [
@@ -77,4 +85,10 @@ __all__ = [
     "publish_incremental",
     "publish_distributed",
     "publish_query_cache",
+    "DerivationJournal",
+    "DerivationRecord",
+    "Explainer",
+    "get_journal",
+    "proof_to_json",
+    "proof_to_dot",
 ]

@@ -80,6 +80,22 @@ DISTRIBUTED_COUNTERS = (
 )
 
 
+def _publish_rule_scope(reg: MetricsRegistry, stats) -> None:
+    """Mirror the per-stratum breakdown and the host (rule, pivot) skip
+    counter under the ``rule.*`` scope (shared with the provenance
+    journal's per-rule cost gauges, so one snapshot prefix answers
+    "where did rule work go").  Per-stratum entries are levels of the
+    *last* run — gauges, republish-idempotent."""
+    for s in getattr(stats, "per_stratum", ()) or ():
+        si = s.get("stratum", 0)
+        for f in ("rounds", "rules", "rule_applications"):
+            if f in s:
+                reg.gauge(f"rule.stratum{si}.{f}").set(s[f])
+    reg.counter("rule.applications_skipped").inc(
+        getattr(stats, "rule_applications_skipped", 0)
+    )
+
+
 def _publish_plan_cache(
     reg: MetricsRegistry, prefix: str, plan_cache: dict
 ) -> None:
@@ -99,6 +115,7 @@ def publish_materialisation(
         reg.counter(f"{prefix}.{f}").inc(getattr(stats, f))
     for f in MATERIALISATION_GAUGES:
         reg.gauge(f"{prefix}.{f}").set(getattr(stats, f))
+    _publish_rule_scope(reg, stats)
     _publish_plan_cache(reg, prefix, stats.plan_cache)
 
 
@@ -132,6 +149,7 @@ def publish_distributed(
     for f in DISTRIBUTED_COUNTERS:
         reg.counter(f"{prefix}.{f}").inc(getattr(stats, f))
     reg.gauge(f"{prefix}.epoch").set(stats.epoch)
+    _publish_rule_scope(reg, stats)
     _publish_plan_cache(reg, prefix, stats.plan_cache)
 
 

@@ -1,0 +1,751 @@
+"""Derivation provenance: lineage journal, verified proof trees, rule costs.
+
+The paper's central trick — applying a rule to *many* facts at once and
+structure-sharing the result — means one derivation step justifies
+thousands of triples.  Provenance therefore records at the **meta-fact**
+level: one compact :class:`DerivationRecord` per rule application
+``(stratum, round, rule_id, pivot, input mf ids / row ranges) ->
+output mf ids``, never one per triple, so structure sharing extends to
+lineage (VLog keeps derivations segregated per (rule, step) for the
+same reason).
+
+Three layers live here:
+
+* :class:`DerivationJournal` — a bounded, epoch-aware append log shared
+  by all four engines (CMat / Flat / Distributed / Incremental).
+  Recording is **off by default** and free when off; the buffer is a
+  ``deque(maxlen=...)`` so memory is bounded and eviction is counted,
+  never silent.  The journal registers a ``memory_report()`` with the
+  PR-8 accountant and survives checkpoint/restore via
+  :meth:`DerivationJournal.to_payload` / :meth:`load_payload`.
+* :class:`Explainer` — ``explain(pred, terms)`` reconstructs a minimal
+  proof tree for a materialised fact by walking the journal for
+  candidate rules and **re-running the rule bodies restricted to the
+  queried fact** (lower strata unrestricted, same stratum restricted to
+  strictly smaller rounds, so recursion is well-founded).  Every step
+  is independently re-checked by re-derivation from exactly its chosen
+  body facts — explanations are *verified, not trusted* — and the
+  journal is only a search accelerator: eviction or a fresh journal
+  after restore degrades to trying all rules with a matching head,
+  never to a wrong proof.
+* per-rule cost attribution — :meth:`DerivationJournal.publish` sets
+  ``rule.<id>.{derived,redundant,time_ns,rounds_active}`` gauges on the
+  metrics registry (gauges, so re-publishing after each fixpoint is
+  idempotent), the feed for ``serve_datalog --hot-rules`` and the
+  ROADMAP's adaptive-storage chooser.
+
+Core modules are imported lazily inside functions: ``repro.core.*``
+imports ``repro.obs`` at module load, so a top-level import here would
+be circular.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .memory import register_reporter
+from .metrics import get_registry
+
+__all__ = [
+    "DerivationRecord",
+    "DerivationJournal",
+    "Explainer",
+    "get_journal",
+    "proof_to_json",
+    "proof_to_dot",
+]
+
+#: cap on input/output meta-fact ids kept per record — lineage stays
+#: O(1) per rule application even when a round touches thousands of mfs
+MAX_IDS_PER_RECORD = 16
+
+#: default bounded-buffer size (records, not triples)
+DEFAULT_MAX_RECORDS = 100_000
+
+
+@dataclass(slots=True)
+class DerivationRecord:
+    """One rule application (or maintenance phase step), meta-fact granular.
+
+    ``kind`` is ``"apply"`` for fixpoint rounds and one of
+    ``"insert" | "overdelete" | "rederive" | "survive_explicit" |
+    "survive_backward"`` for incremental-maintenance phases (the DRed
+    records answer *why a fact survived* a deletion batch).
+    """
+
+    kind: str
+    engine: str  # cmat | flat | dist | inc
+    stratum: int
+    round: int
+    rule_id: int  # index into the attached program; -1 = no rule (explicit)
+    pivot: int  # delta-anchored body position; -1 = naive / whole-body
+    pred: str  # head predicate the record derived into
+    n_emitted: int = 0  # rows emitted by the rule body
+    n_new: int = 0  # rows surviving dedup (fresh facts)
+    in_mf_ids: tuple = ()  # input meta-fact ids (capped, best effort)
+    out_mf_ids: tuple = ()  # output meta-fact ids (capped)
+    row_span: tuple = ()  # flat mode: (watermark_before, watermark_after)
+    shard: int = -1  # distributed: shard tag; -1 = host
+    epoch: int = 0  # incremental epoch the record belongs to
+    time_ns: int = 0
+
+    def key(self) -> tuple:
+        """Identity ignoring shard/counters — used by shard merging."""
+        return (
+            self.kind,
+            self.engine,
+            self.stratum,
+            self.round,
+            self.rule_id,
+            self.pivot,
+            self.pred,
+            self.epoch,
+        )
+
+    def to_list(self) -> list:
+        return [
+            self.kind,
+            self.engine,
+            self.stratum,
+            self.round,
+            self.rule_id,
+            self.pivot,
+            self.pred,
+            self.n_emitted,
+            self.n_new,
+            list(self.in_mf_ids),
+            list(self.out_mf_ids),
+            list(self.row_span),
+            self.shard,
+            self.epoch,
+            self.time_ns,
+        ]
+
+    @classmethod
+    def from_list(cls, row: list) -> DerivationRecord:
+        return cls(
+            kind=row[0],
+            engine=row[1],
+            stratum=int(row[2]),
+            round=int(row[3]),
+            rule_id=int(row[4]),
+            pivot=int(row[5]),
+            pred=row[6],
+            n_emitted=int(row[7]),
+            n_new=int(row[8]),
+            in_mf_ids=tuple(row[9]),
+            out_mf_ids=tuple(row[10]),
+            row_span=tuple(row[11]),
+            shard=int(row[12]),
+            epoch=int(row[13]),
+            time_ns=int(row[14]),
+        )
+
+
+@dataclass
+class _RuleCost:
+    derived: int = 0
+    redundant: int = 0
+    time_ns: int = 0
+    rounds: set = field(default_factory=set)
+
+
+class DerivationJournal:
+    """Bounded, epoch-aware derivation log (off by default).
+
+    Engines call :meth:`record` once per rule application; when
+    ``enabled`` is ``False`` every hook short-circuits before building a
+    record, so the disabled journal costs one attribute read per
+    application.  The buffer is bounded (``deque(maxlen=...)``):
+    ``dropped`` counts evictions, and :class:`Explainer` treats journal
+    misses as "try all candidate rules", so eviction can never make an
+    explanation wrong — only slower.
+    """
+
+    def __init__(self, max_records: int = DEFAULT_MAX_RECORDS):
+        self.enabled = False
+        self.max_records = int(max_records)
+        self.records: deque[DerivationRecord] = deque(maxlen=self.max_records)
+        self.n_recorded = 0  # total ever recorded (>= len(records))
+        self.epoch = 0
+        self.rule_strs: dict[int, str] = {}
+        self.costs: dict[int, _RuleCost] = {}
+
+    # ------------------------------------------------------------------ #
+    # configuration / lifecycle
+    # ------------------------------------------------------------------ #
+    def configure(self, max_records: int) -> None:
+        """Resize the bounded buffer, keeping the newest records."""
+        max_records = int(max_records)
+        if max_records == self.max_records:
+            return
+        self.max_records = max_records
+        self.records = deque(self.records, maxlen=max_records)
+
+    def attach_program(self, program) -> None:
+        """Remember rule strings so reports can show rules, not ids.
+
+        ``rule_id`` is the rule's position in ``program.rules`` — the
+        iteration order every engine shares.
+        """
+        for i, rule in enumerate(program):
+            self.rule_strs[i] = str(rule)
+
+    def begin_epoch(self, epoch: int) -> None:
+        self.epoch = int(epoch)
+
+    def clear(self) -> None:
+        self.records.clear()
+        self.n_recorded = 0
+        self.costs.clear()
+
+    @property
+    def dropped(self) -> int:
+        return self.n_recorded - len(self.records)
+
+    # ------------------------------------------------------------------ #
+    # recording
+    # ------------------------------------------------------------------ #
+    def record(self, rec: DerivationRecord) -> None:
+        if not self.enabled:
+            return
+        self.records.append(rec)
+        self.n_recorded += 1
+        if rec.rule_id >= 0:
+            c = self.costs.setdefault(rec.rule_id, _RuleCost())
+            c.derived += rec.n_new
+            c.redundant += max(0, rec.n_emitted - rec.n_new)
+            c.time_ns += rec.time_ns
+            c.rounds.add((rec.stratum, rec.round))
+
+    # ------------------------------------------------------------------ #
+    # lookup (the Explainer's search accelerator)
+    # ------------------------------------------------------------------ #
+    def lookup(self, pred: str, round_no: int | None = None) -> list[DerivationRecord]:
+        """Records that derived into ``pred`` (optionally at one round)."""
+        out = []
+        for rec in self.records:
+            if rec.pred != pred:
+                continue
+            if round_no is not None and rec.round != round_no:
+                continue
+            out.append(rec)
+        return out
+
+    def rule_ids_for(self, pred: str, round_no: int | None = None) -> list[int]:
+        """Distinct rule ids recorded for (pred, round), newest bias last."""
+        seen: list[int] = []
+        for rec in self.lookup(pred, round_no):
+            if rec.rule_id >= 0 and rec.rule_id not in seen:
+                seen.append(rec.rule_id)
+        return seen
+
+    # ------------------------------------------------------------------ #
+    # shard merging (distributed verify)
+    # ------------------------------------------------------------------ #
+    def merge_shard_records(self) -> int:
+        """Coalesce records identical up to shard/counters into host rows.
+
+        Called at distributed verify: per-shard records with the same
+        :meth:`DerivationRecord.key` sum their counters and drop the
+        shard tag (``shard=-1``).  Returns the number of rows removed.
+        """
+        merged: dict[tuple, DerivationRecord] = {}
+        order: list[tuple] = []
+        for rec in self.records:
+            k = rec.key()
+            if k in merged:
+                m = merged[k]
+                m.n_emitted += rec.n_emitted
+                m.n_new += rec.n_new
+                m.time_ns += rec.time_ns
+                m.in_mf_ids = (m.in_mf_ids + rec.in_mf_ids)[:MAX_IDS_PER_RECORD]
+                m.out_mf_ids = (m.out_mf_ids + rec.out_mf_ids)[:MAX_IDS_PER_RECORD]
+                m.shard = -1
+            else:
+                merged[k] = DerivationRecord(**{
+                    s: getattr(rec, s) for s in DerivationRecord.__slots__
+                })
+                order.append(k)
+        removed = len(self.records) - len(order)
+        self.records = deque(
+            (merged[k] for k in order), maxlen=self.max_records
+        )
+        return removed
+
+    # ------------------------------------------------------------------ #
+    # cost attribution -> metrics registry
+    # ------------------------------------------------------------------ #
+    def publish(self, registry=None) -> None:
+        """Set ``rule.<id>.*`` gauges (idempotent across re-publishes)."""
+        reg = registry if registry is not None else get_registry()
+        for rid, c in self.costs.items():
+            reg.gauge(f"rule.{rid}.derived").set(c.derived)
+            reg.gauge(f"rule.{rid}.redundant").set(c.redundant)
+            reg.gauge(f"rule.{rid}.time_ns").set(c.time_ns)
+            reg.gauge(f"rule.{rid}.rounds_active").set(len(c.rounds))
+        reg.gauge("rule.journal.records").set(len(self.records))
+        reg.gauge("rule.journal.dropped").set(self.dropped)
+
+    def hot_rules(self, n: int = 10) -> list[dict]:
+        """Top-n rules by recorded wall time, with derived/redundant."""
+        rows = []
+        for rid, c in sorted(
+            self.costs.items(), key=lambda kv: kv[1].time_ns, reverse=True
+        )[:n]:
+            rows.append({
+                "rule_id": rid,
+                "rule": self.rule_strs.get(rid, f"<rule {rid}>"),
+                "derived": c.derived,
+                "redundant": c.redundant,
+                "time_ns": c.time_ns,
+                "rounds_active": len(c.rounds),
+            })
+        return rows
+
+    # ------------------------------------------------------------------ #
+    # persistence (checkpoint sidecar) + memory accounting
+    # ------------------------------------------------------------------ #
+    def to_payload(self) -> dict:
+        return {
+            "version": 1,
+            "epoch": self.epoch,
+            "max_records": self.max_records,
+            "n_recorded": self.n_recorded,
+            "rule_strs": {str(k): v for k, v in self.rule_strs.items()},
+            "records": [r.to_list() for r in self.records],
+            "costs": {
+                str(rid): {
+                    "derived": c.derived,
+                    "redundant": c.redundant,
+                    "time_ns": c.time_ns,
+                    "rounds": sorted([list(t) for t in c.rounds]),
+                }
+                for rid, c in self.costs.items()
+            },
+        }
+
+    def load_payload(self, payload: dict) -> None:
+        """Restore journal state from a checkpoint sidecar (additive-free:
+        replaces records/costs wholesale so restore is deterministic)."""
+        self.epoch = int(payload.get("epoch", 0))
+        self.configure(int(payload.get("max_records", self.max_records)))
+        self.records = deque(
+            (DerivationRecord.from_list(r) for r in payload.get("records", [])),
+            maxlen=self.max_records,
+        )
+        self.n_recorded = int(payload.get("n_recorded", len(self.records)))
+        self.rule_strs = {
+            int(k): v for k, v in payload.get("rule_strs", {}).items()
+        }
+        self.costs = {}
+        for rid, c in payload.get("costs", {}).items():
+            self.costs[int(rid)] = _RuleCost(
+                derived=int(c["derived"]),
+                redundant=int(c["redundant"]),
+                time_ns=int(c["time_ns"]),
+                rounds={tuple(t) for t in c.get("rounds", [])},
+            )
+
+    def memory_report(self) -> dict[str, int]:
+        """PR-8 accountant reporter: owned bytes of the record buffer."""
+        # a record is a slotted object: ~15 scalar slots + two small
+        # tuples of ints; 160B flat + 8B per kept id is a close estimate
+        id_bytes = sum(
+            8 * (len(r.in_mf_ids) + len(r.out_mf_ids)) for r in self.records
+        )
+        return {
+            "journal_bytes": 160 * len(self.records) + id_bytes,
+            "n_records": len(self.records),
+            "n_dropped": self.dropped,
+        }
+
+
+#: process-wide journal (module global: the strong ref that keeps the
+#: weakly-registered memory reporter alive)
+_JOURNAL: DerivationJournal | None = None
+
+
+def get_journal() -> DerivationJournal:
+    global _JOURNAL
+    if _JOURNAL is None:
+        _JOURNAL = DerivationJournal()
+        register_reporter("provenance", _JOURNAL)
+    return _JOURNAL
+
+
+# --------------------------------------------------------------------- #
+# verified explanation
+# --------------------------------------------------------------------- #
+class Explainer:
+    """Reconstruct and *verify* proof trees for materialised facts.
+
+    Works over flat per-predicate tables ``{pred: (rows, rounds)}`` where
+    ``rounds[i]`` is the semi-naive round that first derived ``rows[i]``
+    (0 / explicit for input facts).  Build one with
+    :meth:`from_fact_store` (compressed engines, incremental store) or
+    :meth:`from_flat` (flat engine).
+
+    Well-foundedness: every engine in this repo only derives a fact from
+    body facts in strictly lower strata, or in the same stratum with
+    strictly smaller rounds (semi-naive reads the pre-round state; DRed
+    re-insertions bump the round counter before tagging).  ``_derive``
+    restricts same-stratum body sources to rounds ``< r``, so recursion
+    terminates and the tree bottoms out in explicit facts.
+    """
+
+    def __init__(
+        self,
+        program,
+        tables: dict[str, tuple[np.ndarray, np.ndarray]],
+        explicit: dict[str, np.ndarray] | None = None,
+        journal: DerivationJournal | None = None,
+        max_depth: int = 64,
+        decode=None,
+    ):
+        from ..core.program_graph import stratify
+
+        self.program = program
+        self.rules = list(program)
+        self.tables = tables
+        self.explicit = explicit if explicit is not None else {}
+        self.journal = journal
+        self.max_depth = max_depth
+        self.decode = decode
+        self.stratum_of: dict[str, int] = {}
+        for si, stratum in enumerate(stratify(program)):
+            for rule in stratum:
+                self.stratum_of[rule.head.predicate] = si
+        self._memo: dict[tuple, dict] = {}
+
+    # ------------------------------------------------------------------ #
+    # table builders
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def build_tables(store) -> dict[str, tuple[np.ndarray, np.ndarray]]:
+        """Unfold a :class:`FactStore` into ``{pred: (rows, rounds)}``
+        with duplicates collapsed to their **minimum** round (a fact's
+        first derivation — the minimal-proof anchor)."""
+        tables: dict[str, tuple[np.ndarray, np.ndarray]] = {}
+        for pred in store.predicates():
+            mfs = store.all(pred)
+            if not mfs:
+                continue
+            rows = store.unfold_pred(pred)
+            rounds = np.concatenate(
+                [np.full(mf.length, mf.round, dtype=np.int64) for mf in mfs]
+            )
+            tables[pred] = _dedup_min_round(rows, rounds)
+        return tables
+
+    @classmethod
+    def from_fact_store(
+        cls,
+        program,
+        store,
+        explicit: dict[str, np.ndarray] | None = None,
+        **kw,
+    ) -> Explainer:
+        return cls(program, cls.build_tables(store), explicit, **kw)
+
+    @classmethod
+    def from_flat(
+        cls,
+        program,
+        facts: dict[str, np.ndarray],
+        fresh_log: dict[str, list[tuple[int, np.ndarray]]] | None = None,
+        explicit: dict[str, np.ndarray] | None = None,
+        **kw,
+    ) -> Explainer:
+        """Build from a :class:`FlatEngine`: ``facts`` are the final
+        sorted tables; ``fresh_log`` (the engine's provenance log of
+        per-round fresh rows) supplies rounds, defaulting to 0."""
+        tables: dict[str, tuple[np.ndarray, np.ndarray]] = {}
+        for pred, rows in facts.items():
+            if fresh_log and pred in fresh_log:
+                blocks = fresh_log[pred]
+                all_rows = np.concatenate([b for _, b in blocks])
+                rounds = np.concatenate(
+                    [np.full(b.shape[0], rno, dtype=np.int64) for rno, b in blocks]
+                )
+                tables[pred] = _dedup_min_round(all_rows, rounds)
+            else:
+                tables[pred] = (rows, np.zeros(rows.shape[0], dtype=np.int64))
+        return cls(program, tables, explicit, **kw)
+
+    # ------------------------------------------------------------------ #
+    # public API
+    # ------------------------------------------------------------------ #
+    def explain(self, pred: str, terms) -> dict | None:
+        """Verified proof tree for ``pred(terms)`` or ``None`` if the
+        fact is not in the materialisation."""
+        terms = tuple(int(t) for t in terms)
+        self._memo.clear()
+        return self._explain(pred, terms, stack=set(), depth=0)
+
+    # ------------------------------------------------------------------ #
+    # internals
+    # ------------------------------------------------------------------ #
+    def _fact_str(self, pred: str, terms: tuple) -> str:
+        if self.decode is not None:
+            shown = ", ".join(str(self.decode(t)) for t in terms)
+        else:
+            shown = ", ".join(str(t) for t in terms)
+        return f"{pred}({shown})"
+
+    def _is_explicit(self, pred: str, terms: tuple) -> bool:
+        rows = self.explicit.get(pred)
+        if rows is None or rows.shape[0] == 0:
+            return False
+        if rows.ndim == 1:
+            rows = rows.reshape(-1, 1)
+        if rows.shape[1] != len(terms):
+            return False
+        return bool((rows == np.asarray(terms, dtype=np.int64)).all(axis=1).any())
+
+    def _round_of(self, pred: str, terms: tuple) -> int | None:
+        tab = self.tables.get(pred)
+        if tab is None:
+            return None
+        rows, rounds = tab
+        if rows.shape[0] == 0 or rows.shape[1] != len(terms):
+            return None
+        hit = (rows == np.asarray(terms, dtype=np.int64)).all(axis=1)
+        if not hit.any():
+            return None
+        return int(rounds[hit].min())
+
+    def _source_rows(
+        self, pred: str, head_stratum: int, max_round: int
+    ) -> np.ndarray | None:
+        """Rows of ``pred`` usable as body facts under the proof of a
+        head in ``head_stratum`` first derived at ``max_round``."""
+        tab = self.tables.get(pred)
+        if tab is None:
+            rows = self.explicit.get(pred)
+            if rows is None:
+                return None
+            rows = np.asarray(rows, dtype=np.int64)
+            return rows.reshape(-1, 1) if rows.ndim == 1 else rows
+        rows, rounds = tab
+        if self.stratum_of.get(pred, -1) == head_stratum:
+            rows = rows[rounds < max_round]
+        return rows
+
+    def _explain(
+        self, pred: str, terms: tuple, stack: set, depth: int
+    ) -> dict | None:
+        key = (pred, terms)
+        if key in self._memo:
+            return self._memo[key]
+        if self._is_explicit(pred, terms):
+            node = {
+                "fact": self._fact_str(pred, terms),
+                "pred": pred,
+                "terms": list(terms),
+                "kind": "explicit",
+                "verified": True,
+                "children": [],
+            }
+            self._memo[key] = node
+            return node
+        r = self._round_of(pred, terms)
+        if r is None:
+            return None  # fact not in the materialisation
+        if depth >= self.max_depth or key in stack:
+            return None
+        stack = stack | {key}
+        strat = self.stratum_of.get(pred, -1)
+        for rid in self._candidate_rules(pred, r):
+            rule = self.rules[rid]
+            step = self._derive(rule, terms, strat, r)
+            if step is None:
+                continue
+            body_facts, verified = step
+            children = []
+            ok = verified
+            for b_pred, b_terms in body_facts:
+                child = self._explain(b_pred, b_terms, stack, depth + 1)
+                if child is None:
+                    ok = False
+                    break
+                children.append(child)
+            if not ok:
+                continue
+            node = {
+                "fact": self._fact_str(pred, terms),
+                "pred": pred,
+                "terms": list(terms),
+                "kind": "derived",
+                "rule_id": rid,
+                "rule": str(rule),
+                "round": r,
+                "verified": verified and all(c["verified"] for c in children),
+                "children": children,
+            }
+            self._memo[key] = node
+            return node
+        return None
+
+    def _candidate_rules(self, pred: str, r: int) -> list[int]:
+        """Journal-guided rule order with exhaustive fallback: journal
+        hits for (pred, round) first, then (pred, any round), then every
+        rule with a matching head — so journal eviction / a restored KB
+        with a fresh journal still explains, just with more search."""
+        ordered: list[int] = []
+        if self.journal is not None and self.journal.records:
+            for rid in self.journal.rule_ids_for(pred, r):
+                if rid < len(self.rules) and rid not in ordered:
+                    ordered.append(rid)
+            for rid in self.journal.rule_ids_for(pred):
+                if rid < len(self.rules) and rid not in ordered:
+                    ordered.append(rid)
+        for rid, rule in enumerate(self.rules):
+            if rule.head.predicate == pred and rid not in ordered:
+                ordered.append(rid)
+        return ordered
+
+    def _derive(self, rule, terms: tuple, strat: int, r: int):
+        """Try to re-derive ``head(terms)`` with ``rule`` under the
+        round restriction; returns ``(body_facts, verified)`` or None.
+
+        Search: substitute the head binding into the body and join the
+        restricted sources; the first solution row fixes one concrete
+        fact per body atom.  Verify: re-run the rule on *exactly those
+        facts* and check the head projects back to ``terms``.
+        """
+        from ..core.datalog import Atom
+        from ..core.flat import _Table, _join, _match_flat
+
+        head = rule.head
+        if len(head.terms) != len(terms):
+            return None
+        binding: dict[str, int] = {}
+        for t, v in zip(head.terms, terms):
+            if isinstance(t, int):
+                if t != v:
+                    return None
+            elif binding.setdefault(t, v) != v:
+                return None
+
+        def bound(atom):
+            return Atom(
+                atom.predicate,
+                tuple(binding.get(t, t) if isinstance(t, str) else t
+                      for t in atom.terms),
+            )
+
+        L: _Table | None = None
+        for atom in rule.body:
+            src = self._source_rows(atom.predicate, strat, r)
+            if src is None or src.shape[0] == 0:
+                return None
+            R = _match_flat(bound(atom), src)
+            if R is None:
+                return None
+            L = R if L is None else _join(L, R)
+            if L.rows.shape[0] == 0:
+                return None
+        # first solution fixes the substitution
+        theta = dict(binding)
+        if L is not None and L.vars:
+            sol = L.rows[0]
+            for v, val in zip(L.vars, sol):
+                theta[v] = int(val)
+        body_facts = []
+        for atom in rule.body:
+            fact = tuple(
+                theta[t] if isinstance(t, str) else int(t) for t in atom.terms
+            )
+            body_facts.append((atom.predicate, fact))
+        verified = self._check_step(rule, terms, body_facts)
+        return (body_facts, verified) if verified else None
+
+    def _check_step(self, rule, terms: tuple, body_facts: list) -> bool:
+        """Independent re-derivation: apply the rule to exactly the
+        chosen body facts (one row per atom) and check the head equals
+        the queried fact.  No journal, no tables — pure rule semantics."""
+        from ..core.flat import _Table, _join, _match_flat
+
+        L: _Table | None = None
+        for atom, (_, fact) in zip(rule.body, body_facts):
+            rows = np.asarray([fact], dtype=np.int64)
+            R = _match_flat(atom, rows)
+            if R is None:
+                return False
+            L = R if L is None else _join(L, R)
+            if L.rows.shape[0] == 0:
+                return False
+        for sol in L.rows if (L is not None and L.vars) else [np.zeros(0)]:
+            theta = {v: int(val) for v, val in zip(L.vars, sol)} if L else {}
+            out = tuple(
+                theta[t] if isinstance(t, str) else int(t)
+                for t in rule.head.terms
+            )
+            if out == terms:
+                return True
+        return False
+
+
+def _dedup_min_round(
+    rows: np.ndarray, rounds: np.ndarray
+) -> tuple[np.ndarray, np.ndarray]:
+    """Collapse duplicate rows to their minimum round."""
+    if rows.shape[0] == 0:
+        return rows, rounds
+    uniq, inv = np.unique(rows, axis=0, return_inverse=True)
+    min_rounds = np.full(uniq.shape[0], np.iinfo(np.int64).max, dtype=np.int64)
+    np.minimum.at(min_rounds, inv.ravel(), rounds)
+    return uniq, min_rounds
+
+
+# --------------------------------------------------------------------- #
+# exporters
+# --------------------------------------------------------------------- #
+def proof_to_json(node: dict, indent: int | None = 2) -> str:
+    return json.dumps(node, indent=indent)
+
+
+def proof_to_dot(node: dict, title: str = "proof") -> str:
+    """Graphviz DOT rendering: facts are boxes, rule applications are
+    small circles labelled with the rule id."""
+    lines = [
+        f'digraph "{title}" {{',
+        "  rankdir=BT;",
+        '  node [fontname="monospace", fontsize=10];',
+    ]
+    counter = [0]
+
+    def emit(n: dict) -> str:
+        nid = f"f{counter[0]}"
+        counter[0] += 1
+        shape = "box" if n["kind"] == "derived" else "box, style=filled, fillcolor=lightgrey"
+        check = "✓" if n.get("verified") else "?"
+        lines.append(f'  {nid} [label="{n["fact"]} {check}", shape={shape}];')
+        if n.get("children"):
+            rnode = f"r{counter[0]}"
+            counter[0] += 1
+            rid = n.get("rule_id", -1)
+            lines.append(
+                f'  {rnode} [label="R{rid}", shape=circle, width=0.3];'
+            )
+            lines.append(f"  {rnode} -> {nid};")
+            for child in n["children"]:
+                cid = emit(child)
+                lines.append(f"  {cid} -> {rnode};")
+        return nid
+
+    emit(node)
+    lines.append("}")
+    return "\n".join(lines)
+
+
+def now_ns() -> int:
+    """Monotonic ns clock for record timing (one indirection so tests
+    can monkeypatch timing out)."""
+    return time.perf_counter_ns()

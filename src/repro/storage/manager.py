@@ -143,6 +143,7 @@ class CheckpointManager:
                 explicit={p: r for p, r in inc.explicit.items() if r.size},
                 arities=inc.arities,
             )
+            self._write_provenance(tmp)
             if os.path.exists(final):  # re-checkpoint, unchanged epoch
                 shutil.rmtree(final)
             os.rename(tmp, final)
@@ -170,6 +171,41 @@ class CheckpointManager:
         reg.gauge("storage.disk_bytes").set(self.disk_nbytes())
         return manifest
 
+    def _write_provenance(self, snap_dir: str) -> None:
+        """Sidecar the derivation journal into the snapshot directory
+        (before the rename, so it is covered by the same atomicity).
+        Written only when the journal is enabled — the sidecar is an
+        optional extra, never part of the restore contract."""
+        from ..obs.provenance import get_journal
+
+        journal = get_journal()
+        if not journal.enabled:
+            return
+        import json
+
+        path = os.path.join(snap_dir, "provenance.json")
+        with open(path, "w") as fh:
+            json.dump(journal.to_payload(), fh)
+            fh.flush()
+            os.fsync(fh.fileno())
+
+    def _load_provenance(self, snap_dir: str) -> bool:
+        """Load a provenance sidecar into the live journal, if both the
+        sidecar exists and the journal is currently enabled."""
+        from ..obs.provenance import get_journal
+
+        journal = get_journal()
+        if not journal.enabled:
+            return False
+        path = os.path.join(snap_dir, "provenance.json")
+        if not os.path.exists(path):
+            return False
+        import json
+
+        with open(path) as fh:
+            journal.load_payload(json.load(fh))
+        return True
+
     # ------------------------------------------------------------------ #
     def restore(self, program, *, verify: bool = False, **store_kwargs):
         """Warm-start: latest snapshot + WAL replay.  Returns
@@ -185,6 +221,7 @@ class CheckpointManager:
                 expected_label=self.label, **store_kwargs,
             )
             t_snap = time.perf_counter() - t0
+            self._load_provenance(snap)
             t0 = time.perf_counter()
             n_replayed = self.wal.replay(inc, after_epoch=meta.epoch)
             t_replay = time.perf_counter() - t0

@@ -27,6 +27,10 @@ def leak_check():
     reg = get_registry()
     tr = get_tracer()
     acc = get_accountant()
+    from repro.obs.provenance import get_journal
+
+    journal = get_journal()
+    prov_was = journal.enabled
     was_enabled = tr.enabled
     n_hooks = len(tr.hooks)
     cap0 = sum(b.capacity_bytes() for b in acc.live().get("buffers", []))
@@ -42,6 +46,9 @@ def leak_check():
     assert gt() is tr, "span tracer singleton swapped mid-module"
     assert ga() is acc, "memory accountant singleton swapped mid-module"
     assert tr.enabled == was_enabled, "tracer enable state leaked"
+    assert journal.enabled == prov_was, (
+        "provenance journal enable state leaked"
+    )
     assert len(tr.hooks) == n_hooks, "tracer hooks leaked (sampler not detached?)"
     cap1 = sum(b.capacity_bytes() for b in acc.live().get("buffers", []))
     assert cap1 <= cap0, (

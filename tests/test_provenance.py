@@ -1,0 +1,529 @@
+"""Derivation provenance: journal differential inertness, verified
+``explain()`` proof trees, per-rule cost attribution, and the
+checkpoint sidecar (DESIGN.md §Provenance).
+
+The journal's contract has three legs, each tested here:
+
+* **off by default / differentially inert** — enabling the journal must
+  not change a single materialised fact, on any engine, for any
+  generator workload;
+* **verified explanations** — every proof tree ``explain()`` returns is
+  re-derived step by step (``_check_step`` re-runs each rule on exactly
+  the claimed body facts), so a test only has to check the ``verified``
+  flag, including after a DRed deletion batch and after
+  checkpoint -> restore;
+* **bounded** — a journal capped far below the workload still explains
+  (the journal only *orders* candidate rules; eviction degrades to
+  exhaustive search, never to wrong proofs).
+"""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+import pytest
+from numpy.testing import assert_array_equal
+
+from repro.core import CMatEngine, FlatEngine
+from repro.core.datalog import Atom, Program, Rule
+from repro.core.generators import (
+    bipartite,
+    chain,
+    lubm_like,
+    paper_example,
+    star,
+)
+from repro.incremental import IncrementalStore
+from repro.obs import get_registry
+from repro.obs.provenance import (
+    DerivationJournal,
+    get_journal,
+    proof_to_dot,
+    proof_to_json,
+)
+
+WORKLOADS = [
+    ("paper", lambda: paper_example(n=30, m=20)),
+    ("chain", lambda: chain(n=60)),
+    ("lubm", lambda: lubm_like(n_dept=4, n_students=60, n_courses=10)),
+    ("star", lambda: star(n_spokes=80, n_hubs=3)),
+    ("bipartite", lambda: bipartite(n_left=30, n_right=30)),
+]
+
+TC_PROGRAM = Program([
+    Rule(head=Atom("path", ("X", "Y")), body=(Atom("edge", ("X", "Y")),)),
+    Rule(
+        head=Atom("path", ("X", "Z")),
+        body=(Atom("path", ("X", "Y")), Atom("edge", ("Y", "Z"))),
+    ),
+])
+
+
+@pytest.fixture
+def journal():
+    j = get_journal()
+    was = j.enabled
+    j.enabled = True
+    j.clear()
+    j.configure(max_records=100_000)
+    yield j
+    j.enabled = was
+    j.clear()
+    j.configure(max_records=100_000)
+    get_registry().reset("rule.")
+    get_registry().reset("prov.")
+
+
+def _cmat(program, dataset):
+    eng = CMatEngine(program)
+    eng.load(dataset)
+    eng.materialise()
+    return eng
+
+
+def _derived_facts(mat, explicit, limit=None):
+    """(pred, terms) pairs in the materialisation but not explicit."""
+    out = []
+    for pred in sorted(mat):
+        rows = np.asarray(mat[pred]).reshape(len(mat[pred]), -1)
+        exp = {
+            tuple(int(v) for v in r)
+            for r in np.asarray(explicit.get(pred, np.zeros((0, 1)))).reshape(
+                -1, rows.shape[1] if rows.shape[0] else 1
+            )
+        } if pred in explicit else set()
+        for row in rows:
+            t = tuple(int(v) for v in row)
+            if t not in exp:
+                out.append((pred, t))
+    return out if limit is None else out[:limit]
+
+
+def _assert_all_verified(node):
+    assert node is not None
+    assert node["verified"] is True
+    for child in node["children"]:
+        _assert_all_verified(child)
+
+
+# --------------------------------------------------------------------- #
+# off by default + differential inertness
+# --------------------------------------------------------------------- #
+class TestDifferential:
+    def test_journal_off_by_default(self):
+        j = get_journal()
+        assert j.enabled is False
+
+    @pytest.mark.parametrize("name,gen", WORKLOADS)
+    def test_cmat_identical_with_journal(self, name, gen, journal):
+        program, dataset, _ = gen()
+        journal.enabled = False
+        base = _cmat(program, dataset).materialisation()
+        journal.enabled = True
+        journal.clear()
+        on = _cmat(program, dataset).materialisation()
+        assert sorted(base) == sorted(on)
+        for pred in base:
+            assert_array_equal(
+                np.unique(base[pred], axis=0), np.unique(on[pred], axis=0)
+            )
+        assert journal.records, "journal enabled but nothing recorded"
+
+    @pytest.mark.parametrize("name,gen", WORKLOADS)
+    def test_flat_identical_with_journal(self, name, gen, journal):
+        program, dataset, _ = gen()
+        journal.enabled = False
+        eng = FlatEngine(program)
+        eng.load(dataset)
+        base = eng.materialise()
+        journal.enabled = True
+        journal.clear()
+        eng2 = FlatEngine(program)
+        eng2.load(dataset)
+        on = eng2.materialise()
+        assert sorted(base) == sorted(on)
+        for pred in base:
+            assert_array_equal(base[pred], on[pred])
+
+
+# --------------------------------------------------------------------- #
+# verified proof trees
+# --------------------------------------------------------------------- #
+class TestExplain:
+    def test_chain_tc_all_derived_facts_verified(self, journal):
+        program, dataset, _ = chain(n=20)
+        eng = _cmat(program, dataset)
+        explicit = {p: np.asarray(r) for p, r in dataset.items()}
+        targets = _derived_facts(eng.materialisation(), explicit)
+        assert targets
+        for pred, terms in targets:
+            _assert_all_verified(eng.explain_fact(pred, terms))
+
+    def test_paper_example_verified(self, journal):
+        program, dataset, _ = paper_example(n=10, m=8)
+        eng = _cmat(program, dataset)
+        explicit = {p: np.asarray(r) for p, r in dataset.items()}
+        for pred, terms in _derived_facts(
+            eng.materialisation(), explicit, limit=40
+        ):
+            _assert_all_verified(eng.explain_fact(pred, terms))
+
+    def test_lubm_verified(self, journal):
+        program, dataset, _ = lubm_like(
+            n_dept=3, n_students=30, n_courses=6
+        )
+        eng = _cmat(program, dataset)
+        explicit = {p: np.asarray(r) for p, r in dataset.items()}
+        targets = _derived_facts(eng.materialisation(), explicit, limit=60)
+        assert targets
+        for pred, terms in targets:
+            _assert_all_verified(eng.explain_fact(pred, terms))
+
+    def test_flat_engine_explains(self, journal):
+        program, dataset, _ = chain(n=15)
+        eng = FlatEngine(program)
+        eng.load(dataset)
+        mat = eng.materialise()
+        explicit = {p: np.asarray(r) for p, r in dataset.items()}
+        for pred, terms in _derived_facts(mat, explicit, limit=30):
+            _assert_all_verified(eng.explain_fact(pred, terms))
+
+    def test_explicit_fact_is_leaf(self, journal):
+        program, dataset, _ = chain(n=10)
+        eng = _cmat(program, dataset)
+        row = tuple(int(v) for v in np.asarray(dataset["edge"])[0])
+        node = eng.explain_fact("edge", row)
+        assert node["kind"] == "explicit" and node["children"] == []
+
+    def test_absent_fact_returns_none(self, journal):
+        program, dataset, _ = chain(n=10)
+        eng = _cmat(program, dataset)
+        assert eng.explain_fact("path", (999, 998)) is None
+
+    def test_exports(self, journal):
+        program, dataset, _ = chain(n=8)
+        eng = _cmat(program, dataset)
+        explicit = {p: np.asarray(r) for p, r in dataset.items()}
+        pred, terms = _derived_facts(eng.materialisation(), explicit)[-1]
+        node = eng.explain_fact(pred, terms)
+        payload = json.loads(proof_to_json(node))
+        assert payload["fact"] == node["fact"]
+        dot = proof_to_dot(node)
+        assert dot.startswith("digraph") and node["fact"] in dot
+
+    def test_journal_guided_proof_is_minimal_depth(self, journal):
+        """With the journal, the chain fact path(0, k) explains through
+        the recorded first-derivation rounds — proof depth tracks the
+        round structure instead of the longest rule chain."""
+        program, dataset, _ = chain(n=12)
+        eng = _cmat(program, dataset)
+        node = eng.explain_fact("path", (0, 5))
+        _assert_all_verified(node)
+        assert node["round"] >= 1
+
+
+# --------------------------------------------------------------------- #
+# incremental maintenance: DRed survival + insertion epochs
+# --------------------------------------------------------------------- #
+class TestIncrementalExplain:
+    DIAMOND = np.array([[0, 1], [0, 2], [1, 3], [2, 3]], np.int64)
+
+    def test_survivor_explained_after_dred_delete(self, journal):
+        inc = IncrementalStore(TC_PROGRAM)
+        inc.load({"edge": self.DIAMOND})
+        inc.apply(deletions={"edge": np.array([[1, 3]], np.int64)})
+        inc.check_integrity()
+        # path(0, 3) survives via 0 -> 2 -> 3; its proof must re-derive
+        node = inc.explain_fact("path", (0, 3))
+        _assert_all_verified(node)
+        kinds = {r.kind for r in journal.records}
+        assert "overdelete" in kinds
+        assert {"survive_explicit", "survive_backward", "rederive"} & kinds
+
+    def test_deleted_fact_not_explainable(self, journal):
+        inc = IncrementalStore(TC_PROGRAM)
+        inc.load({"edge": np.array([[0, 1], [1, 2]], np.int64)})
+        inc.apply(deletions={"edge": np.array([[1, 2]], np.int64)})
+        assert inc.explain_fact("path", (0, 2)) is None
+        _assert_all_verified(inc.explain_fact("path", (0, 1)))
+
+    def test_explain_after_insertion_epoch(self, journal):
+        inc = IncrementalStore(TC_PROGRAM)
+        inc.load({"edge": np.array([[0, 1]], np.int64)})
+        inc.apply(additions={"edge": np.array([[1, 2], [2, 3]], np.int64)})
+        node = inc.explain_fact("path", (0, 3))
+        _assert_all_verified(node)
+        assert any(r.epoch == 1 for r in journal.records)
+
+
+# --------------------------------------------------------------------- #
+# checkpoint -> restore
+# --------------------------------------------------------------------- #
+class TestCheckpointRestore:
+    def test_explain_after_restore(self, tmp_path, journal):
+        from repro.storage import CheckpointManager
+
+        root = str(tmp_path / "ckpt")
+        inc = IncrementalStore(TC_PROGRAM)
+        inc.load({"edge": np.array([[i, i + 1] for i in range(8)], np.int64)})
+        mgr = CheckpointManager(root)
+        mgr.checkpoint(inc)
+        # the sidecar rides in the snapshot directory
+        assert (tmp_path / "ckpt").is_dir()
+        snap = mgr.latest()
+        assert snap is not None
+        import os
+
+        assert os.path.exists(os.path.join(snap, "provenance.json"))
+
+        journal.clear()  # a fresh process would start empty
+        inc2, _ = mgr.restore(TC_PROGRAM)
+        assert journal.records, "sidecar not loaded on restore"
+        node = inc2.explain_fact("path", (0, 4))
+        _assert_all_verified(node)
+
+    def test_restore_without_sidecar_still_explains(self, tmp_path, journal):
+        from repro.storage import CheckpointManager
+
+        journal.enabled = False  # checkpoint written with journal off
+        inc = IncrementalStore(TC_PROGRAM)
+        inc.load({"edge": np.array([[i, i + 1] for i in range(6)], np.int64)})
+        mgr = CheckpointManager(str(tmp_path / "ck2"))
+        mgr.checkpoint(inc)
+        journal.enabled = True
+        journal.clear()
+        inc2, _ = mgr.restore(TC_PROGRAM)
+        assert not journal.records  # nothing to load — fallback search
+        _assert_all_verified(inc2.explain_fact("path", (0, 3)))
+
+    def test_explain_after_restore_and_dred_delete(self, tmp_path, journal):
+        from repro.storage import CheckpointManager
+
+        inc = IncrementalStore(TC_PROGRAM)
+        inc.load({"edge": TestIncrementalExplain.DIAMOND})
+        mgr = CheckpointManager(str(tmp_path / "ck3"))
+        mgr.checkpoint(inc)
+        inc2, _ = mgr.restore(TC_PROGRAM)
+        inc2.apply(deletions={"edge": np.array([[1, 3]], np.int64)})
+        inc2.check_integrity()
+        _assert_all_verified(inc2.explain_fact("path", (0, 3)))
+
+
+# --------------------------------------------------------------------- #
+# bounded journal: eviction degrades search, never correctness
+# --------------------------------------------------------------------- #
+class TestBoundedJournal:
+    def test_eviction_keeps_explains_verified(self, journal):
+        journal.configure(max_records=4)
+        program, dataset, _ = chain(n=25)
+        eng = _cmat(program, dataset)
+        assert journal.dropped > 0
+        explicit = {p: np.asarray(r) for p, r in dataset.items()}
+        for pred, terms in _derived_facts(
+            eng.materialisation(), explicit, limit=20
+        ):
+            _assert_all_verified(eng.explain_fact(pred, terms))
+
+    def test_payload_roundtrip(self, journal):
+        program, dataset, _ = chain(n=10)
+        _cmat(program, dataset)
+        payload = journal.to_payload()
+        j2 = DerivationJournal()
+        j2.enabled = True
+        j2.load_payload(payload)
+        assert len(j2.records) == len(journal.records)
+        assert [r.to_list() for r in j2.records] == [
+            r.to_list() for r in journal.records
+        ]
+        assert j2.costs.keys() == journal.costs.keys()
+
+    def test_memory_report(self, journal):
+        program, dataset, _ = chain(n=10)
+        _cmat(program, dataset)
+        rep = journal.memory_report()
+        assert rep["n_records"] == len(journal.records)
+        assert rep["journal_bytes"] > 0
+
+
+# --------------------------------------------------------------------- #
+# per-rule cost attribution + adapter rule scope
+# --------------------------------------------------------------------- #
+class TestCostMetrics:
+    def test_rule_gauges_published(self, journal):
+        reg = get_registry()
+        reg.reset("rule.")
+        program, dataset, _ = chain(n=15)
+        _cmat(program, dataset)
+        snap = reg.snapshot("rule.")
+        assert snap.get("rule.1.derived", 0) > 0
+        assert "rule.1.time_ns" in snap
+        assert snap.get("rule.journal.records", 0) == len(journal.records)
+
+    def test_hot_rules_table(self, journal):
+        program, dataset, _ = chain(n=15)
+        _cmat(program, dataset)
+        hot = journal.hot_rules(5)
+        assert hot and hot[0]["time_ns"] >= hot[-1]["time_ns"]
+        assert all("rule" in h and "derived" in h for h in hot)
+
+    def test_adapter_stratum_scope(self):
+        # published regardless of the journal: the adapters mirror the
+        # engine's per_stratum stats under rule.*
+        reg = get_registry()
+        reg.reset("rule.")
+        program, dataset, _ = lubm_like(
+            n_dept=2, n_students=20, n_courses=4
+        )
+        _cmat(program, dataset)
+        snap = reg.snapshot("rule.")
+        assert snap.get("rule.stratum0.rules", 0) > 0
+        assert "rule.stratum0.rule_applications" in snap
+        assert "rule.applications_skipped" in snap
+        reg.reset("rule.")
+
+    def test_cmat_rule_span_carries_rule_id(self, journal):
+        from repro.obs import get_tracer
+
+        tr = get_tracer()
+        was = tr.enabled
+        tr.enable()
+        try:
+            tr.events.clear()
+            program, dataset, _ = chain(n=8)
+            _cmat(program, dataset)
+            spans = [e for e in tr.events if e.name == "cmat.rule"]
+            assert spans
+            for e in spans:
+                assert "rule_id" in e.args and "stratum" in e.args
+        finally:
+            tr.events.clear()
+            if not was:
+                tr.disable()
+
+
+# --------------------------------------------------------------------- #
+# distributed: shard-tagged records, merged at verify
+# --------------------------------------------------------------------- #
+class TestDistributed:
+    def test_shard_records_and_merge(self, journal):
+        import jax
+        from jax.sharding import Mesh
+
+        from repro.core.distributed import DistributedEngine
+
+        mesh = Mesh(np.asarray(jax.devices()), ("data",))
+        dataset = {
+            "edge": np.array([[i, i + 1] for i in range(10)], np.int64)
+        }
+        dist = DistributedEngine(TC_PROGRAM, mesh, capacity=512)
+        dist.materialise(dict(dataset))
+        kinds = {r.kind for r in journal.records}
+        assert {"apply", "schedule"} <= kinds
+        inc = IncrementalStore(TC_PROGRAM)
+        inc.load(dict(dataset))
+        dist.check_integrity(inc)  # merges shard records
+        applies = [r for r in journal.records if r.kind == "apply"]
+        keys = [r.key() for r in applies]
+        assert len(keys) == len(set(keys)), "shard records not coalesced"
+
+
+# --------------------------------------------------------------------- #
+# journal overhead (the <5% budget the bench gates in CI)
+# --------------------------------------------------------------------- #
+class TestOverhead:
+    def test_overhead_under_budget(self):
+        import sys
+
+        sys.path.insert(0, ".")
+        try:
+            from benchmarks.bench_provenance import measure_overhead
+        finally:
+            sys.path.pop(0)
+        program, dataset, _ = lubm_like(
+            n_dept=4, n_students=60, n_courses=10
+        )
+        res = measure_overhead(program, dataset, reps=3)
+        assert res["overhead_ok"], (
+            f"journal overhead {res['overhead_frac']:.1%} over budget "
+            f"(off {res['off_s']}s -> on {res['on_s']}s)"
+        )
+
+
+# --------------------------------------------------------------------- #
+# bench history artifacts
+# --------------------------------------------------------------------- #
+class TestBenchHistory:
+    def test_write_history_timestamped(self, tmp_path):
+        import sys
+
+        sys.path.insert(0, ".")
+        try:
+            from benchmarks.run import write_history
+        finally:
+            sys.path.pop(0)
+        payload = {"smoke": True, "failures": 0, "benches": {}}
+        path = write_history(payload, str(tmp_path / "hist"), now=0.0)
+        assert path.endswith("BENCH_19700101T000000Z.json")
+        with open(path) as fh:
+            assert json.load(fh) == payload
+        # a second run appends, never overwrites
+        path2 = write_history(payload, str(tmp_path / "hist"), now=60.0)
+        assert path2 != path
+        import os
+
+        assert len(os.listdir(tmp_path / "hist")) == 2
+
+
+# --------------------------------------------------------------------- #
+# property: every explained proof re-derives (hypothesis when present,
+# a seeded random sweep otherwise — the module must not skip wholesale)
+# --------------------------------------------------------------------- #
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _check_random_graph(edges, journal):
+    journal.clear()
+    dataset = {"edge": np.asarray(sorted(set(edges)), np.int64)}
+    eng = _cmat(TC_PROGRAM, dict(dataset))
+    explicit = {p: np.asarray(r) for p, r in dataset.items()}
+    for pred, terms in _derived_facts(
+        eng.materialisation(), explicit, limit=25
+    ):
+        _assert_all_verified(eng.explain_fact(pred, terms))
+
+
+if HAVE_HYPOTHESIS:
+
+    class TestProofRoundTrip:
+        @settings(
+            max_examples=15, deadline=None,
+            suppress_health_check=[HealthCheck.function_scoped_fixture],
+        )
+        @given(
+            edges=st.lists(
+                st.tuples(st.integers(0, 7), st.integers(0, 7)),
+                min_size=2, max_size=14, unique=True,
+            )
+        )
+        def test_random_graph_explains_verified(self, edges, journal):
+            _check_random_graph(edges, journal)
+
+else:
+
+    class TestProofRoundTrip:
+        @pytest.mark.parametrize("seed", range(8))
+        def test_random_graph_explains_verified(self, seed, journal):
+            rng = np.random.default_rng(seed)
+            n = int(rng.integers(2, 15))
+            edges = [
+                (int(a), int(b))
+                for a, b in rng.integers(0, 8, size=(n, 2))
+            ]
+            _check_random_graph(edges, journal)
