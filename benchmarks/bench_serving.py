@@ -1,0 +1,293 @@
+"""Closed/open-loop load driver for the MVCC serving tier.
+
+Drives :class:`repro.serving.ServingTier` the way a deployment would
+(DESIGN.md §Serving):
+
+* **closed loop** — N client threads, each submitting its next query
+  the moment the previous answer lands, while update batches flow
+  through the tier's writer thread.  Rows at concurrency 1 and 8 make
+  the micro-batch amortisation visible: the single-client row always
+  executes batches of one, the concurrent row folds admission-queue
+  contemporaries into shared-plan groups.
+* **open loop** — one submitter thread with exponential (Poisson)
+  inter-arrival gaps at a rate derived from the measured closed-loop
+  capacity, so the p99 row reflects queueing delay under a target
+  offered load instead of client back-pressure.
+
+Every row discards warmup (snapshot/plan/cache build) before measuring
+and reports throughput, p50/p99 latency, epoch lag, and the stale-read
+count.  **Hard gates** (raise on violation, failing the bench):
+
+* ``stale_reads == 0`` on every run — a served answer must never come
+  from an epoch older than the one current at admission;
+* closed-loop throughput at concurrency 8 strictly above concurrency 1
+  on the lubm KB — the micro-batched admission path must amortise, not
+  merely not-regress.
+
+The registry's ``serve.*`` scope is reset at the end and replaced with
+a small curated set of stable gauges (``serve.lubm.*``) for the CI
+regression gate — raw batch/queue counters vary run to run with thread
+scheduling and would flap any tolerance.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from repro.core.generators import lubm_like
+from repro.incremental import IncrementalStore
+from repro.launch.serve_datalog import make_stream, make_update_batches
+from repro.obs import get_registry
+from repro.serving import ServingTier
+
+WARMUP = 50
+
+
+def _fresh_tier(program, dataset, dictionary):
+    inc = IncrementalStore(program)
+    inc.load(dataset)
+    return ServingTier(inc, dictionary)
+
+
+def _measure(tier, stream, batches, concurrency, update_at):
+    """Warm up, then serve ``stream`` from ``concurrency`` closed-loop
+    clients while the main thread feeds update batches to the writer.
+    Returns (latencies_s, wall_s, stats)."""
+    for text in dict.fromkeys(stream[: min(WARMUP, len(stream))]):
+        tier.answer(text)
+    tier.reset_counters()
+    tier.start()
+
+    lock = threading.Lock()
+    latencies: list[float] = []
+    served = [0]
+    shards = [stream[i::concurrency] for i in range(concurrency)]
+
+    def client(shard):
+        local = []
+        for text in shard:
+            t0 = time.perf_counter()
+            tier.answer(text)
+            local.append(time.perf_counter() - t0)
+            with lock:
+                served[0] += 1
+        with lock:
+            latencies.extend(local)
+
+    threads = [
+        threading.Thread(target=client, args=(s,), daemon=True)
+        for s in shards
+        if s
+    ]
+    t0 = time.perf_counter()
+    for th in threads:
+        th.start()
+    next_batch = 0
+    while any(th.is_alive() for th in threads):
+        if (
+            next_batch < len(batches)
+            and served[0] >= (next_batch + 1) * update_at
+        ):
+            deletions, additions = batches[next_batch]
+            next_batch += 1
+            tier.apply_sync(additions=additions, deletions=deletions)
+        else:
+            time.sleep(0.0005)
+    for th in threads:
+        th.join()
+    return latencies, time.perf_counter() - t0, tier.stats()
+
+
+def _closed_row(program, dataset, dictionary, stream, batches,
+                concurrency, update_at):
+    tier = _fresh_tier(program, dataset, dictionary)
+    try:
+        lat, wall, st = _measure(
+            tier, stream, batches, concurrency, update_at
+        )
+    finally:
+        tier.close()
+    lat_ms = np.asarray(lat) * 1e3
+    if st["stale_reads"]:
+        raise AssertionError(
+            f"closed loop c{concurrency}: {st['stale_reads']} stale reads"
+        )
+    return {
+        "kb": "lubm",
+        "mode": "closed",
+        "concurrency": concurrency,
+        "queries": len(lat),
+        "qps": round(len(lat) / max(wall, 1e-9), 1),
+        "p50_ms": round(float(np.percentile(lat_ms, 50)), 4),
+        "p99_ms": round(float(np.percentile(lat_ms, 99)), 4),
+        "mean_batch": round(st["mean_batch"], 2),
+        "grouped": st["grouped_queries"],
+        "dedup_hits": st["dedup_hits"],
+        "cache_hits": st["cache_hits"],
+        "applies": st["applies"],
+        "epochs_published": st["epochs_published"],
+        "epoch_lag_max": st["epoch_lag_max"],
+        "stale_reads": st["stale_reads"],
+    }
+
+
+def _open_row(program, dataset, dictionary, stream, rate_qps,
+              target_p99_ms, seed=0):
+    """Open (Poisson) arrival at ``rate_qps``: a submitter thread injects
+    requests on an exponential clock regardless of completions; waiter
+    threads record completion latency per request."""
+    import queue as _q
+
+    tier = _fresh_tier(program, dataset, dictionary)
+    try:
+        for text in dict.fromkeys(stream[: min(WARMUP, len(stream))]):
+            tier.answer(text)
+        tier.reset_counters()
+        tier.start()
+
+        rng = np.random.default_rng(seed)
+        gaps = rng.exponential(1.0 / rate_qps, size=len(stream))
+        pending: _q.Queue = _q.Queue()
+        lock = threading.Lock()
+        latencies: list[float] = []
+
+        def waiter():
+            while True:
+                item = pending.get()
+                if item is None:
+                    return
+                req, t0 = item
+                req.wait(timeout=120.0)
+                lat = time.perf_counter() - t0
+                with lock:
+                    latencies.append(lat)
+
+        waiters = [
+            threading.Thread(target=waiter, daemon=True) for _ in range(4)
+        ]
+        for th in waiters:
+            th.start()
+        t_start = time.perf_counter()
+        for i, text in enumerate(stream):
+            # absolute schedule, not sleep-per-gap: submit lateness must
+            # not shift the offered load when a sleep overshoots
+            due = t_start + float(np.sum(gaps[: i + 1]))
+            delay = due - time.perf_counter()
+            if delay > 0:
+                time.sleep(delay)
+            pending.put((tier.submit(text), time.perf_counter()))
+        for _ in waiters:
+            pending.put(None)
+        for th in waiters:
+            th.join()
+        wall = time.perf_counter() - t_start
+        st = tier.stats()
+    finally:
+        tier.close()
+    lat_ms = np.asarray(latencies) * 1e3
+    if st["stale_reads"]:
+        raise AssertionError(f"open loop: {st['stale_reads']} stale reads")
+    p99 = float(np.percentile(lat_ms, 99))
+    return {
+        "kb": "lubm",
+        "mode": "open",
+        "concurrency": 0,
+        "queries": len(latencies),
+        "offered_qps": round(rate_qps, 1),
+        "qps": round(len(latencies) / max(wall, 1e-9), 1),
+        "p50_ms": round(float(np.percentile(lat_ms, 50)), 4),
+        "p99_ms": round(p99, 4),
+        "target_p99_ms": target_p99_ms,
+        "p99_met": bool(p99 <= target_p99_ms),
+        "mean_batch": round(st["mean_batch"], 2),
+        "stale_reads": st["stale_reads"],
+    }
+
+
+def run(smoke=False) -> list[dict]:
+    if smoke:
+        program, dataset, dictionary = lubm_like(
+            n_dept=4, n_students=80, n_courses=10, seed=0
+        )
+        n_queries, update_at = 400, 120
+    else:
+        program, dataset, dictionary = lubm_like(
+            n_dept=8, n_students=300, n_courses=20, seed=0
+        )
+        n_queries, update_at = 2000, 250
+    stream = make_stream("lubm", 2, n_queries, 1.1, 0)
+    batches = make_update_batches(
+        dataset, n_queries // update_at + 1, 4, 0
+    )
+
+    print("kb,mode,concurrency,qps,p50_ms,p99_ms,mean_batch,"
+          "epoch_lag_max,stale_reads")
+    rows = []
+    # two attempts damp scheduler noise on loaded CI runners: the gate
+    # compares each concurrency level's best sustained throughput
+    best = {1: None, 8: None}
+    for _attempt in range(2):
+        for conc in (1, 8):
+            row = _closed_row(
+                program, dataset, dictionary, stream, batches,
+                conc, update_at,
+            )
+            if best[conc] is None or row["qps"] > best[conc]["qps"]:
+                best[conc] = row
+    for conc in (1, 8):
+        row = best[conc]
+        rows.append(row)
+        print(
+            f"{row['kb']},{row['mode']},{conc},{row['qps']},"
+            f"{row['p50_ms']},{row['p99_ms']},{row['mean_batch']},"
+            f"{row['epoch_lag_max']},{row['stale_reads']}"
+        )
+
+    # offered load at ~40% of measured closed-loop capacity: queueing
+    # stays sub-saturation, so p99 reflects batch formation + service
+    rate = max(200.0, 0.4 * best[8]["qps"])
+    target_p99_ms = 50.0
+    open_row = _open_row(
+        program, dataset, dictionary, stream[: n_queries // 2],
+        rate, target_p99_ms,
+    )
+    rows.append(open_row)
+    print(
+        f"{open_row['kb']},{open_row['mode']},-,{open_row['qps']},"
+        f"{open_row['p50_ms']},{open_row['p99_ms']},"
+        f"{open_row['mean_batch']},-,{open_row['stale_reads']}"
+    )
+
+    speedup = best[8]["qps"] / max(best[1]["qps"], 1e-9)
+    print(f"closed-loop speedup c8/c1: {speedup:.2f}x")
+    if best[8]["qps"] <= best[1]["qps"]:
+        raise AssertionError(
+            f"concurrency 8 must beat concurrency 1: "
+            f"{best[8]['qps']} <= {best[1]['qps']} q/s"
+        )
+
+    # swap the run-to-run-noisy serve.* counters for curated, stable
+    # gauges the CI regression gate can hold a tolerance against
+    reg = get_registry()
+    reg.reset("serve.")
+    reg.gauge("serve.lubm.throughput_c1_qps").set(best[1]["qps"])
+    reg.gauge("serve.lubm.throughput_c8_qps").set(best[8]["qps"])
+    reg.gauge("serve.lubm.p99_c8_ms").set(best[8]["p99_ms"])
+    reg.gauge("serve.lubm.speedup_c8_over_c1").set(speedup)
+    # zero-invariant gates as 1.0-valued *_ok gauges (run.py drops
+    # zero-valued metrics from the artifact)
+    reg.gauge("serve.lubm.stale_ok").set(1.0)
+    reg.gauge("serve.lubm.speedup_ok").set(1.0)
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    run(smoke=args.smoke)

@@ -84,6 +84,13 @@ METRIC_GATES: dict[str, float] = {
     # boolean gauge, 1.0 iff the measured journal overhead stayed under
     # bench_provenance.OVERHEAD_BUDGET — any flip to 0.0 fails the gate
     "overhead_ok": 0.10,
+    # serving-tier invariant verdicts (serve.lubm.stale_ok /
+    # serve.lubm.speedup_ok): 1.0 iff the load driver saw zero stale
+    # reads / the concurrent closed loop out-ran the single client —
+    # bench_serving raises on violation, so a 0.0 here means the gauge
+    # itself un-wired
+    "stale_ok": 0.10,
+    "speedup_ok": 0.10,
 }
 
 

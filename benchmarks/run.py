@@ -139,6 +139,7 @@ def main() -> None:
         bench_representation,
         bench_roofline,
         bench_runtime,
+        bench_serving,
         bench_storage,
     )
 
@@ -154,6 +155,7 @@ def main() -> None:
         "distributed": bench_distributed.run,        # naive vs semi-naive shards
         "memory": bench_memory.run,                  # obs.memory accounting
         "provenance": bench_provenance.run,          # journal overhead gate
+        "serving": bench_serving.run,                # MVCC tier load driver
     }
     from repro.obs import get_registry
 

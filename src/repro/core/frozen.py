@@ -143,6 +143,8 @@ class FrozenFacts:
         self,
         facts: FactStore,
         seed_rows: dict[str, np.ndarray] | None = None,
+        *,
+        pin_meta: bool = False,
     ):
         self.facts = facts
         self.store = facts.store
@@ -150,6 +152,17 @@ class FrozenFacts:
         # lazy caches --------------------------------------------------- #
         self._sorted: dict[str, SortedRows] = {}
         self._n_rows: dict[str, int] = {}
+        # MVCC pinning: capture the per-predicate meta-fact lists *now*
+        # so later ``facts.replace()`` calls (incremental applies) do not
+        # leak post-freeze facts into this snapshot.  Deletion splits are
+        # copy-mode and the row index snapshots its arrays, so a pinned
+        # list stays valid until a compaction swaps the node table — the
+        # serving tier defers compaction while any epoch is pinned.
+        self._pinned_mfs: dict[str, list] | None = (
+            {p: list(facts.all(p)) for p in facts.predicates()}
+            if pin_meta
+            else None
+        )
         # instrumentation: cells unfolded while *building* snapshots —
         # a one-time warmup cost, reported separately from per-query work.
         self.snapshot_cells = 0
@@ -163,21 +176,31 @@ class FrozenFacts:
     # ------------------------------------------------------------------ #
     # compressed access
     # ------------------------------------------------------------------ #
+    @property
+    def pinned(self) -> bool:
+        """True when the meta-fact lists were captured at freeze time
+        (epoch-stable reads while the live store keeps mutating)."""
+        return self._pinned_mfs is not None
+
     def predicates(self):
+        if self._pinned_mfs is not None:
+            return list(self._pinned_mfs)
         return self.facts.predicates()
 
     def meta_facts(self, pred: str):
+        if self._pinned_mfs is not None:
+            return self._pinned_mfs.get(pred, [])
         return self.facts.all(pred)
 
     def arity(self, pred: str) -> int:
-        mfs = self.facts.all(pred)
+        mfs = self.meta_facts(pred)
         return mfs[0].arity if mfs else 0
 
     def n_rows(self, pred: str) -> int:
         """Represented fact count (with multiplicity) — O(#meta-facts)."""
         cached = self._n_rows.get(pred)
         if cached is None:
-            cached = sum(mf.length for mf in self.facts.all(pred))
+            cached = sum(mf.length for mf in self.meta_facts(pred))
             self._n_rows[pred] = cached
         return cached
 
@@ -185,7 +208,7 @@ class FrozenFacts:
         """Upper-bound distinct-value estimate for one argument position:
         the total RLE run count of that column — no unfolding needed."""
         total = 0
-        for mf in self.facts.all(pred):
+        for mf in self.meta_facts(pred):
             total += self.store.n_runs(mf.columns[pos])
         return max(total, 1)
 
@@ -195,7 +218,19 @@ class FrozenFacts:
     def sorted_rows(self, pred: str) -> SortedRows:
         sr = self._sorted.get(pred)
         if sr is None:
-            unfolded = self.facts.unfold_pred(pred)
+            mfs = self.meta_facts(pred)
+            if mfs:
+                unfolded = np.stack(
+                    [
+                        np.concatenate(
+                            [self.store.unfold(mf.columns[j]) for mf in mfs]
+                        )
+                        for j in range(mfs[0].arity)
+                    ],
+                    axis=1,
+                )
+            else:
+                unfolded = np.zeros((0, 1), dtype=np.int64)
             self.snapshot_cells += int(unfolded.size)
             sr = SortedRows(np.unique(unfolded, axis=0))
             self._sorted[pred] = sr

@@ -199,6 +199,12 @@ class IncrementalStore:
             for atom in (rule.head, *rule.body):
                 self.arities.setdefault(atom.predicate, atom.arity)
         self.stats_view = PhaseStats(self.facts, self.arities)
+        #: publish-after-apply handoff: callbacks ``cb(store, stats)``
+        #: invoked at the end of every ``apply`` (after the epoch bump
+        #: and journal append).  The serving tier subscribes here so a
+        #: new MVCC epoch is published no matter which code path applied
+        #: the batch.
+        self.publish_hooks: list = []
         # per-apply pre-update meta-fact snapshots (read by the phases)
         self.pre_mfs: dict[str, list] = {}
         # provenance (obs.provenance — distinct from the maintenance
@@ -433,7 +439,17 @@ class IncrementalStore:
         publish_incremental(st)
         if self._pjournal is not None:
             self._pjournal.publish()
+        for cb in self.publish_hooks:
+            cb(self, st)
         return st
+
+    def subscribe_publish(self, cb) -> None:
+        """Register a publish-after-apply callback ``cb(store, stats)``."""
+        self.publish_hooks.append(cb)
+
+    def unsubscribe_publish(self, cb) -> None:
+        if cb in self.publish_hooks:
+            self.publish_hooks.remove(cb)
 
     def record_provenance(
         self,
@@ -849,10 +865,17 @@ class IncrementalStore:
     # ------------------------------------------------------------------ #
     # read side
     # ------------------------------------------------------------------ #
-    def freeze(self) -> FrozenFacts:
+    def freeze(self, *, pin_meta: bool = False) -> FrozenFacts:
         """Epoch snapshot for query answering — the maintained row index
-        seeds the sorted snapshots, so freezing is O(1) per epoch."""
-        return FrozenFacts(self.facts, seed_rows=self.rows.to_dict())
+        seeds the sorted snapshots, so freezing is O(1) per epoch.
+
+        ``pin_meta=True`` additionally captures the per-predicate
+        meta-fact lists, making the snapshot immune to later ``apply``
+        batches (the MVCC epoch contract; compaction still invalidates
+        pinned node ids, so the serving tier defers it while pinned)."""
+        return FrozenFacts(
+            self.facts, seed_rows=self.rows.to_dict(), pin_meta=pin_meta
+        )
 
     def to_dict(self) -> dict[str, np.ndarray]:
         """Flat per-predicate materialisation (sorted unique rows)."""

@@ -49,6 +49,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import threading
 import time
 
 import numpy as np
@@ -61,6 +62,7 @@ from ..obs import (
     get_tracer,
     publish_predicate_effectiveness,
     publish_query_cache,
+    publish_serving,
     sample_memory,
     span,
     write_chrome_trace,
@@ -70,28 +72,43 @@ from ..query import QueryEngine
 from ..storage import CheckpointManager, load_frozen, write_snapshot
 
 
-class Report:
+class ReportSink:
     """Report sink: every block prints its legacy ``[tag] ...`` line and
     (with ``--report-json``) appends one JSON object per block —
     ``{"block": tag, ...data}`` — so drivers can scrape structure
-    instead of parsing the text."""
+    instead of parsing the text.
+
+    Thread-safe: concurrent serving emits from client/executor threads,
+    so the print and the JSON append happen under one lock (interleaved
+    ``[tag]`` lines and torn JSON records otherwise).  Each record is
+    serialised *outside* the lock and written with a single ``write``."""
 
     def __init__(self, json_path: str | None = None):
         self._fh = open(json_path, "w") if json_path else None
+        self._lock = threading.Lock()
 
     def emit(self, block: str, text: str, data: dict | None = None) -> None:
-        print(f"[{block}] {text}")
+        line = f"[{block}] {text}"
+        rec = None
         if self._fh is not None:
-            rec = {"block": block}
-            rec.update(data or {})
-            json.dump(rec, self._fh, default=float, sort_keys=True)
-            self._fh.write("\n")
-            self._fh.flush()
+            payload = {"block": block}
+            payload.update(data or {})
+            rec = json.dumps(payload, default=float, sort_keys=True) + "\n"
+        with self._lock:
+            print(line)
+            if rec is not None and self._fh is not None:
+                self._fh.write(rec)
+                self._fh.flush()
 
     def close(self) -> None:
-        if self._fh is not None:
-            self._fh.close()
-            self._fh = None
+        with self._lock:
+            if self._fh is not None:
+                self._fh.close()
+                self._fh = None
+
+
+#: historical name, kept for callers that imported the class directly
+Report = ReportSink
 
 
 def build_kb(name: str, scale: int):
@@ -245,6 +262,194 @@ def make_update_batches(dataset, n_updates: int, size: int, seed: int):
     return batches
 
 
+def _serve_mvcc(args, report, inc, dictionary, stream, batches, ckpt,
+                flush_telemetry, update_at):
+    """Concurrent MVCC serving loop: ``--concurrency`` closed-loop
+    client threads answer through the :class:`~repro.serving.ServingTier`
+    (micro-batched admission over pinned epochs) while update batches
+    flow through the tier's single writer thread every ``update_at``
+    served queries."""
+    from ..serving import ServingTier
+
+    tier = ServingTier(
+        inc,
+        dictionary,
+        result_cache_size=0 if args.no_result_cache else 1024,
+        use_pallas=args.pallas,
+        checkpoint=ckpt if args.live else None,
+        checkpoint_every=args.checkpoint_every if args.live else 0,
+        compact_threshold=args.compact_threshold if args.live else 0.0,
+    )
+    n_clients = max(args.concurrency, 1)
+    lat_lock = threading.Lock()
+    latencies: list[float] = []
+    totals = {"answers": 0, "stale": 0, "served": 0}
+    apply_lat: list[float] = []
+    try:
+        # warmup off the measured path: snapshots, plans, caches
+        with span("serve.warmup"):
+            for text in dict.fromkeys(stream[: min(50, len(stream))]):
+                tier.answer(text)
+        tier.reset_counters()
+        tier.start()
+
+        shards = [stream[i::n_clients] for i in range(n_clients)]
+
+        def client(shard):
+            local_lat = []
+            answers = stale = 0
+            for text in shard:
+                t0 = time.perf_counter()
+                resp = tier.answer(text)
+                local_lat.append(time.perf_counter() - t0)
+                answers += resp.n_answers
+                stale += int(resp.stale)
+                with lat_lock:
+                    totals["served"] += 1
+            with lat_lock:
+                latencies.extend(local_lat)
+                totals["answers"] += answers
+                totals["stale"] += stale
+
+        threads = [
+            threading.Thread(target=client, args=(s,), daemon=True)
+            for s in shards
+            if s
+        ]
+        t_serve0 = time.perf_counter()
+        for th in threads:
+            th.start()
+        # the main thread feeds the writer: one update batch per
+        # `update_at` served queries, applied through tier.apply (the
+        # single writer thread) and published as a fresh epoch
+        next_batch = 0
+        while any(th.is_alive() for th in threads):
+            if (
+                args.live
+                and next_batch < len(batches)
+                and totals["served"] >= (next_batch + 1) * update_at
+            ):
+                deletions, additions = batches[next_batch]
+                next_batch += 1
+                t0 = time.perf_counter()
+                tier.apply_sync(additions=additions, deletions=deletions)
+                apply_lat.append(time.perf_counter() - t0)
+                sample_memory(phase="serve_batch", rss=False)
+                flush_telemetry()
+            else:
+                time.sleep(0.001)
+        for th in threads:
+            th.join()
+        t_serve = time.perf_counter() - t_serve0
+    finally:
+        tier.close()
+    if args.live and ckpt is not None:
+        ckpt.checkpoint(inc)  # final durable state via the LATEST pointer
+
+    reg = get_registry()
+    lat_arr = np.asarray(latencies) if latencies else np.zeros(1)
+    lat_ms = lat_arr * 1e3
+    lat_hist = reg.histogram("serve.query_s")
+    for v in latencies:
+        lat_hist.observe(float(v))
+    publish_serving(tier)
+    st = tier.stats()
+    qps = len(latencies) / max(t_serve, 1e-9)
+    report.emit(
+        "serve",
+        f"{len(latencies)} queries in {t_serve:.2f}s ({qps:.0f} q/s), "
+        f"{totals['answers']} answers total",
+        {"queries": len(latencies), "seconds": t_serve, "qps": qps,
+         "answers": totals["answers"]},
+    )
+    report.emit(
+        "latency",
+        f"p50={np.percentile(lat_ms, 50):.3f}ms "
+        f"p90={np.percentile(lat_ms, 90):.3f}ms "
+        f"p99={np.percentile(lat_ms, 99):.3f}ms "
+        f"max={lat_ms.max():.3f}ms",
+        reg.snapshot("serve.query_s"),
+    )
+    report.emit(
+        "serving",
+        f"mvcc concurrency={n_clients}: {qps:.0f} q/s, "
+        f"p99={np.percentile(lat_ms, 99):.3f}ms; "
+        f"{st['batches']} micro-batches "
+        f"(mean {st['mean_batch']:.1f}, max {st['max_batch']}, "
+        f"{st['dedup_hits']} dedup / {st['grouped_queries']} grouped / "
+        f"{st['cache_hits']} cached), "
+        f"epochs: {st['epochs_published']} published, "
+        f"{st['epochs_retired']} retired, {st['epochs_live']} live, "
+        f"lag<={st['epoch_lag_max']}; {st['stale_reads']} stale reads, "
+        f"{st['compactions']} compactions "
+        f"({st['compactions_deferred']} deferred)",
+        {
+            "concurrency": n_clients,
+            "qps": qps,
+            "p50_ms": float(np.percentile(lat_ms, 50)),
+            "p99_ms": float(np.percentile(lat_ms, 99)),
+            **st,
+        },
+    )
+    if st["stale_reads"]:
+        report.emit(
+            "serving-verify",
+            f"FAILED: {st['stale_reads']} stale reads (must be 0)",
+            {"stale_reads": st["stale_reads"]},
+        )
+        return 1
+    report.emit(
+        "store",
+        f"{inc.store.n_nodes()} mu-nodes",
+        {"mu_nodes": inc.store.n_nodes()},
+    )
+    if args.live:
+        ap_ms = np.asarray(apply_lat) * 1e3 if apply_lat else np.zeros(1)
+        inc_snap = reg.snapshot("inc.")
+        report.emit(
+            "live",
+            f"{len(apply_lat)} update batches through the writer thread "
+            f"(epoch {inc.epoch}), apply p50={np.percentile(ap_ms, 50):.2f}ms "
+            f"p99={np.percentile(ap_ms, 99):.2f}ms; "
+            f"{int(inc_snap.get('inc.n_deleted', 0))} deleted / "
+            f"{int(inc_snap.get('inc.n_inserted', 0))} inserted facts",
+            {**inc_snap, "apply_batches": len(apply_lat)},
+        )
+        if ckpt is not None:
+            reg.gauge("storage.disk_bytes").set(ckpt.disk_nbytes())
+            reg.gauge("storage.wal_bytes").set(ckpt.wal.nbytes())
+            st_snap = reg.snapshot("storage.")
+            report.emit(
+                "storage",
+                f"{int(st_snap.get('storage.checkpoints', 0))} checkpoints "
+                f"under {args.checkpoint_dir} "
+                f"({st_snap['storage.disk_bytes'] / 1024:.1f}KiB on disk)",
+                st_snap,
+            )
+        if args.live_verify:
+            from ..core import flat_seminaive
+
+            want = {
+                p: r
+                for p, r in flat_seminaive(inc.program, inc.explicit).items()
+                if r.shape[0]
+            }
+            got = inc.to_dict()
+            ok = set(want) == set(got) and all(
+                np.array_equal(want[p], got[p]) for p in want
+            )
+            report.emit(
+                "live-verify",
+                f"{'OK' if ok else 'MISMATCH'} "
+                f"({sum(r.shape[0] for r in want.values())} facts)",
+                {"ok": ok,
+                 "facts": sum(r.shape[0] for r in want.values())},
+            )
+            if not ok:
+                return 1
+    return 0
+
+
 def _main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--kb", default="lubm", choices=["lubm", "chain", "star", "paper"])
@@ -259,6 +464,12 @@ def _main(argv=None):
     ap.add_argument("--live", action="store_true",
                     help="serve updates interleaved with queries through "
                          "the incremental maintenance subsystem")
+    ap.add_argument("--mvcc", action="store_true",
+                    help="serve through the epoch-based MVCC tier "
+                         "(repro.serving): concurrent client threads, "
+                         "micro-batched admission, single writer thread")
+    ap.add_argument("--concurrency", type=int, default=1, metavar="N",
+                    help="closed-loop client threads in --mvcc mode")
     ap.add_argument("--distributed", action="store_true",
                     help="shadow the KB on the sharded engine (semi-naive "
                          "delta exchange over all visible devices); with "
@@ -308,6 +519,8 @@ def _main(argv=None):
                     help="render the per-rule cost attribution table "
                          "(derived/redundant/time) from the journal")
     args = ap.parse_args(argv)
+    if args.mvcc and args.distributed:
+        ap.error("--mvcc and --distributed are mutually exclusive")
 
     want_prov = bool(
         args.provenance or args.explain or args.explain_sample
@@ -322,7 +535,7 @@ def _main(argv=None):
 
     if args.trace_out:
         get_tracer().enable()
-    report = Report(args.report_json)
+    report = ReportSink(args.report_json)
 
     def flush_telemetry() -> None:
         if args.metrics_out:
@@ -355,7 +568,9 @@ def _main(argv=None):
     inc = None
     recovery = None
     stats = None
-    if args.live:
+    if args.live or args.mvcc:
+        # --mvcc always serves from an IncrementalStore: the MVCC tier
+        # publishes epochs by freezing it (static KBs just never apply)
         if ckpt is not None and args.restore and ckpt.has_snapshot():
             inc, recovery = ckpt.restore(program)
         else:
@@ -511,12 +726,6 @@ def _main(argv=None):
                 )
                 return 1
 
-    qe = QueryEngine(
-        source,
-        dictionary,
-        result_cache_size=0 if args.no_result_cache else 1024,
-        use_pallas=args.pallas,
-    )
     stream = make_stream(args.kb, args.scale, args.n_queries, args.zipf, args.seed)
     if not stream:
         print("[serve] empty query stream (--n-queries 0); nothing to do")
@@ -531,6 +740,21 @@ def _main(argv=None):
         else []
     )
 
+    if args.mvcc:
+        rc = _serve_mvcc(
+            args, report, inc, dictionary, stream, batches, ckpt,
+            flush_telemetry, update_at,
+        )
+        if rc:
+            return rc
+        return _emit_tail(args, report, inc, inc, dictionary, flush_telemetry)
+
+    qe = QueryEngine(
+        source,
+        dictionary,
+        result_cache_size=0 if args.no_result_cache else 1024,
+        use_pallas=args.pallas,
+    )
     # warmup: build snapshots + plans off the measured path
     with span("serve.warmup"):
         for text in dict.fromkeys(stream[: min(50, len(stream))]):
@@ -730,6 +954,16 @@ def _main(argv=None):
             )
             if not ok:
                 return 1
+    return _emit_tail(args, report, inc, source, dictionary, flush_telemetry)
+
+
+def _emit_tail(args, report, inc, source, dictionary, flush_telemetry) -> int:
+    """Shared trailing report blocks (provenance, kernels, memory,
+    trace, metrics) for both the single-thread and MVCC serve paths."""
+    want_prov = bool(
+        args.provenance or args.explain or args.explain_sample
+        or args.hot_rules
+    )
     if want_prov:
         from ..obs.provenance import get_journal
 

@@ -26,6 +26,7 @@ from .adapters import (
     publish_incremental,
     publish_materialisation,
     publish_query_cache,
+    publish_serving,
 )
 from .export import chrome_trace, write_chrome_trace, write_metrics
 from .memory import (
@@ -85,6 +86,7 @@ __all__ = [
     "publish_incremental",
     "publish_distributed",
     "publish_query_cache",
+    "publish_serving",
     "DerivationJournal",
     "DerivationRecord",
     "Explainer",

@@ -25,11 +25,40 @@ __all__ = [
     "publish_incremental",
     "publish_distributed",
     "publish_query_cache",
+    "publish_serving",
     "MATERIALISATION_COUNTERS",
     "MATERIALISATION_GAUGES",
     "INCREMENTAL_COUNTERS",
     "DISTRIBUTED_COUNTERS",
+    "SERVING_GAUGES",
 ]
+
+#: ServingTier.stats() keys mirrored as gauges (lifetime-cumulative on
+#: the tier, so re-publishing is idempotent — same convention as
+#: :func:`publish_query_cache`)
+SERVING_GAUGES = (
+    "queries",
+    "batches",
+    "mean_batch",
+    "max_batch",
+    "grouped_queries",
+    "single_queries",
+    "cache_hits",
+    "dedup_hits",
+    "groups",
+    "stale_reads",
+    "applies",
+    "checkpoints",
+    "compactions",
+    "compactions_deferred",
+    "max_queue_depth",
+    "epoch_lag_max",
+    "epochs_published",
+    "epochs_retired",
+    "epochs_live",
+    "epochs_pinned",
+    "epoch",
+)
 
 #: MaterialisationStats fields that accumulate (counter semantics)
 MATERIALISATION_COUNTERS = (
@@ -151,6 +180,21 @@ def publish_distributed(
     reg.gauge(f"{prefix}.epoch").set(stats.epoch)
     _publish_rule_scope(reg, stats)
     _publish_plan_cache(reg, prefix, stats.plan_cache)
+
+
+def publish_serving(
+    tier, registry: MetricsRegistry | None = None, prefix: str = "serve.tier"
+) -> None:
+    """Publish a :class:`~repro.serving.ServingTier`'s lifetime stats
+    under ``serve.tier.*`` gauges.  The tier's live counters/histograms
+    (batch sizes, admission latency, epoch lag) already stream into the
+    registry under ``serve.*`` — the roll-up takes its own sub-scope so
+    gauge names never collide with those counters."""
+    reg = registry if registry is not None else get_registry()
+    stats = tier.stats()
+    for key in SERVING_GAUGES:
+        if key in stats:
+            reg.gauge(f"{prefix}.{key}").set(stats[key])
 
 
 def publish_query_cache(

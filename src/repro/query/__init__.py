@@ -14,12 +14,14 @@ store (see DESIGN.md §Query):
 """
 
 from .ast import Query, parse_query
+from .batch import BatchStats, answer_group, plan_signature
 from .engine import QueryEngine, QueryResult
 from .exec import ExecStats, execute
 from .plan import JoinStep, Plan, ScanStep, plan_query
 from .ref import answer_flat
 
 __all__ = [
+    "BatchStats",
     "ExecStats",
     "JoinStep",
     "Plan",
@@ -28,7 +30,9 @@ __all__ = [
     "QueryResult",
     "ScanStep",
     "answer_flat",
+    "answer_group",
     "execute",
     "parse_query",
     "plan_query",
+    "plan_signature",
 ]

@@ -234,6 +234,48 @@ class QueryEngine:
             return result
 
     # ------------------------------------------------------------------ #
+    # micro-batch admission (serving tier; see query.batch)
+    # ------------------------------------------------------------------ #
+    def cached(self, query: Query | str) -> QueryResult | None:
+        """Result-cache peek (epoch-checked, counts as a hit when it
+        lands; no evaluation on miss — the batch executor uses this to
+        skip already-answered members of a signature group)."""
+        if isinstance(query, str):
+            query = self.parse(query)
+        if self._result_cache_size <= 0:
+            return None
+        hit = self._stamped_get(self._result_cache, query)
+        if hit is None:
+            return None
+        self.result_hits += 1
+        return QueryResult(
+            query, hit.answers, hit.plan, hit.stats, from_cache=True
+        )
+
+    def seed_result(self, result: QueryResult) -> None:
+        """Install an externally computed result (e.g. a split of a
+        generalised batched answer) into the result cache, stamped with
+        the current epoch."""
+        if self._result_cache_size > 0:
+            self._stamped_put(
+                self._result_cache, result.query, result,
+                self._result_cache_size,
+            )
+
+    def answer_batch(self, queries, *, min_group: int = 2):
+        """Answer a micro-batch with shared-plan grouping: queries with
+        the same constant-abstracted signature and one constant slot run
+        as a single generalised scan/join.  Returns ``(results,
+        BatchStats)`` with ``results`` aligned to the input order."""
+        from .batch import answer_group
+
+        parsed = [
+            self.parse(q) if isinstance(q, str) else q for q in queries
+        ]
+        by_query, stats = answer_group(self, parsed, min_group=min_group)
+        return [by_query[q] for q in parsed], stats
+
+    # ------------------------------------------------------------------ #
     def decode(self, answers: np.ndarray) -> list[tuple[str, ...]]:
         """Render answer rows back to term strings via the dictionary."""
         if self.dictionary is None:

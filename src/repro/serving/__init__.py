@@ -1,0 +1,24 @@
+"""Epoch-based MVCC serving tier (DESIGN.md §Serving).
+
+Readers pin immutable epoch snapshots through a refcounted registry, a
+single writer thread applies update batches and publishes new epochs,
+and queries are admitted in vectorised micro-batches executed with
+shared-plan grouping.  The load driver lives in
+``benchmarks/bench_serving.py``; the CLI entry point is
+``repro.launch.serve_datalog --mvcc``.
+"""
+
+from .admission import AdmissionQueue, Request
+from .epochs import EpochEntry, EpochLease, EpochRegistry
+from .tier import ServeResponse, ServingLease, ServingTier
+
+__all__ = [
+    "AdmissionQueue",
+    "EpochEntry",
+    "EpochLease",
+    "EpochRegistry",
+    "Request",
+    "ServeResponse",
+    "ServingLease",
+    "ServingTier",
+]

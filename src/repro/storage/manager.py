@@ -68,7 +68,47 @@ class CheckpointManager:
         self.label = label
         os.makedirs(root, exist_ok=True)
         self.wal = WriteAheadLog(os.path.join(root, _WAL))
+        #: MVCC pin/retire hooks: epochs pinned here (refcounted) or
+        #: reported by the attached source keep their snapshot directory
+        #: out of pruning and their WAL suffix out of truncation, so a
+        #: reader holding an old epoch can always be recovered/audited
+        self._pins: dict[int, int] = {}
+        self._epoch_source = None
         register_reporter("storage", self)
+
+    # ------------------------------------------------------------------ #
+    # epoch pin/retire hooks (serving tier MVCC)
+    # ------------------------------------------------------------------ #
+    def attach_epoch_source(self, fn) -> None:
+        """Register a zero-arg callable yielding the store epochs some
+        reader currently pins (the serving tier passes its epoch
+        registry's ``pinned_epochs``)."""
+        self._epoch_source = fn
+
+    def pin_epoch(self, epoch: int) -> None:
+        """Refcounted manual pin: keep ``snap-<epoch>`` and the WAL
+        records after it until :meth:`unpin_epoch`."""
+        self._pins[epoch] = self._pins.get(epoch, 0) + 1
+
+    def unpin_epoch(self, epoch: int) -> None:
+        n = self._pins.get(epoch, 0) - 1
+        if n <= 0:
+            self._pins.pop(epoch, None)
+        else:
+            self._pins[epoch] = n
+
+    def pinned_epochs(self) -> set[int]:
+        pinned = set(self._pins)
+        if self._epoch_source is not None:
+            pinned.update(self._epoch_source())
+        return pinned
+
+    @staticmethod
+    def _snap_epoch(name: str) -> int:
+        try:
+            return int(name.split("-", 1)[1])
+        except (IndexError, ValueError):
+            return -1
 
     def reset(self) -> None:
         """Wipe the checkpoint root: all snapshots, the LATEST pointer,
@@ -155,16 +195,20 @@ class CheckpointManager:
             os.replace(ptr_tmp, os.path.join(self.root, _LATEST))
             _fsync_dir(self.root)
             # the snapshot is durable and published: WAL records and
-            # journal entries at or below its epoch are redundant
-            self.wal.truncate(keep_after_epoch=inc.epoch)
+            # journal entries at or below its epoch are redundant —
+            # except the suffix after the oldest pinned epoch, which a
+            # pinned reader's snapshot still needs to replay forward
+            pinned = self.pinned_epochs()
+            keep_after = min([inc.epoch, *pinned]) if pinned else inc.epoch
+            self.wal.truncate(keep_after_epoch=keep_after)
             inc.truncate_journal()
             # never prune the snapshot LATEST points at, whatever its
             # name sorts as (a reused dir could hold higher-numbered
-            # strangers)
+            # strangers), nor any snapshot whose epoch is pinned
             for old in self.snapshots()[: -self.keep]:
-                if old != name:
+                if old != name and self._snap_epoch(old) not in pinned:
                     shutil.rmtree(os.path.join(self.root, old))
-            sp.set(snapshot=name)
+            sp.set(snapshot=name, pinned_epochs=len(pinned))
         reg = get_registry()
         reg.counter("storage.checkpoints").inc()
         reg.gauge("storage.checkpoint_epoch").set(inc.epoch)

@@ -1,0 +1,585 @@
+"""MVCC serving tier: epoch registry, micro-batched admission, writer.
+
+Concurrency invariants under test (DESIGN.md §Serving):
+
+* a pinned epoch always answers from the snapshot it pinned, however
+  many epochs the writer publishes meanwhile (differential against the
+  sequential :func:`flat_seminaive` oracle);
+* an epoch entry is never retired while a lease pins it, and is retired
+  as soon as the last lease releases a non-current entry;
+* compaction (which swaps the mu-node table) is deferred while any
+  epoch is pinned, and runs once the pins drain;
+* checkpoint pruning and WAL truncation respect pinned epochs;
+* responses are never stale: a query admitted at registry version V is
+  answered at a version >= V;
+* ``ReportSink.emit`` is thread-safe (one JSON line per emit, no torn
+  records) — the regression test for the serving-driver bugfix.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import flat_seminaive
+from repro.core.generators import chain, lubm_like, paper_example
+from repro.incremental import IncrementalStore
+from repro.query import QueryEngine, answer_flat, parse_query
+from repro.serving import EpochRegistry, ServingTier
+
+
+def as_sets(facts):
+    return {
+        p: frozenset(map(tuple, np.asarray(r).tolist()))
+        for p, r in facts.items()
+        if len(r)
+    }
+
+
+def rows_set(arr):
+    return frozenset(map(tuple, np.asarray(arr).tolist()))
+
+
+def make_chain_store(n=8):
+    program, dataset, dictionary = chain(n=n)
+    inc = IncrementalStore(program)
+    inc.load(dataset)
+    return program, dataset, dictionary, inc
+
+
+# --------------------------------------------------------------------- #
+# epoch registry
+# --------------------------------------------------------------------- #
+def test_registry_pin_publish_retire():
+    retired = []
+    reg = EpochRegistry(on_retire=lambda e: retired.append(e.version))
+    with pytest.raises(RuntimeError):
+        reg.pin()
+
+    reg.publish(0, frozen="f0", engine="e0")
+    assert reg.version == 0 and reg.n_live() == 1
+
+    # unpinned previous entry retires at the next publish
+    reg.publish(1, frozen="f1", engine="e1")
+    assert retired == [0] and reg.n_live() == 1
+
+    lease = reg.pin()
+    assert lease.version == 1 and lease.engine == "e1"
+    reg.publish(2, frozen="f2", engine="e2")
+    # v1 is pinned: still live, not retired
+    assert reg.n_live() == 2 and retired == [0]
+    assert reg.pinned_epochs() == {1}
+
+    lease.release()
+    assert retired == [0, 1] and reg.n_live() == 1
+    # release is idempotent
+    lease.release()
+    assert reg.stats() == {
+        "published": 3, "retired": 2, "live": 1, "pinned": 0,
+        "version": 2, "epoch": 2,
+    }
+
+
+def test_registry_refcounts_and_current_pin():
+    reg = EpochRegistry()
+    reg.publish(0, frozen=None, engine=None)
+    l1, l2 = reg.pin(), reg.pin()
+    assert reg.n_pinned() == 2
+    l1.release()
+    # the current entry survives its last release (it is still current)
+    l2.release()
+    assert reg.n_live() == 1 and reg.version == 0
+    # ...and retires normally at the next publish
+    reg.publish(1, frozen=None, engine=None)
+    assert reg.n_live() == 1 and reg.retired == 1
+
+
+# --------------------------------------------------------------------- #
+# tier read path
+# --------------------------------------------------------------------- #
+def test_tier_answers_match_query_engine():
+    program, dataset, dictionary, inc = make_chain_store()
+    tier = ServingTier(inc, dictionary)
+    try:
+        engine = QueryEngine(inc.freeze(), dictionary)
+        for text in (
+            "?x, ?y <- path(?x, ?y)",
+            '?y <- path("v000000", ?y)',
+            '<- edge("v000000", "v000001")',
+        ):
+            resp = tier.answer(text)
+            want = engine.answer(text)
+            assert np.array_equal(resp.answers, want.answers), text
+            assert not resp.stale
+    finally:
+        tier.close()
+
+
+def test_pinned_epoch_isolated_from_writer():
+    program, dataset, dictionary, inc = make_chain_store()
+    tier = ServingTier(inc, dictionary)
+    query = "?x, ?y <- path(?x, ?y)"
+    try:
+        want_v0 = rows_set(
+            flat_seminaive(program, inc.explicit)["path"]
+        )
+        lease = tier.pin()
+        # writer deletes the middle edge: the current view's closure
+        # splits, the pinned view must not move
+        dels = {"edge": np.asarray(dataset["edge"])[3:4]}
+        tier.apply_sync(deletions=dels)
+        want_v1 = rows_set(
+            flat_seminaive(program, inc.explicit)["path"]
+        )
+        assert want_v1 != want_v0, "update must change the closure"
+
+        assert rows_set(lease.answer(query).answers) == want_v0
+        assert rows_set(tier.answer(query).answers) == want_v1
+        # the lease keeps answering v0 even after more churn
+        tier.apply_sync(additions=dels)
+        assert rows_set(lease.answer(query).answers) == want_v0
+        lease.release()
+    finally:
+        tier.close()
+
+
+def test_no_retire_while_pinned():
+    program, dataset, dictionary, inc = make_chain_store()
+    tier = ServingTier(inc, dictionary)
+    try:
+        lease = tier.pin()
+        entry = lease._lease._entry
+        dels = {"edge": np.asarray(dataset["edge"])[:1]}
+        tier.apply_sync(deletions=dels)
+        tier.apply_sync(additions=dels)
+        assert not entry.retired, "entry retired while pinned"
+        assert tier.registry.n_live() == 2
+        lease.release()
+        assert entry.retired, "entry must retire on last unpin"
+        assert tier.registry.n_live() == 1
+    finally:
+        tier.close()
+
+
+def test_compaction_deferred_while_pinned():
+    # n=20 keeps the store above maybe_compact's min_nodes floor
+    program, dataset, dictionary, inc = make_chain_store(n=20)
+    # threshold tiny: any deletion churn qualifies for compaction
+    tier = ServingTier(inc, dictionary, compact_threshold=0.01)
+    query = "?x, ?y <- path(?x, ?y)"
+    try:
+        lease = tier.pin()
+        v0 = rows_set(flat_seminaive(program, inc.explicit)["path"])
+        dels = {"edge": np.asarray(dataset["edge"])[4:6]}
+        tier.apply_sync(deletions=dels)
+        assert tier.compactions == 0 and tier.compactions_deferred >= 1
+        # pinned snapshot still reads pre-churn state through the
+        # un-swapped node table
+        assert rows_set(lease.answer(query).answers) == v0
+        lease.release()
+
+        tier.apply_sync(additions=dels)
+        assert tier.compactions >= 1, "compaction must run once unpinned"
+        want = rows_set(flat_seminaive(program, inc.explicit)["path"])
+        assert rows_set(tier.answer(query).answers) == want
+    finally:
+        tier.close()
+
+
+# --------------------------------------------------------------------- #
+# micro-batch shared-plan execution
+# --------------------------------------------------------------------- #
+def test_answer_batch_equivalence():
+    program, dataset, dictionary = lubm_like(
+        n_dept=4, n_students=40, n_courses=8, seed=0
+    )
+    inc = IncrementalStore(program)
+    inc.load(dataset)
+    frozen = inc.freeze()
+    texts = [
+        # one-constant template group (batched generalised)
+        '?s, ?c <- memberOf(?s, "dept0"), takesCourse(?s, ?c)',
+        '?s, ?c <- memberOf(?s, "dept1"), takesCourse(?s, ?c)',
+        '?s, ?c <- memberOf(?s, "dept2"), takesCourse(?s, ?c)',
+        # exact duplicate (deduped in-batch)
+        '?s, ?c <- memberOf(?s, "dept0"), takesCourse(?s, ?c)',
+        # no-constant query (single)
+        "?x, ?u <- memberOf(?x, ?dv), subOrganizationOf(?dv, ?u)",
+        # ask queries, one grouped pair
+        '<- memberOf(?x, "dept0")',
+        '<- memberOf(?x, "dept3")',
+        # two-constant query (not single-slot: single path)
+        '?c <- memberOf("student0", ?s), takesCourse("student1", ?c)',
+    ]
+    batch_engine = QueryEngine(frozen, dictionary, result_cache_size=64)
+    results, stats = batch_engine.answer_batch(
+        [parse_query(t, dictionary) for t in texts]
+    )
+    assert len(results) == len(texts)
+    assert stats.n_queries == len(texts) - 1  # one exact duplicate
+    assert stats.n_groups >= 1 and stats.n_grouped >= 3
+
+    for text, res in zip(texts, results):
+        # fresh engine per query: no shared caches with the batch path
+        ref = QueryEngine(frozen, dictionary, result_cache_size=0).answer(
+            text
+        )
+        assert np.array_equal(res.answers, ref.answers), text
+    # duplicates resolve to the same answers object
+    assert results[0] is results[3] or np.array_equal(
+        results[0].answers, results[3].answers
+    )
+
+
+def test_answer_batch_absent_constant_and_seeded_cache():
+    program, dataset, dictionary, inc = make_chain_store(n=6)
+    frozen = inc.freeze()
+    engine = QueryEngine(frozen, dictionary, result_cache_size=64)
+    texts = [
+        '?y <- path("v000000", ?y)',
+        '?y <- path("v000003", ?y)',
+        '?y <- path("v000006", ?y)',  # sink node: no outgoing path
+    ]
+    queries = [parse_query(t, dictionary) for t in texts]
+    results, stats = engine.answer_batch(queries)
+    assert stats.n_groups == 1 and stats.n_grouped == 3
+    assert results[2].n_answers == 0
+    for q, res in zip(queries, results):
+        ref = answer_flat(q, flat_seminaive(program, inc.explicit))
+        assert np.array_equal(res.answers, ref), str(q)
+    # split answers were seeded into the result cache: a re-ask hits
+    again, stats2 = engine.answer_batch(queries)
+    assert stats2.n_cached == 3 and stats2.n_groups == 0
+    for res, res2 in zip(results, again):
+        assert np.array_equal(res.answers, res2.answers)
+
+
+# --------------------------------------------------------------------- #
+# threaded stress: readers + writer, per-version differential oracle
+# --------------------------------------------------------------------- #
+def test_threaded_closed_loop_stress():
+    program, dataset, dictionary, inc = make_chain_store(n=12)
+    tier = ServingTier(inc, dictionary, max_batch=8)
+
+    # record every published version's explicit set (the subscriber runs
+    # after the tier's own publish hook, so registry.version is fresh)
+    explicit_by_version = {
+        tier.registry.version: {
+            p: np.array(r, copy=True) for p, r in inc.explicit.items()
+        }
+    }
+
+    def record(store, stats):
+        explicit_by_version[tier.registry.version] = {
+            p: np.array(r, copy=True) for p, r in store.explicit.items()
+        }
+
+    inc.subscribe_publish(record)
+    texts = [
+        "?x, ?y <- path(?x, ?y)",
+        '?y <- path("v000000", ?y)',
+        '?y <- path("v000005", ?y)',
+        "?x, ?y <- edge(?x, ?y)",
+    ]
+    n_clients, per_client = 8, 30
+    out_lock = threading.Lock()
+    observations = []
+    errors = []
+
+    def client(seed):
+        rng = np.random.default_rng(seed)
+        try:
+            for _ in range(per_client):
+                text = texts[int(rng.integers(0, len(texts)))]
+                resp = tier.answer(text, timeout=60.0)
+                with out_lock:
+                    observations.append((text, resp))
+        except Exception as e:  # noqa: BLE001 — surfaced after join
+            with out_lock:
+                errors.append(e)
+
+    edges = np.asarray(dataset["edge"])
+    try:
+        tier.start()
+        threads = [
+            threading.Thread(target=client, args=(i,), daemon=True)
+            for i in range(n_clients)
+        ]
+        for th in threads:
+            th.start()
+        # writer churn concurrent with the clients
+        for i in range(6):
+            dels = {"edge": edges[i % len(edges): i % len(edges) + 1]}
+            tier.apply_sync(deletions=dels)
+            tier.apply_sync(additions=dels)
+        for th in threads:
+            th.join(timeout=120.0)
+            assert not th.is_alive(), "client thread hung"
+    finally:
+        tier.close()
+        inc.unsubscribe_publish(record)
+
+    assert not errors, errors
+    assert len(observations) == n_clients * per_client
+    assert tier.stats()["stale_reads"] == 0
+
+    # every response must match the sequential oracle of the exact
+    # version it was served at
+    oracle_cache: dict[int, dict] = {}
+    for text, resp in observations:
+        assert not resp.stale
+        assert resp.version in explicit_by_version, resp.version
+        if resp.version not in oracle_cache:
+            oracle_cache[resp.version] = flat_seminaive(
+                program, explicit_by_version[resp.version]
+            )
+        ref = answer_flat(
+            parse_query(text, dictionary), oracle_cache[resp.version]
+        )
+        assert np.array_equal(resp.answers, ref), (
+            f"{text} at version {resp.version}"
+        )
+
+
+def test_malformed_query_fails_alone():
+    program, dataset, dictionary, inc = make_chain_store()
+    tier = ServingTier(inc, dictionary)
+    try:
+        tier.start()
+        good = tier.submit("?x, ?y <- path(?x, ?y)")
+        bad = tier.submit("this is not a query")
+        good2 = tier.submit('?y <- path("v000000", ?y)')
+        with pytest.raises(ValueError):
+            bad.wait(timeout=30.0)
+        assert good.wait(timeout=30.0).n_answers > 0
+        assert good2.wait(timeout=30.0).n_answers > 0
+    finally:
+        tier.close()
+
+
+# --------------------------------------------------------------------- #
+# storage integration: pins gate pruning/truncation
+# --------------------------------------------------------------------- #
+def test_checkpoint_prune_respects_pins(tmp_path):
+    from repro.storage import CheckpointManager
+
+    program, dataset, dictionary, inc = make_chain_store()
+    mgr = CheckpointManager(str(tmp_path / "ckpt"), keep=1, label="t")
+    inc.attach_wal(mgr.wal)
+    edges = np.asarray(dataset["edge"])
+
+    inc.apply(deletions={"edge": edges[:1]})   # epoch 1
+    mgr.checkpoint(inc)
+    pinned_epoch = inc.epoch
+    mgr.pin_epoch(pinned_epoch)
+
+    inc.apply(additions={"edge": edges[:1]})   # epoch 2
+    inc.apply(deletions={"edge": edges[1:2]})  # epoch 3
+    mgr.checkpoint(inc)
+    # keep=1 would normally leave only snap-3; the pin saves snap-1 and
+    # the WAL records after epoch 1 (a pinned reader must stay
+    # recoverable: snapshot + replay-forward)
+    assert mgr.snapshots() == [
+        f"snap-{pinned_epoch:08d}", f"snap-{inc.epoch:08d}"
+    ]
+    replayable = [
+        r for r in mgr.wal.records() if r["epoch"] > pinned_epoch
+    ]
+    assert len(replayable) == 2, "WAL suffix after the pin truncated"
+
+    mgr.unpin_epoch(pinned_epoch)
+    inc.apply(additions={"edge": edges[1:2]})  # epoch 4
+    mgr.checkpoint(inc)
+    assert mgr.snapshots() == [f"snap-{inc.epoch:08d}"]
+    assert mgr.wal.records() == []
+
+
+def test_tier_epoch_source_feeds_checkpoint(tmp_path):
+    from repro.storage import CheckpointManager
+
+    program, dataset, dictionary, inc = make_chain_store()
+    mgr = CheckpointManager(str(tmp_path / "ckpt"), keep=1, label="t")
+    inc.attach_wal(mgr.wal)
+    tier = ServingTier(inc, dictionary, checkpoint=mgr, checkpoint_every=1)
+    edges = np.asarray(dataset["edge"])
+    try:
+        lease = tier.pin()
+        pinned_epoch = lease.epoch
+        tier.apply_sync(deletions={"edge": edges[:1]})
+        tier.apply_sync(additions={"edge": edges[:1]})
+        # the registry's pinned epochs flow through attach_epoch_source:
+        # WAL records after the pinned store epoch survive truncation
+        assert {pinned_epoch} == tier.registry.pinned_epochs()
+        assert all(
+            r["epoch"] > pinned_epoch for r in mgr.wal.records()
+        )
+        assert len(mgr.wal.records()) == 2 - pinned_epoch
+        lease.release()
+        tier.apply_sync(deletions={"edge": edges[1:2]})
+        assert mgr.wal.records() == [], "unpinned WAL prefix kept"
+    finally:
+        tier.close()
+
+
+# --------------------------------------------------------------------- #
+# ReportSink thread-safety (serving-driver bugfix regression)
+# --------------------------------------------------------------------- #
+def test_report_sink_concurrent_emits(tmp_path, capsys):
+    from repro.launch.serve_datalog import ReportSink
+
+    path = tmp_path / "report.jsonl"
+    sink = ReportSink(str(path))
+    n_threads, per_thread = 8, 200
+
+    def emitter(tid):
+        for i in range(per_thread):
+            sink.emit(
+                f"t{tid}", f"payload {i}",
+                {"thread": tid, "i": i, "filler": "x" * 64},
+            )
+
+    threads = [
+        threading.Thread(target=emitter, args=(t,)) for t in range(n_threads)
+    ]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    sink.close()
+
+    lines = path.read_text().splitlines()
+    assert len(lines) == n_threads * per_thread
+    seen = set()
+    for line in lines:
+        rec = json.loads(line)  # a torn/interleaved write fails here
+        assert rec["block"] == f"t{rec['thread']}"
+        assert rec["filler"] == "x" * 64
+        seen.add((rec["thread"], rec["i"]))
+    assert len(seen) == n_threads * per_thread, "lost or duplicated emits"
+    capsys.readouterr()  # swallow the 1600 printed lines
+
+
+# --------------------------------------------------------------------- #
+# driver end-to-end (in-process)
+# --------------------------------------------------------------------- #
+def test_serve_datalog_mvcc_smoke(tmp_path, capsys):
+    from repro.launch.serve_datalog import main
+
+    report = tmp_path / "report.jsonl"
+    rc = main([
+        "--kb", "paper", "--scale", "1", "--n-queries", "120",
+        "--mvcc", "--concurrency", "4", "--live", "--live-verify",
+        "--update-every", "40", "--update-size", "2",
+        "--report-json", str(report),
+    ])
+    capsys.readouterr()
+    assert rc == 0
+    blocks = [json.loads(line) for line in report.read_text().splitlines()]
+    servings = [b for b in blocks if b["block"] == "serving"]
+    assert len(servings) == 1
+    s = servings[0]
+    assert s["concurrency"] == 4
+    assert s["qps"] > 0 and s["p99_ms"] > 0
+    assert s["stale_reads"] == 0
+    assert s["epochs_published"] >= 2
+    verifies = [b for b in blocks if b["block"] == "live-verify"]
+    assert len(verifies) == 1 and verifies[0]["ok"]
+
+
+def test_mvcc_rejects_distributed(capsys):
+    from repro.launch.serve_datalog import main
+
+    with pytest.raises(SystemExit):
+        main(["--mvcc", "--distributed"])
+    capsys.readouterr()
+
+
+# --------------------------------------------------------------------- #
+# hypothesis: random reader/writer interleavings vs sequential oracle
+# --------------------------------------------------------------------- #
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as hst
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - hypothesis is in requirements-dev
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+
+    @hst.composite
+    def interleavings(draw):
+        """Op sequences over a chain KB: writer applies, reader pins,
+        unpins, and queries against pinned or current views."""
+        ops = []
+        for _ in range(draw(hst.integers(min_value=3, max_value=12))):
+            kind = draw(hst.sampled_from(
+                ["apply", "pin", "unpin", "query_current", "query_pinned"]
+            ))
+            if kind == "apply":
+                ops.append((
+                    "apply",
+                    draw(hst.integers(min_value=0, max_value=9)),
+                    draw(hst.booleans()),
+                ))
+            elif kind in ("unpin", "query_pinned"):
+                ops.append((kind, draw(hst.integers(min_value=0, max_value=4))))
+            else:
+                ops.append((kind,))
+        return ops
+
+    @settings(
+        max_examples=20,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    @given(interleavings())
+    def test_epoch_pinning_interleavings(ops):
+        program, dataset, dictionary, inc = make_chain_store(n=10)
+        tier = ServingTier(inc, dictionary)
+        query = "?x, ?y <- path(?x, ?y)"
+        edges = np.asarray(dataset["edge"])
+
+        def oracle():
+            mat = flat_seminaive(program, inc.explicit)
+            return rows_set(mat.get("path", np.zeros((0, 2), np.int64)))
+
+        pinned: list = []  # (lease, expected path set at pin time)
+        try:
+            for op in ops:
+                if op[0] == "apply":
+                    _, i, delete = op
+                    batch = {"edge": edges[i % len(edges): i % len(edges) + 1]}
+                    if delete:
+                        tier.apply_sync(deletions=batch)
+                    else:
+                        tier.apply_sync(additions=batch)
+                elif op[0] == "pin":
+                    pinned.append((tier.pin(), oracle()))
+                elif op[0] == "unpin" and pinned:
+                    lease, _ = pinned.pop(op[1] % len(pinned))
+                    lease.release()
+                elif op[0] == "query_pinned" and pinned:
+                    lease, want = pinned[op[1] % len(pinned)]
+                    got = rows_set(lease.answer(query).answers)
+                    assert got == want, "pinned view drifted"
+                elif op[0] == "query_current":
+                    got = rows_set(tier.answer(query).answers)
+                    assert got == oracle(), "current view stale"
+                # standing invariants after every op
+                for lease, _ in pinned:
+                    assert not lease._lease._entry.retired, (
+                        "entry retired while pinned"
+                    )
+                assert tier.registry.n_live() >= 1
+        finally:
+            for lease, _ in pinned:
+                lease.release()
+            tier.close()
+        # every non-current epoch drained: only the current entry lives
+        assert tier.registry.n_live() == 1
+        assert tier.registry.n_pinned() == 0
